@@ -1,0 +1,107 @@
+"""Beyond-paper benchmarks: the CannyFS engine integrated into the training
+framework's I/O paths (checkpoint stall, staged data, metrics stream)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.checkpoint import TransactionalCheckpointManager
+from repro.core import CannyFS, EagerFlags
+
+from .workloads import bench_scale, make_remote_backend
+
+
+def _fake_state(mb: float) -> dict:
+    n = int(mb * 1024 * 1024 / 4)
+    rng = np.random.default_rng(0)
+    return {"params": {"w": rng.standard_normal(n // 2).astype(np.float32),
+                       "u": rng.standard_normal(n // 2).astype(np.float32)},
+            "step": np.asarray(1, np.int32)}
+
+
+def checkpoint_stall(state_mb: float = 64.0, steps: int = 8,
+                     step_time_s: float = 0.15) -> list:
+    """Train-loop stall per checkpoint: synchronous vs transactional-async.
+
+    A fake train loop 'computes' for step_time_s per step and checkpoints
+    every other step; measured is total wall time and per-save stall."""
+    state_mb *= max(bench_scale(), 0.1)
+    state = _fake_state(state_mb)
+    rows = []
+    for mode in ("transactional", "sync"):
+        remote = make_remote_backend(load=2.0, seed=5, jitter=0.0)
+        if mode == "transactional":
+            fs = CannyFS(remote, max_inflight=4000, workers=64)
+        else:
+            fs = CannyFS(remote, flags=EagerFlags.all_off(), workers=2)
+        mgr = TransactionalCheckpointManager(fs, "ckpt", keep=2)
+        stalls = []
+        t0 = time.monotonic()
+        for s in range(steps):
+            time.sleep(step_time_s)           # the 'compute'
+            if s % 2 == 1:
+                ts = time.monotonic()
+                mgr.save(s, state, block=(mode == "sync"))
+                stalls.append(time.monotonic() - ts)
+        mgr.wait_for_save()
+        total = time.monotonic() - t0
+        fs.close()
+        n_saves = len(stalls)
+        rows.append((f"ckpt_stall/{mode}",
+                     f"{np.mean(stalls) * 1e6:.0f}",
+                     f"stall_per_save={np.mean(stalls):.3f}s;"
+                     f"total={total:.2f}s;saves={n_saves};"
+                     f"state_mb={state_mb:.0f}"))
+    return rows
+
+
+def metrics_stream(n: int = 2000) -> list:
+    """Append-only metrics stream through the eager engine vs sync."""
+    from repro.train.metrics import MetricsWriter
+    n = max(int(n * bench_scale()), 100)
+    rows = []
+    for mode in ("cannyfs", "direct"):
+        remote = make_remote_backend(load=1.0, seed=9, jitter=0.0)
+        flags = EagerFlags() if mode == "cannyfs" else EagerFlags.all_off()
+        fs = CannyFS(remote, flags=flags, max_inflight=4000, workers=16)
+        w = MetricsWriter(fs)
+        t0 = time.monotonic()
+        for i in range(n):
+            w.write(i, {"loss": 1.0 / (i + 1), "lr": 3e-4})
+        t_ack = time.monotonic() - t0
+        w.close()
+        fs.close()
+        t_total = time.monotonic() - t0
+        rows.append((f"metrics/{mode}", f"{t_ack / n * 1e6:.0f}",
+                     f"ack_total={t_ack:.2f}s;durable_total={t_total:.2f}s;"
+                     f"n={n}"))
+    return rows
+
+
+def staged_data_read(n_shards: int = 20) -> list:
+    """Shard-sweep read with readdir prefetch vs sync stat+read."""
+    from repro.core import InMemoryBackend
+    n_shards = max(int(n_shards * bench_scale()), 4)
+    payload = np.random.default_rng(2).bytes(256 * 1024)
+    rows = []
+    for mode in ("cannyfs", "direct"):
+        remote = make_remote_backend(load=1.0, seed=13, jitter=0.0)
+        inner = remote.inner
+        inner.mkdir("shards")
+        for i in range(n_shards):
+            inner.create(f"shards/s{i:04d}.bin")
+            inner.write_at(f"shards/s{i:04d}.bin", 0, payload)
+        flags = EagerFlags() if mode == "cannyfs" else EagerFlags.all_off()
+        fs = CannyFS(remote, flags=flags, max_inflight=4000, workers=32)
+        t0 = time.monotonic()
+        total = 0
+        for name in fs.readdir("shards"):
+            st = fs.stat(f"shards/{name}")   # prefetched in cannyfs mode
+            total += st.size
+            fs.read_file(f"shards/{name}")
+        t = time.monotonic() - t0
+        fs.close()
+        rows.append((f"staged_read/{mode}", f"{t / n_shards * 1e6:.0f}",
+                     f"total={t:.2f}s;shards={n_shards};bytes={total}"))
+    return rows

@@ -1,0 +1,175 @@
+"""Paper-table reproductions (Table 1, Figs 2–4) + engine ablations.
+
+Each function returns a list of CSV rows (name, us_per_call, derived).
+Timing is real wall-clock against the latency-injected remote backend.
+"""
+from __future__ import annotations
+
+import statistics as st
+
+import numpy as np
+
+from repro.core import CannyFS, EagerFlags, InMemoryBackend
+
+from .workloads import (TreeSpec, bench_scale, make_remote_backend,
+                        run_extraction, run_removal, synth_tree, extract_tree)
+
+
+def _summary(name: str, times: list[float], baseline: float | None = None):
+    mean = st.mean(times)
+    med = st.median(times)
+    mx = max(times)
+    mn = min(times)
+    derived = (f"mean={mean:.2f}s;median={med:.2f}s;min={mn:.2f}s;"
+               f"max={mx:.2f}s")
+    if baseline:
+        derived += f";reduction={100 * (1 - mean / baseline):.1f}%"
+    return (name, f"{mean * 1e6:.0f}", derived)
+
+
+def table1_extraction(replicates: int = 3, loads=(1.0, 4.0)) -> list:
+    """Archive extraction, 3 modes (paper Table 1 row 1 / Fig 2).
+
+    Replicates are interleaved across modes (as in the paper) with a fresh
+    latency seed per replicate so all modes see the same 'cluster load'."""
+    spec = TreeSpec().scaled()
+    dirs, files = synth_tree(spec)
+    rows = []
+    for load in loads:
+        times = {m: [] for m in ("cannyfs", "direct", "staging")}
+        for r in range(replicates):
+            for mode in times:
+                times[mode].append(
+                    run_extraction(mode, dirs, files, load=load, seed=r))
+        base = st.mean(times["direct"])
+        for mode in ("cannyfs", "direct", "staging"):
+            rows.append(_summary(
+                f"extraction/{mode}/load{load:g}", times[mode],
+                baseline=None if mode == "direct" else base))
+    return rows
+
+
+def table1_removal(replicates: int = 3, loads=(1.0, 4.0)) -> list:
+    """Directory-tree removal, 2 modes (paper Table 1 row 2 / Figs 3–4)."""
+    spec = TreeSpec().scaled()
+    dirs, files = synth_tree(spec)
+    rows = []
+    for load in loads:
+        times = {m: [] for m in ("cannyfs", "direct")}
+        for r in range(replicates):
+            for mode in times:
+                times[mode].append(
+                    run_removal(mode, dirs, files, load=load, seed=100 + r))
+        base = st.mean(times["direct"])
+        rows.append(_summary(f"removal/cannyfs/load{load:g}",
+                             times["cannyfs"], baseline=base))
+        rows.append(_summary(f"removal/direct/load{load:g}",
+                             times["direct"]))
+    return rows
+
+
+def flag_ablation() -> list:
+    """Per-op eagerness flags (paper §2: ~20 individual flags)."""
+    spec = TreeSpec(n_files=200, n_dirs=20).scaled()
+    dirs, files = synth_tree(spec)
+    cases = {
+        "all_on": EagerFlags(),
+        "no_write": EagerFlags(write=False),
+        "no_create": EagerFlags(create=False),
+        "no_mkdir": EagerFlags(mkdir=False),
+        "no_metadata": EagerFlags(chmod=False, utimens=False),
+        "all_off": EagerFlags.all_off(),
+    }
+    rows = []
+    base = None
+    for name, flags in cases.items():
+        remote = make_remote_backend(load=1.0, seed=7, jitter=0.0)
+        import time
+        t0 = time.monotonic()
+        fs = CannyFS(remote, flags=flags, max_inflight=4000, workers=64)
+        extract_tree(fs, dirs, files)
+        fs.close()
+        t = time.monotonic() - t0
+        if name == "all_off":
+            base = t
+        rows.append((f"flags/{name}", f"{t * 1e6:.0f}", f"time={t:.2f}s"))
+    # annotate reductions vs all_off
+    rows = [(n, us, f"{d};reduction_vs_sync="
+             f"{100 * (1 - float(us) / (base * 1e6)):.1f}%")
+            for (n, us, d) in rows]
+    return rows
+
+
+def budget_sweep() -> list:
+    """max_inflight budget (paper: default 300, benchmark 4000)."""
+    spec = TreeSpec(n_files=300, n_dirs=24).scaled()
+    dirs, files = synth_tree(spec)
+    rows = []
+    for budget in (1, 16, 100, 300, 4000):
+        import time
+        t0 = time.monotonic()
+        fs = CannyFS(make_remote_backend(load=1.0, seed=3, jitter=0.0),
+                     max_inflight=budget, workers=64)
+        extract_tree(fs, dirs, files)
+        fs.close()
+        t = time.monotonic() - t0
+        rows.append((f"budget/{budget}", f"{t * 1e6:.0f}",
+                     f"time={t:.2f}s;max_queue="
+                     f"{fs.engine.stats.max_queue_depth}"))
+    return rows
+
+
+def executor_modes() -> list:
+    """pool (our worker recycling) vs thread_per_op (the paper's
+    implementation; §5.1 lists thread churn as its main overhead)."""
+    spec = TreeSpec(n_files=300, n_dirs=24).scaled()
+    dirs, files = synth_tree(spec)
+    rows = []
+    for ex in ("pool", "thread_per_op"):
+        ts = []
+        for r in range(3):
+            ts.append(run_extraction("cannyfs", dirs, files, load=1.0,
+                                     seed=50 + r, executor=ex))
+        rows.append(_summary(f"executor/{ex}", ts))
+    return rows
+
+
+def rw_switch() -> list:
+    """Read-after-write barrier cost (paper §5.1: unzip's symlink handling
+    writes a file then immediately reads it back)."""
+    import time
+    rows = []
+    for mode, flags in (("cannyfs", EagerFlags()),
+                        ("direct", EagerFlags.all_off())):
+        remote = make_remote_backend(load=1.0, seed=11, jitter=0.0)
+        fs = CannyFS(remote, flags=flags, max_inflight=4000, workers=64)
+        fs.makedirs("links")
+        n = max(int(40 * bench_scale()), 8)
+        t0 = time.monotonic()
+        for i in range(n):
+            p = f"links/target_{i}"
+            fs.write_file(p, b"payload-%d" % i)
+            got = fs.read_file(p)          # forces the per-path barrier
+            assert got == b"payload-%d" % i
+            fs.symlink(f"target_{i}", f"links/link_{i}")
+        fs.close()
+        t = time.monotonic() - t0
+        rows.append((f"rw_switch/{mode}", f"{t / n * 1e6:.0f}",
+                     f"total={t:.2f}s;n={n}"))
+    return rows
+
+
+def variance_under_load(replicates: int = 6) -> list:
+    """Fig 2/4's variance story: time spread under jittery load."""
+    spec = TreeSpec(n_files=250, n_dirs=20).scaled()
+    dirs, files = synth_tree(spec)
+    rows = []
+    for mode in ("cannyfs", "direct"):
+        ts = [run_extraction(mode, dirs, files, load=float(np.random.default_rng(r).uniform(1, 6)),
+                             seed=200 + r)
+              for r in range(replicates)]
+        import statistics as st
+        rows.append((f"variance/{mode}", f"{st.mean(ts) * 1e6:.0f}",
+                     f"mean={st.mean(ts):.2f}s;stdev={st.stdev(ts):.2f}s;"
+                     f"max={max(ts):.2f}s;min={min(ts):.2f}s"))
+    return rows

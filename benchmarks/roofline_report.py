@@ -1,0 +1,113 @@
+"""Render EXPERIMENTS.md §Roofline / §Perf tables from the dry-run and
+hillclimb JSON records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--md]
+"""
+import argparse
+import glob
+import json
+from pathlib import Path
+
+
+def load(pattern):
+    out = []
+    for p in sorted(glob.glob(pattern)):
+        try:
+            out.append(json.load(open(p)))
+        except json.JSONDecodeError:
+            pass
+    return out
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def roofline_table(recs, md=False):
+    rows = []
+    hdr = ["arch", "shape", "mesh", "bottleneck", "compute_ms", "memory_ms",
+           "coll_ms", "useful", "MFU-proxy", "peak_mem/dev", "status"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            rows.append([r["arch"], r["shape"], r["mesh"], "—", "", "", "",
+                         "", "", "", f"skip: {r['reason']}"])
+            continue
+        if r["status"] != "ok":
+            rows.append([r["arch"], r["shape"], r["mesh"], "—", "", "", "",
+                         "", "", "", "FAILED"])
+            continue
+        mem = r.get("memory_analysis", {})
+        peak = mem.get("temp_size_in_bytes", 0) + \
+            mem.get("argument_size_in_bytes", 0)
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], r["bottleneck"],
+            f"{r['compute_s'] * 1e3:.1f}", f"{r['memory_s'] * 1e3:.1f}",
+            f"{r['collective_s'] * 1e3:.1f}",
+            f"{r['useful_flops_ratio']:.2f}",
+            f"{r['roofline_fraction']:.3f}", fmt_bytes(peak), "ok"])
+    if md:
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        out += ["| " + " | ".join(str(c) for c in row) + " |"
+                for row in rows]
+        return "\n".join(out)
+    w = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    lines = ["  ".join(str(h).ljust(w[i]) for i, h in enumerate(hdr))]
+    lines += ["  ".join(str(c).ljust(w[i]) for i, c in enumerate(row))
+              for row in rows]
+    return "\n".join(lines)
+
+
+def perf_table(base_recs, perf_recs, md=False):
+    base = {(r["arch"], r["shape"]): r for r in base_recs
+            if r.get("status") == "ok" and r["mesh"] == "16x16"}
+    lines = []
+    for r in sorted(perf_recs, key=lambda r: (r["arch"], r["shape"])):
+        key = (r["arch"], r["shape"])
+        b = base.get(key)
+        if r.get("status") != "ok" or b is None:
+            lines.append(f"### {key[0]} × {key[1]} — {r.get('variant')}: "
+                         f"{r.get('status')} {r.get('error', '')[:200]}")
+            continue
+        def delta(field):
+            if not b[field]:
+                return "n/a"
+            return f"{(r[field] / b[field] - 1) * 100:+.1f}%"
+        lines.append(
+            f"### {key[0]} × {key[1]} — variant `{r['variant']}`\n"
+            f"*Hypothesis*: {r['hypothesis']}\n\n"
+            f"| term | baseline | variant | Δ |\n|---|---|---|---|\n"
+            f"| compute_s | {b['compute_s'] * 1e3:.1f}ms | "
+            f"{r['compute_s'] * 1e3:.1f}ms | {delta('compute_s')} |\n"
+            f"| memory_s | {b['memory_s'] * 1e3:.1f}ms | "
+            f"{r['memory_s'] * 1e3:.1f}ms | {delta('memory_s')} |\n"
+            f"| collective_s | {b['collective_s'] * 1e3:.1f}ms | "
+            f"{r['collective_s'] * 1e3:.1f}ms | {delta('collective_s')} |\n"
+            f"| useful_flops | {b['useful_flops_ratio']:.2f} | "
+            f"{r['useful_flops_ratio']:.2f} | — |\n"
+            f"| step est (max-term) | {b['step_time_s'] * 1e3:.1f}ms | "
+            f"{r['step_time_s'] * 1e3:.1f}ms | {delta('step_time_s')} |\n")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--dryrun-dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--perf-dir", default="benchmarks/results/perf")
+    args = ap.parse_args()
+    base = load(f"{args.dryrun_dir}/*.json")
+    print("## Roofline (single-pod 16x16, unrolled lowering)\n")
+    print(roofline_table(base, md=args.md))
+    perf = load(f"{args.perf_dir}/*.json")
+    if perf:
+        print("\n\n## Perf variants\n")
+        print(perf_table(base, perf, md=args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness — one function per paper table/figure + the
+beyond-paper training-I/O integration tables.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).  Scale the
+whole suite with REPRO_BENCH_SCALE (default 1.0; CI uses ~0.3).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only table1_extraction
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _tables():
+    from . import io_training, paper_tables
+    return {
+        # paper reproductions
+        "table1_extraction": paper_tables.table1_extraction,
+        "table1_removal": paper_tables.table1_removal,
+        "fig24_variance": paper_tables.variance_under_load,
+        "flag_ablation": paper_tables.flag_ablation,
+        "budget_sweep": paper_tables.budget_sweep,
+        "executor_modes": paper_tables.executor_modes,
+        "rw_switch": paper_tables.rw_switch,
+        # beyond-paper: the engine inside the training framework
+        "checkpoint_stall": io_training.checkpoint_stall,
+        "metrics_stream": io_training.metrics_stream,
+        "staged_data_read": io_training.staged_data_read,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    tables = _tables()
+    names = args.only or list(tables)
+    print("name,us_per_call,derived")
+    t0 = time.monotonic()
+    for name in names:
+        fn = tables[name]
+        try:
+            rows = fn()
+        except Exception as e:  # keep the suite running
+            print(f"{name}/ERROR,0,{e!r}")
+            continue
+        for row in rows:
+            print(",".join(str(c) for c in row))
+        sys.stdout.flush()
+    print(f"# total_bench_wall_s={time.monotonic() - t0:.1f}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Inject the generated roofline/perf tables into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> / <!-- PERF_TABLE --> markers).
+
+    PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+from pathlib import Path
+
+from .roofline_report import load, perf_table, roofline_table
+
+EXP = Path("EXPERIMENTS.md")
+
+
+def main():
+    base = load("benchmarks/results/dryrun/*.json")
+    scanned = load("benchmarks/results/dryrun_scanned/*.json")
+    perf = load("benchmarks/results/perf/*.json")
+    text = EXP.read_text()
+
+    table = roofline_table(base, md=True) if base else "(no records)"
+    n_ok = sum(1 for r in base if r.get("status") == "ok")
+    n_sk = sum(1 for r in base if r.get("status") == "skipped")
+    caption = (f"\n{n_ok} cells analysed (+{n_sk} recorded skips), "
+               "unrolled lowering, single-pod.  The scanned production "
+               f"lowering additionally compiles "
+               f"{sum(1 for r in scanned if r.get('status') == 'ok')} cells "
+               "across both meshes (dryrun_scanned/).\n")
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        text = text.replace(marker, marker + "\n" + caption + "\n" + table)
+    ptable = perf_table(base, perf, md=True) if perf else ""
+    pmarker = "<!-- PERF_TABLE -->"
+    if pmarker in text and ptable:
+        text = text.replace(pmarker, pmarker + "\n\n" + ptable)
+    EXP.write_text(text)
+    print(f"updated EXPERIMENTS.md: {n_ok} roofline rows, "
+          f"{len(perf)} perf variants")
+
+
+if __name__ == "__main__":
+    main()

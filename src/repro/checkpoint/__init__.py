@@ -1,0 +1,5 @@
+from .manager import (COMMIT_FILE, MANIFEST_FILE, SaveResult,
+                      TransactionalCheckpointManager)
+
+__all__ = ["COMMIT_FILE", "MANIFEST_FILE", "SaveResult",
+           "TransactionalCheckpointManager"]

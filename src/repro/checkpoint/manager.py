@@ -1,0 +1,191 @@
+"""Transactional checkpointing on the CannyFS engine — the paper's
+technique as a first-class training feature.
+
+Timeline of one save (the CannyFS mapping):
+
+    train loop:  save(step, state)         <- returns after device→host copy
+       engine:   [manifest + leaf writes eagerly ACKed, running in
+                  background per-path queues while the next train steps run]
+    finalizer:   drain() -> ledger clean? -> write COMMIT marker
+                 (the transaction commit; a checkpoint without COMMIT is
+                  invisible to restore and rolled back on startup)
+
+Failure model = the paper's: any deferred I/O error means the whole
+checkpoint transaction is discarded (rolled back) and retried at the next
+save interval; the job itself restarts from the last *committed*
+checkpoint.  Restore accepts a different mesh/device count
+(reshard-on-restore → elastic scaling).
+"""
+from __future__ import annotations
+
+import io
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import CannyFS, norm_path
+from repro.core.errors import TransactionFailedError
+
+from .serialization import (flatten_for_save, manifest_bytes, parse_manifest,
+                            unflatten_from)
+
+COMMIT_FILE = "COMMIT"
+MANIFEST_FILE = "manifest.json"
+
+
+@dataclass
+class SaveResult:
+    step: int
+    directory: str
+    ok: bool = False
+    error: Optional[str] = None
+    ack_s: float = 0.0        # time the train loop was blocked
+    commit_s: float = 0.0     # background time to durable commit
+    bytes: int = 0
+
+
+class TransactionalCheckpointManager:
+    def __init__(self, fs: CannyFS, directory: str = "ckpt", *,
+                 keep: int = 3):
+        self.fs = fs
+        self.dir = norm_path(directory)
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._finalizer: Optional[threading.Thread] = None
+        self._results: list[SaveResult] = []
+        if not fs.exists(self.dir):
+            fs.makedirs(self.dir)
+        self.rollback_uncommitted()
+
+    # ------------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return f"{self.dir}/step_{step:010d}"
+
+    def list_steps(self, *, committed_only: bool = True) -> list[int]:
+        steps = []
+        for name in self.fs.readdir(self.dir):
+            if not name.startswith("step_"):
+                continue
+            try:
+                step = int(name.split("_", 1)[1])
+            except ValueError:
+                continue
+            if committed_only and not self.fs.exists(
+                    f"{self.dir}/{name}/{COMMIT_FILE}"):
+                continue
+            steps.append(step)
+        return sorted(steps)
+
+    def rollback_uncommitted(self) -> list[int]:
+        """Startup recovery: delete any checkpoint without a COMMIT marker
+        (the paper's 'roll back the failed transaction')."""
+        rolled = []
+        committed = set(self.list_steps(committed_only=True))
+        for step in self.list_steps(committed_only=False):
+            if step not in committed:
+                self.fs.rmtree(self._step_dir(step))
+                rolled.append(step)
+        if rolled:
+            self.fs.drain()
+        return rolled
+
+    # ------------------------------------------------------------------
+
+    def save(self, step: int, state: Any, *, block: bool = False) -> SaveResult:
+        """Eagerly-ACKed checkpoint save.  Returns as soon as all writes are
+        queued (device→host copy included); a background finalizer commits.
+        """
+        self.wait_for_save()          # one in-flight checkpoint at a time
+        t0 = time.monotonic()
+        d = self._step_dir(step)
+        res = SaveResult(step=step, directory=d)
+        manifest, leaves = flatten_for_save(state)
+
+        self.fs.makedirs(d)
+        total = 0
+        self.fs.write_file(f"{d}/{MANIFEST_FILE}", manifest_bytes(manifest))
+        ledger_start = len(self.fs.ledger)
+        for key, arr in leaves:
+            fname = key.replace("/", "__") + ".bin"
+            self.fs.write_file(f"{d}/{fname}", arr.tobytes())
+            total += arr.nbytes
+        res.bytes = total
+        res.ack_s = time.monotonic() - t0
+
+        def finalize():
+            self.fs.drain()
+            errs = self.fs.ledger.entries()[ledger_start:]
+            if errs:
+                # transaction failed -> roll back this checkpoint
+                try:
+                    self.fs.rmtree(d)
+                    self.fs.drain()
+                except OSError:
+                    pass
+                res.ok = False
+                res.error = "; ".join(str(e) for e in errs[:4])
+            else:
+                self.fs.write_file(f"{d}/{COMMIT_FILE}",
+                                   str(step).encode())
+                self.fs.engine.barrier(f"{d}/{COMMIT_FILE}")
+                res.ok = True
+                self._gc()
+            res.commit_s = time.monotonic() - t0
+            with self._lock:
+                self._results.append(res)
+
+        if block:
+            finalize()
+        else:
+            self._finalizer = threading.Thread(target=finalize, daemon=True,
+                                               name=f"ckpt-commit-{step}")
+            self._finalizer.start()
+        return res
+
+    def wait_for_save(self) -> None:
+        t = self._finalizer
+        if t is not None:
+            t.join()
+            self._finalizer = None
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for step in steps[:-self.keep] if self.keep else []:
+            self.fs.rmtree(self._step_dir(step))
+
+    @property
+    def results(self) -> list[SaveResult]:
+        with self._lock:
+            return list(self._results)
+
+    # ------------------------------------------------------------------
+
+    def restore(self, like: Any, *, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[int, Any]:
+        """Restore the latest (or given) committed checkpoint into the
+        structure of ``like``.  ``shardings`` (a matching pytree of
+        NamedSharding) reshards on restore — the saved artifact is
+        mesh-agnostic, so restoring onto a different mesh/host count is the
+        elastic-scaling path."""
+        self.wait_for_save()
+        steps = self.list_steps()
+        if not steps:
+            raise FileNotFoundError("no committed checkpoint found")
+        step = steps[-1] if step is None else step
+        d = self._step_dir(step)
+        manifest = parse_manifest(self.fs.read_file(f"{d}/{MANIFEST_FILE}"))
+        blobs: dict[str, bytes] = {}
+        for key in manifest["leaves"]:
+            fname = key.replace("/", "__") + ".bin"
+            blobs[key] = self.fs.read_file(f"{d}/{fname}")
+        tree = unflatten_from(manifest, blobs, like)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
+        return step, tree

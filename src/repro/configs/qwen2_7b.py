@@ -1,0 +1,32 @@
+"""Qwen2-7B [arXiv:2407.10671; hf].
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064; QKV bias.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    block_pattern=("attn",),
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-7b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=128,
+    block_pattern=("attn",),
+    qkv_bias=True,
+)

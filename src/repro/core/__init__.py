@@ -1,0 +1,28 @@
+"""repro.core — CannyFS: the paper's transactional eager-I/O engine.
+
+Public API:
+
+    backend  = LocalBackend(root) | InMemoryBackend() | LatencyBackend(...)
+    fs       = CannyFS(backend, flags=EagerFlags(), max_inflight=4000)
+    with Transaction(fs) as txn:
+        fs.mkdir("out"); fs.write_file("out/x.bin", b"...")
+    # txn.commit() ran at exit; on deferred error -> rollback + retry via
+    # run_transaction(fs, body)
+"""
+from .backend import (InMemoryBackend, LatencyBackend, LatencyModel,
+                      LocalBackend, StatResult, StorageBackend, norm_path,
+                      parent_of)
+from .engine import EagerIOEngine, EngineStats
+from .errors import (CannyError, EnginePoisonedError, ErrorLedger,
+                     LedgerEntry, OpCancelledError, TransactionFailedError)
+from .flags import EagerFlags, N_FLAGS
+from .fs import CannyFS, CannyFile
+from .transaction import Transaction, run_transaction
+
+__all__ = [
+    "CannyError", "CannyFS", "CannyFile", "EagerFlags", "EagerIOEngine",
+    "EngineStats", "EnginePoisonedError", "ErrorLedger", "InMemoryBackend",
+    "LatencyBackend", "LatencyModel", "LedgerEntry", "LocalBackend", "N_FLAGS",
+    "OpCancelledError", "StatResult", "StorageBackend", "Transaction",
+    "TransactionFailedError", "norm_path", "parent_of", "run_transaction",
+]

@@ -1,0 +1,490 @@
+"""Storage backends.
+
+The engine interposes at the API level (the in-container analogue of the
+paper's FUSE layer) and talks to a pluggable ``StorageBackend``:
+
+* ``LocalBackend``   — a rooted local directory (the "fast" medium).
+* ``InMemoryBackend``— dict-based filesystem; the property-test oracle.
+* ``LatencyBackend`` — decorator injecting per-op latency + a bandwidth cap
+  + bounded server concurrency, calibrated to the paper's NFS-over-GbE
+  environment.  This is what the paper benchmarks run against.
+"""
+from __future__ import annotations
+
+import io
+import os
+import posixpath
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Iterable
+
+
+def norm_path(path: str) -> str:
+    """Normalize to a rooted-relative posix path ('' is the root)."""
+    p = posixpath.normpath("/" + str(path).replace("\\", "/")).lstrip("/")
+    return "" if p == "." else p
+
+
+def parent_of(path: str) -> str:
+    p = norm_path(path)
+    if not p:
+        return ""
+    head = posixpath.dirname(p)
+    return head
+
+
+@dataclass(frozen=True)
+class StatResult:
+    exists: bool
+    is_dir: bool = False
+    is_symlink: bool = False
+    size: int = 0
+    mtime: float = 0.0
+    mode: int = 0o644
+    mocked: bool = False  # answered from the write-through cache
+
+
+class StorageBackend:
+    """Synchronous primitive I/O operations (one per eagerness flag)."""
+
+    # --- namespace ---
+    def mkdir(self, path: str) -> None: raise NotImplementedError
+    def rmdir(self, path: str) -> None: raise NotImplementedError
+    def create(self, path: str) -> None: raise NotImplementedError
+    def unlink(self, path: str) -> None: raise NotImplementedError
+    def rename(self, src: str, dst: str) -> None: raise NotImplementedError
+    def symlink(self, target: str, path: str) -> None: raise NotImplementedError
+    def link(self, src: str, dst: str) -> None: raise NotImplementedError
+    def readlink(self, path: str) -> str: raise NotImplementedError
+    # --- data ---
+    def write_at(self, path: str, offset: int, data: bytes) -> int: raise NotImplementedError
+    def read_at(self, path: str, offset: int, size: int) -> bytes: raise NotImplementedError
+    def truncate(self, path: str, size: int) -> None: raise NotImplementedError
+    def fallocate(self, path: str, size: int) -> None: raise NotImplementedError
+    def fsync(self, path: str) -> None: raise NotImplementedError
+    # --- metadata ---
+    def chmod(self, path: str, mode: int) -> None: raise NotImplementedError
+    def chown(self, path: str, uid: int, gid: int) -> None: raise NotImplementedError
+    def utimens(self, path: str, atime: float, mtime: float) -> None: raise NotImplementedError
+    def setxattr(self, path: str, key: str, value: bytes) -> None: raise NotImplementedError
+    def removexattr(self, path: str, key: str) -> None: raise NotImplementedError
+    def stat(self, path: str) -> StatResult: raise NotImplementedError
+    def readdir(self, path: str) -> list[str]: raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+
+
+class LocalBackend(StorageBackend):
+    """Rooted local-directory backend (mirrors the host FS like the paper's
+    fusexmp-derived passthrough)."""
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _abs(self, path: str) -> str:
+        p = norm_path(path)
+        out = os.path.join(self.root, p) if p else self.root
+        # containment check — the mount must not escape its root
+        if not os.path.abspath(out).startswith(self.root):
+            raise PermissionError(f"path escapes mount root: {path}")
+        return out
+
+    def mkdir(self, path): os.mkdir(self._abs(path))
+    def rmdir(self, path): os.rmdir(self._abs(path))
+
+    def create(self, path):
+        fd = os.open(self._abs(path), os.O_CREAT | os.O_WRONLY | os.O_TRUNC, 0o644)
+        os.close(fd)
+
+    def unlink(self, path): os.unlink(self._abs(path))
+    def rename(self, src, dst): os.rename(self._abs(src), self._abs(dst))
+    def symlink(self, target, path): os.symlink(target, self._abs(path))
+    def link(self, src, dst): os.link(self._abs(src), self._abs(dst))
+    def readlink(self, path): return os.readlink(self._abs(path))
+
+    def write_at(self, path, offset, data):
+        fd = os.open(self._abs(path), os.O_CREAT | os.O_WRONLY, 0o644)
+        try:
+            os.lseek(fd, offset, os.SEEK_SET)
+            return os.write(fd, data)
+        finally:
+            os.close(fd)
+
+    def read_at(self, path, offset, size):
+        fd = os.open(self._abs(path), os.O_RDONLY)
+        try:
+            os.lseek(fd, offset, os.SEEK_SET)
+            if size < 0:
+                chunks = []
+                while True:
+                    c = os.read(fd, 1 << 20)
+                    if not c:
+                        break
+                    chunks.append(c)
+                return b"".join(chunks)
+            return os.read(fd, size)
+        finally:
+            os.close(fd)
+
+    def truncate(self, path, size):
+        with open(self._abs(path), "r+b") as f:
+            f.truncate(size)
+
+    def fallocate(self, path, size):
+        with open(self._abs(path), "ab") as f:
+            f.truncate(max(size, os.fstat(f.fileno()).st_size))
+
+    def fsync(self, path):
+        fd = os.open(self._abs(path), os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def chmod(self, path, mode): os.chmod(self._abs(path), mode)
+
+    def chown(self, path, uid, gid):  # no-op off-root; permission-free CI
+        pass
+
+    def utimens(self, path, atime, mtime):
+        os.utime(self._abs(path), (atime, mtime))
+
+    def setxattr(self, path, key, value):
+        try:
+            os.setxattr(self._abs(path), f"user.{key}", value)
+        except OSError:
+            pass  # xattrs unsupported on some mounts — metadata-only op
+
+    def removexattr(self, path, key):
+        try:
+            os.removexattr(self._abs(path), f"user.{key}")
+        except OSError:
+            pass
+
+    def stat(self, path):
+        try:
+            st = os.lstat(self._abs(path))
+        except FileNotFoundError:
+            return StatResult(exists=False)
+        import stat as stat_mod
+        return StatResult(
+            exists=True,
+            is_dir=stat_mod.S_ISDIR(st.st_mode),
+            is_symlink=stat_mod.S_ISLNK(st.st_mode),
+            size=st.st_size,
+            mtime=st.st_mtime,
+            mode=stat_mod.S_IMODE(st.st_mode),
+        )
+
+    def readdir(self, path):
+        return sorted(os.listdir(self._abs(path)))
+
+
+# ---------------------------------------------------------------------------
+
+
+class InMemoryBackend(StorageBackend):
+    """Dict filesystem — the sequential oracle for property tests, and a
+    zero-latency medium for engine micro-benchmarks.
+
+    All methods raise the same OSErrors a POSIX fs would for the cases the
+    engine/test-suite cares about (missing parent, missing file, non-empty
+    rmdir)."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._files: dict[str, bytearray] = {}
+        self._dirs: set[str] = {""}
+        self._symlinks: dict[str, str] = {}
+        self._meta: dict[str, dict] = {}
+
+    # -- helpers --
+    def _check_parent(self, path: str) -> None:
+        par = parent_of(path)
+        if par not in self._dirs:
+            raise FileNotFoundError(f"no such directory: {par!r}")
+
+    def _exists(self, path: str) -> bool:
+        return path in self._files or path in self._dirs or path in self._symlinks
+
+    def snapshot(self) -> dict:
+        """Full state (for oracle comparison)."""
+        with self._lock:
+            return {
+                "files": {k: bytes(v) for k, v in self._files.items()},
+                "dirs": set(self._dirs),
+                "symlinks": dict(self._symlinks),
+            }
+
+    # -- namespace --
+    def mkdir(self, path):
+        with self._lock:
+            path = norm_path(path)
+            self._check_parent(path)
+            if self._exists(path):
+                raise FileExistsError(path)
+            self._dirs.add(path)
+
+    def rmdir(self, path):
+        with self._lock:
+            path = norm_path(path)
+            if path not in self._dirs:
+                raise FileNotFoundError(path)
+            if any(parent_of(p) == path for p in
+                   list(self._files) + list(self._dirs - {path}) + list(self._symlinks)):
+                raise OSError(39, "directory not empty", path)
+            self._dirs.discard(path)
+
+    def create(self, path):
+        with self._lock:
+            path = norm_path(path)
+            self._check_parent(path)
+            if path in self._dirs:
+                raise IsADirectoryError(path)
+            self._files[path] = bytearray()
+
+    def unlink(self, path):
+        with self._lock:
+            path = norm_path(path)
+            if path in self._symlinks:
+                del self._symlinks[path]
+            elif path in self._files:
+                del self._files[path]
+            else:
+                raise FileNotFoundError(path)
+
+    def rename(self, src, dst):
+        with self._lock:
+            src, dst = norm_path(src), norm_path(dst)
+            if not self._exists(src):
+                raise FileNotFoundError(src)
+            self._check_parent(dst)
+            if src in self._files:
+                self._files[dst] = self._files.pop(src)
+            elif src in self._symlinks:
+                self._symlinks[dst] = self._symlinks.pop(src)
+            else:  # directory rename: move the whole subtree
+                if self._exists(dst):
+                    raise FileExistsError(dst)
+                prefix = src + "/"
+                for table in (self._files, self._symlinks):
+                    for k in [k for k in table if k == src or k.startswith(prefix)]:
+                        table[dst + k[len(src):]] = table.pop(k)
+                for d in [d for d in self._dirs if d == src or d.startswith(prefix)]:
+                    self._dirs.discard(d)
+                    self._dirs.add(dst + d[len(src):])
+
+    def symlink(self, target, path):
+        with self._lock:
+            path = norm_path(path)
+            self._check_parent(path)
+            if self._exists(path):
+                raise FileExistsError(path)
+            self._symlinks[path] = target
+
+    def link(self, src, dst):
+        with self._lock:
+            src, dst = norm_path(src), norm_path(dst)
+            if src not in self._files:
+                raise FileNotFoundError(src)
+            self._check_parent(dst)
+            self._files[dst] = self._files[src]  # shared bytearray = hardlink
+
+    def readlink(self, path):
+        with self._lock:
+            path = norm_path(path)
+            if path not in self._symlinks:
+                raise OSError(22, "not a symlink", path)
+            return self._symlinks[path]
+
+    # -- data --
+    def write_at(self, path, offset, data):
+        with self._lock:
+            path = norm_path(path)
+            if path not in self._files:
+                self._check_parent(path)
+                self._files[path] = bytearray()
+            buf = self._files[path]
+            if len(buf) < offset:
+                buf.extend(b"\0" * (offset - len(buf)))
+            buf[offset:offset + len(data)] = data
+            return len(data)
+
+    def read_at(self, path, offset, size):
+        with self._lock:
+            path = norm_path(path)
+            if path not in self._files:
+                raise FileNotFoundError(path)
+            buf = self._files[path]
+            return bytes(buf[offset:] if size < 0 else buf[offset:offset + size])
+
+    def truncate(self, path, size):
+        with self._lock:
+            path = norm_path(path)
+            if path not in self._files:
+                raise FileNotFoundError(path)
+            buf = self._files[path]
+            if len(buf) > size:
+                del buf[size:]
+            else:
+                buf.extend(b"\0" * (size - len(buf)))
+
+    def fallocate(self, path, size):
+        with self._lock:
+            path = norm_path(path)
+            if path in self._files and len(self._files[path]) < size:
+                self._files[path].extend(b"\0" * (size - len(self._files[path])))
+
+    def fsync(self, path):
+        pass
+
+    # -- metadata --
+    def _meta_set(self, path, **kw):
+        path = norm_path(path)
+        if not self._exists(path):
+            raise FileNotFoundError(path)
+        self._meta.setdefault(path, {}).update(kw)
+
+    def chmod(self, path, mode):
+        with self._lock:
+            self._meta_set(path, mode=mode)
+
+    def chown(self, path, uid, gid):
+        with self._lock:
+            self._meta_set(path, uid=uid, gid=gid)
+
+    def utimens(self, path, atime, mtime):
+        with self._lock:
+            self._meta_set(path, mtime=mtime)
+
+    def setxattr(self, path, key, value):
+        with self._lock:
+            self._meta_set(path, **{f"x:{key}": value})
+
+    def removexattr(self, path, key):
+        with self._lock:
+            path = norm_path(path)
+            self._meta.get(path, {}).pop(f"x:{key}", None)
+
+    def stat(self, path):
+        with self._lock:
+            path = norm_path(path)
+            meta = self._meta.get(path, {})
+            if path in self._dirs:
+                return StatResult(exists=True, is_dir=True,
+                                  mode=meta.get("mode", 0o755),
+                                  mtime=meta.get("mtime", 0.0))
+            if path in self._files:
+                return StatResult(exists=True, size=len(self._files[path]),
+                                  mode=meta.get("mode", 0o644),
+                                  mtime=meta.get("mtime", 0.0))
+            if path in self._symlinks:
+                return StatResult(exists=True, is_symlink=True,
+                                  size=len(self._symlinks[path]))
+            return StatResult(exists=False)
+
+    def readdir(self, path):
+        with self._lock:
+            path = norm_path(path)
+            if path not in self._dirs:
+                raise FileNotFoundError(path)
+            out = set()
+            for pool in (self._files, self._dirs, self._symlinks):
+                for k in pool:
+                    if k and parent_of(k) == path:
+                        out.add(posixpath.basename(k))
+            return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+
+
+METADATA_OPS = {
+    "mkdir", "rmdir", "create", "unlink", "rename", "symlink", "link",
+    "readlink", "truncate", "fallocate", "chmod", "chown", "utimens",
+    "setxattr", "removexattr", "stat", "readdir", "fsync",
+}
+
+
+@dataclass
+class LatencyModel:
+    """Calibrated to the paper's environment: NFSv3 over a single GbE port
+    against NAS under varying cluster load.
+
+    * per-op latency ~ lognormal(median=meta_ms, sigma=jitter_sigma)
+    * data ops additionally pay size/bandwidth
+    * the 'server' admits at most ``server_slots`` concurrent requests
+      (client RPC slot table) — overlap beyond that queues, which is what
+      bounds CannyFS's speedup to the bandwidth/concurrency roofline rather
+      than letting it look infinitely good.
+    * ``load`` scales the median (1.0 = quiet cluster; the paper's runs show
+      ~5x spread between quiet and loaded — benchmark sweeps use 1..6).
+    """
+
+    meta_ms: float = 2.0
+    data_ms: float = 2.0
+    bandwidth_mb_s: float = 110.0   # GbE payload rate
+    jitter_sigma: float = 0.45
+    server_slots: int = 64
+    load: float = 1.0
+    seed: int = 0
+
+    def latency_s(self, rng: random.Random, kind: str, nbytes: int) -> float:
+        base_ms = self.meta_ms if kind in METADATA_OPS else self.data_ms
+        lat = rng.lognormvariate(0.0, self.jitter_sigma) * base_ms * self.load / 1e3
+        if nbytes > 0:
+            lat += nbytes / (self.bandwidth_mb_s * 1e6)
+        return lat
+
+
+class LatencyBackend(StorageBackend):
+    """Decorator that makes any backend behave like remote storage."""
+
+    def __init__(self, inner: StorageBackend, model: LatencyModel | None = None):
+        self.inner = inner
+        self.model = model or LatencyModel()
+        self._rng = random.Random(self.model.seed)
+        self._rng_lock = threading.Lock()
+        self._slots = threading.Semaphore(self.model.server_slots)
+        self.op_count = 0
+        self.busy_s = 0.0  # total server-side service time (for utilization)
+
+    def _delay(self, kind: str, nbytes: int = 0):
+        with self._rng_lock:
+            lat = self.model.latency_s(self._rng, kind, nbytes)
+            self.op_count += 1
+            self.busy_s += lat
+        with self._slots:
+            time.sleep(lat)
+
+    def __getattr__(self, name):  # delegate non-op attrs
+        return getattr(self.inner, name)
+
+    # each primitive: pay the roundtrip, then do the real thing
+    def mkdir(self, path): self._delay("mkdir"); self.inner.mkdir(path)
+    def rmdir(self, path): self._delay("rmdir"); self.inner.rmdir(path)
+    def create(self, path): self._delay("create"); self.inner.create(path)
+    def unlink(self, path): self._delay("unlink"); self.inner.unlink(path)
+    def rename(self, s, d): self._delay("rename"); self.inner.rename(s, d)
+    def symlink(self, t, p): self._delay("symlink"); self.inner.symlink(t, p)
+    def link(self, s, d): self._delay("link"); self.inner.link(s, d)
+    def readlink(self, p): self._delay("readlink"); return self.inner.readlink(p)
+    def write_at(self, p, o, data):
+        self._delay("write", len(data)); return self.inner.write_at(p, o, data)
+    def read_at(self, p, o, size):
+        out = self.inner.read_at(p, o, size)
+        self._delay("read", len(out)); return out
+    def truncate(self, p, s): self._delay("truncate"); self.inner.truncate(p, s)
+    def fallocate(self, p, s): self._delay("fallocate"); self.inner.fallocate(p, s)
+    def fsync(self, p): self._delay("fsync"); self.inner.fsync(p)
+    def chmod(self, p, m): self._delay("chmod"); self.inner.chmod(p, m)
+    def chown(self, p, u, g): self._delay("chown"); self.inner.chown(p, u, g)
+    def utimens(self, p, a, m): self._delay("utimens"); self.inner.utimens(p, a, m)
+    def setxattr(self, p, k, v): self._delay("setxattr"); self.inner.setxattr(p, k, v)
+    def removexattr(self, p, k): self._delay("removexattr"); self.inner.removexattr(p, k)
+    def stat(self, p): self._delay("stat"); return self.inner.stat(p)
+    def readdir(self, p): self._delay("readdir"); return self.inner.readdir(p)

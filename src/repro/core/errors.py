@@ -1,0 +1,96 @@
+"""Error model for the transactional eager-I/O engine.
+
+The paper defers error reporting: background failures are recorded in a
+ledger, printed twice (at occurrence and at orderly teardown), and surfaced
+at the transaction boundary.  An optional abort-on-error mode poisons the
+engine so every later access fails fast.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+class CannyError(Exception):
+    """Base class for engine errors."""
+
+
+class EnginePoisonedError(CannyError):
+    """Raised on new submissions after abort_on_error tripped."""
+
+
+class OpCancelledError(CannyError):
+    """A queued op was cancelled (engine poisoned before execution)."""
+
+
+class TransactionFailedError(CannyError):
+    """Commit found deferred errors in the ledger."""
+
+    def __init__(self, entries: list["LedgerEntry"]):
+        self.entries = entries
+        lines = "; ".join(str(e) for e in entries[:8])
+        more = "" if len(entries) <= 8 else f" (+{len(entries) - 8} more)"
+        super().__init__(f"{len(entries)} deferred I/O error(s): {lines}{more}")
+
+
+@dataclass(frozen=True)
+class LedgerEntry:
+    """One deferred failure: which op, on what path(s), what went wrong."""
+
+    seq: int
+    kind: str
+    paths: tuple[str, ...]
+    error: BaseException
+    wallclock: float
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"op#{self.seq} {self.kind}({', '.join(self.paths)}): {self.error!r}"
+
+
+class ErrorLedger:
+    """Thread-safe record of deferred I/O failures.
+
+    Mirrors the paper's behaviour: every failure is printed to stderr when it
+    happens, and the full ledger is printed again at orderly teardown so the
+    user is "notified of any I/O errors that were not properly reported back
+    to the calling process".
+    """
+
+    def __init__(self, *, echo: bool = True):
+        self._lock = threading.Lock()
+        self._entries: list[LedgerEntry] = []
+        self._echo = echo
+
+    def record(self, seq: int, kind: str, paths: tuple[str, ...],
+               error: BaseException) -> LedgerEntry:
+        entry = LedgerEntry(seq=seq, kind=kind, paths=paths, error=error,
+                            wallclock=time.time())
+        with self._lock:
+            self._entries.append(entry)
+        if self._echo:
+            print(f"cannyfs: deferred error: {entry}", file=sys.stderr)
+        return entry
+
+    def entries(self) -> list[LedgerEntry]:
+        with self._lock:
+            return list(self._entries)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def report(self) -> None:
+        """Teardown-time second report (the paper's global destructor)."""
+        entries = self.entries()
+        if not entries or not self._echo:
+            return
+        print(f"cannyfs: {len(entries)} deferred I/O error(s) at teardown:",
+              file=sys.stderr)
+        for e in entries:
+            print(f"cannyfs:   {e}", file=sys.stderr)

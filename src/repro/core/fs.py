@@ -1,0 +1,363 @@
+"""CannyFS — the POSIX-ish user API over the eager engine.
+
+This is the in-process equivalent of the paper's FUSE mount: a task loops
+over `mkdir/open/write/close/...` calls exactly as it would against a kernel
+filesystem, and each call is either eagerly ACKed (background execution,
+per-path ordering, deferred errors) or executed synchronously, per the
+EagerFlags.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Iterable, Optional
+
+from .backend import StorageBackend, StatResult, norm_path, parent_of
+from .engine import EagerIOEngine
+from .errors import ErrorLedger
+from .flags import EagerFlags
+
+
+class CannyFile:
+    """Streaming file handle.
+
+    Writes are queued eagerly with a running offset; the buffer is handed to
+    the worker without copying (the user-space analogue of the paper's
+    splice-based zero-copy path — we transfer ownership of the `bytes`
+    object instead of kernel pipe pages).
+    """
+
+    def __init__(self, fs: "CannyFS", path: str, mode: str):
+        if mode not in ("wb", "rb", "ab"):
+            raise ValueError(f"mode {mode!r} not supported")
+        self.fs = fs
+        self.path = norm_path(path)
+        self.mode = mode
+        self._offset = 0
+        self._closed = False
+        if mode == "wb":
+            fs.create(self.path)
+        elif mode == "ab":
+            st = fs.stat(self.path)
+            self._offset = st.size if st.exists else 0
+            if not st.exists:
+                fs.create(self.path)
+
+    # -- write side --
+    def write(self, data: bytes) -> int:
+        if self.mode == "rb":
+            raise IOError("file opened read-only")
+        if self._closed:
+            raise ValueError("I/O on closed file")
+        data = bytes(data)  # freeze caller's view; engine takes ownership
+        off = self._offset
+        self._offset += len(data)
+        self.fs._write_at(self.path, off, data)
+        return len(data)
+
+    # -- read side --
+    def read(self, size: int = -1) -> bytes:
+        if self.mode != "rb":
+            raise IOError("file opened write-only")
+        out = self.fs.pread(self.path, self._offset, size)
+        self._offset += len(out)
+        return out
+
+    def seek(self, offset: int) -> None:
+        self._offset = int(offset)
+
+    def tell(self) -> int:
+        return self._offset
+
+    def flush(self) -> None:
+        self.fs.flush(self.path)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self.mode in ("wb", "ab"):
+            self.fs._on_close_write(self.path)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class CannyFS:
+    """The mount object.  One per 'job'; all methods are thread-safe."""
+
+    def __init__(self, backend: StorageBackend, *,
+                 flags: EagerFlags | None = None,
+                 max_inflight: int = 300,
+                 workers: int = 32,
+                 executor: str = "pool",
+                 abort_on_error: bool = False):
+        self.flags = flags or EagerFlags()
+        self.engine = EagerIOEngine(
+            backend, flags=self.flags, max_inflight=max_inflight,
+            workers=workers, executor=executor, abort_on_error=abort_on_error)
+        self.backend = backend
+        self._txn_lock = threading.Lock()
+        self._txn = None  # active Transaction (set by Transaction.__enter__)
+
+    # ------------------------------------------------------------------
+    # plumbing
+    # ------------------------------------------------------------------
+
+    def _submit(self, kind: str, paths: tuple[str, ...], fn, *,
+                cache_kw: dict | None = None):
+        eager = self.flags.is_eager(kind)
+        return self.engine.submit(kind, paths, fn, eager=eager,
+                                  cache_kw=cache_kw)
+
+    def _journal_create(self, path: str, is_dir: bool) -> None:
+        txn = self._txn
+        if txn is not None:
+            txn._record_create(norm_path(path), is_dir)
+
+    def _journal_rename(self, src: str, dst: str) -> None:
+        txn = self._txn
+        if txn is not None:
+            txn._record_rename(norm_path(src), norm_path(dst))
+
+    # ------------------------------------------------------------------
+    # namespace ops
+    # ------------------------------------------------------------------
+
+    def mkdir(self, path: str) -> None:
+        b = self.backend
+        self._journal_create(path, True)
+        self._submit("mkdir", (path,), lambda: b.mkdir(path), cache_kw={})
+
+    def makedirs(self, path: str, exist_ok: bool = True) -> None:
+        parts = norm_path(path).split("/")
+        cur = ""
+        for part in parts:
+            cur = f"{cur}/{part}" if cur else part
+            st = self.engine.stat_cache.get(cur)
+            if st is not None and st.exists:
+                continue
+            if not self.flags.mkdir and self.exists(cur):
+                continue
+            b, p = self.backend, cur
+
+            def fn(p=p):
+                try:
+                    b.mkdir(p)
+                except FileExistsError:
+                    if not exist_ok:
+                        raise
+            self._journal_create(p, True)
+            self._submit("mkdir", (p,), fn, cache_kw={})
+
+    def rmdir(self, path: str) -> None:
+        b = self.backend
+        self._submit("rmdir", (path,), lambda: b.rmdir(path), cache_kw={})
+
+    def create(self, path: str) -> None:
+        b = self.backend
+        self._journal_create(path, False)
+        self._submit("create", (path,), lambda: b.create(path), cache_kw={})
+
+    def unlink(self, path: str) -> None:
+        b = self.backend
+        self._submit("unlink", (path,), lambda: b.unlink(path), cache_kw={})
+
+    def rename(self, src: str, dst: str) -> None:
+        b = self.backend
+        self._journal_rename(src, dst)
+        self._submit("rename", (src, dst), lambda: b.rename(src, dst),
+                     cache_kw={})
+
+    def symlink(self, target: str, path: str) -> None:
+        b = self.backend
+        self._journal_create(path, False)
+        self._submit("symlink", (path,), lambda: b.symlink(target, path),
+                     cache_kw={})
+
+    def link(self, src: str, dst: str) -> None:
+        b = self.backend
+        self._journal_create(dst, False)
+        self._submit("link", (src, dst), lambda: b.link(src, dst))
+
+    def readlink(self, path: str) -> str:
+        b = self.backend
+        return self.engine.submit("readlink", (path,),
+                                  lambda: b.readlink(path), eager=False)
+
+    # ------------------------------------------------------------------
+    # data ops
+    # ------------------------------------------------------------------
+
+    def _write_at(self, path: str, offset: int, data: bytes) -> None:
+        b = self.backend
+        self._submit("write", (path,), lambda: b.write_at(path, offset, data),
+                     cache_kw={"offset": offset, "nbytes": len(data)})
+
+    def write_file(self, path: str, data: bytes) -> None:
+        """create + write + close — the common whole-file put."""
+        with self.open(path, "wb") as f:
+            f.write(data)
+
+    def pread(self, path: str, offset: int, size: int) -> bytes:
+        """Data reads are never eager (paper §2)."""
+        b = self.backend
+        return self.engine.submit("read", (path,),
+                                  lambda: b.read_at(path, offset, size),
+                                  eager=False)
+
+    def read_file(self, path: str) -> bytes:
+        return self.pread(path, 0, -1)
+
+    def open(self, path: str, mode: str = "rb") -> CannyFile:
+        return CannyFile(self, path, mode)
+
+    def truncate(self, path: str, size: int) -> None:
+        b = self.backend
+        self._submit("truncate", (path,), lambda: b.truncate(path, size),
+                     cache_kw={"size": size})
+
+    def fallocate(self, path: str, size: int) -> None:
+        b = self.backend
+        self._submit("fallocate", (path,), lambda: b.fallocate(path, size),
+                     cache_kw={"size": size})
+
+    def flush(self, path: str) -> None:
+        if self.flags.flush:
+            return  # eager flush == no-op ACK; data ordering is per-path
+        self.engine.barrier(path)
+
+    def fsync(self, path: str) -> None:
+        b = self.backend
+        self._submit("fsync", (path,), lambda: b.fsync(path))
+
+    def _on_close_write(self, path: str) -> None:
+        """close() of a written file: with eager flush this is an immediate
+        ACK; otherwise it is a barrier (NFS close-to-open consistency —
+         'the closing of files a barrier', paper §5)."""
+        if not self.flags.flush:
+            self.engine.barrier(path)
+
+    # ------------------------------------------------------------------
+    # metadata ops
+    # ------------------------------------------------------------------
+
+    def chmod(self, path: str, mode: int) -> None:
+        b = self.backend
+        self._submit("chmod", (path,), lambda: b.chmod(path, mode),
+                     cache_kw={"mode": mode})
+
+    def chown(self, path: str, uid: int, gid: int) -> None:
+        b = self.backend
+        self._submit("chown", (path,), lambda: b.chown(path, uid, gid))
+
+    def utimens(self, path: str, atime: float, mtime: float) -> None:
+        b = self.backend
+        self._submit("utimens", (path,), lambda: b.utimens(path, atime, mtime))
+
+    def setxattr(self, path: str, key: str, value: bytes) -> None:
+        b = self.backend
+        self._submit("setxattr", (path,), lambda: b.setxattr(path, key, value))
+
+    def removexattr(self, path: str, key: str) -> None:
+        b = self.backend
+        self._submit("removexattr", (path,),
+                     lambda: b.removexattr(path, key))
+
+    def stat(self, path: str) -> StatResult:
+        path = norm_path(path)
+        if self.flags.mock_stat:
+            hit = self.engine.stat_cache.get(path)
+            if hit is not None and (hit.exists or self.flags.negative_stat_cache):
+                self.engine.stats.mocked_stats += 1
+                return hit
+        b = self.backend
+        cache = self.engine.stat_cache
+
+        def fn():
+            hit = cache.get(path)
+            if hit is not None:
+                return hit
+            st = b.stat(path)
+            cache.put(path, st)
+            return st
+
+        return self.engine.submit("stat", (path,), fn, eager=False)
+
+    def exists(self, path: str) -> bool:
+        return self.stat(path).exists
+
+    def readdir(self, path: str) -> list[str]:
+        path = norm_path(path)
+        b = self.backend
+        names = self.engine.submit("readdir", (path,),
+                                   lambda: b.readdir(path), eager=False)
+        if self.flags.readdir_prefetch:
+            cache = self.engine.stat_cache
+            for name in names:
+                child = f"{path}/{name}" if path else name
+                if cache.get(child) is None:
+                    def pf(child=child):
+                        if cache.get(child) is None:
+                            cache.put(child, b.stat(child))
+                    self.engine.submit("stat", (child,), pf, eager=True)
+                    self.engine.stats.prefetched_stats += 1
+        return names
+
+    listdir = readdir
+
+    # ------------------------------------------------------------------
+    # composite workloads
+    # ------------------------------------------------------------------
+
+    def rmtree(self, path: str) -> None:
+        """`rm -rf` — the paper's second benchmark.  readdir prefetch makes
+        the per-entry stat a cache hit; unlinks/rmdirs are eager, and the
+        engine's pending-children edges keep each rmdir after its subtree."""
+        path = norm_path(path)
+        for name in self.readdir(path):
+            child = f"{path}/{name}" if path else name
+            st = self.stat(child)
+            if st.is_dir:
+                self.rmtree(child)
+            else:
+                self.unlink(child)
+        self.rmdir(path)
+
+    def walk(self, path: str = ""):
+        """Generator of (dir, subdirs, files) — `find`/`du`-style traversal."""
+        path = norm_path(path)
+        names = self.readdir(path)
+        dirs, files = [], []
+        for name in names:
+            child = f"{path}/{name}" if path else name
+            (dirs if self.stat(child).is_dir else files).append(name)
+        yield path, dirs, files
+        for d in dirs:
+            child = f"{path}/{d}" if path else d
+            yield from self.walk(child)
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    @property
+    def ledger(self) -> ErrorLedger:
+        return self.engine.ledger
+
+    def drain(self) -> None:
+        self.engine.drain()
+
+    def close(self) -> None:
+        """Unmount: drain all pending I/O and report deferred errors —
+        the benchmarked 'fully killing the CannyFS process' step."""
+        self.engine.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

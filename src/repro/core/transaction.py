@@ -1,0 +1,131 @@
+"""Job-as-transaction semantics (paper §1, §5).
+
+A Transaction brackets a region of work against a CannyFS mount:
+
+* every path *created* inside the region is journaled;
+* ``commit()`` drains the engine and succeeds iff no deferred error was
+  recorded during the region — the job's outputs are then durable;
+* ``rollback()`` removes everything the region created (files first, then
+  directories deepest-first), restoring the pre-transaction namespace;
+* ``run_transaction`` is the paper's "roll back and resubmit" loop.
+"""
+from __future__ import annotations
+
+import posixpath
+import threading
+import time
+from typing import Callable, TypeVar
+
+from .backend import norm_path
+from .errors import TransactionFailedError
+from .fs import CannyFS
+
+T = TypeVar("T")
+
+
+class Transaction:
+    def __init__(self, fs: CannyFS, name: str = "txn"):
+        self.fs = fs
+        self.name = name
+        self._lock = threading.Lock()
+        self._created: dict[str, bool] = {}   # path -> is_dir
+        self._ledger_start = 0
+        self._active = False
+        self.committed = False
+        self.rolled_back = False
+
+    # -- journal hooks (called by CannyFS) --
+    def _record_create(self, path: str, is_dir: bool) -> None:
+        with self._lock:
+            self._created[path] = is_dir
+
+    def _record_rename(self, src: str, dst: str) -> None:
+        with self._lock:
+            prefix = src + "/"
+            for p in [p for p in self._created if p == src or p.startswith(prefix)]:
+                self._created[dst + p[len(src):]] = self._created.pop(p)
+
+    # -- lifecycle --
+    def __enter__(self) -> "Transaction":
+        if self.fs._txn is not None:
+            raise RuntimeError("nested transactions are not supported")
+        self._ledger_start = len(self.fs.ledger)
+        self._active = True
+        self.fs._txn = self
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.fs._txn = None
+        self._active = False
+        if exc_type is not None:
+            # caller failed mid-transaction → roll back, re-raise
+            self.rollback()
+            return False
+        if not self.committed and not self.rolled_back:
+            self.commit()
+        return False
+
+    def errors(self):
+        return self.fs.ledger.entries()[self._ledger_start:]
+
+    def commit(self) -> None:
+        """Drain all deferred I/O; surface any failure as a single
+        transaction-level error (this is where the 'canny assumption' is
+        finally checked)."""
+        self.fs.drain()
+        errs = self.errors()
+        if errs:
+            raise TransactionFailedError(errs)
+        self.committed = True
+
+    def rollback(self) -> None:
+        """Remove every output of the transaction.  Runs synchronously and
+        directly against the backend — rollback must not itself be canny."""
+        self.fs.drain()
+        with self._lock:
+            created = dict(self._created)
+            self._created.clear()
+        files = sorted((p for p, d in created.items() if not d),
+                       key=lambda p: -p.count("/"))
+        dirs = sorted((p for p, d in created.items() if d),
+                      key=lambda p: -p.count("/"))
+        backend = self.fs.backend
+        for p in files:
+            try:
+                backend.unlink(p)
+            except OSError:
+                pass
+            self.fs.engine.stat_cache.invalidate(p)
+        for p in dirs:
+            try:
+                backend.rmdir(p)
+            except OSError:
+                pass
+            self.fs.engine.stat_cache.invalidate(p)
+        # the failed region's errors are handled; un-poison so a retry can run
+        self.fs.ledger.clear()
+        self.fs.engine.reset_poison()
+        self.rolled_back = True
+
+
+def run_transaction(fs: CannyFS, body: Callable[[CannyFS], T], *,
+                    name: str = "job", retries: int = 2,
+                    backoff_s: float = 0.0) -> T:
+    """The paper's full model: run body as a transaction; on failure roll
+    back (outputs removed) and retry the whole thing."""
+    last: BaseException | None = None
+    for attempt in range(retries + 1):
+        txn = Transaction(fs, name=f"{name}#{attempt}")
+        try:
+            with txn:
+                out = body(fs)
+            return out
+        except TransactionFailedError as e:
+            last = e
+            if not txn.rolled_back:  # commit failed inside __exit__
+                txn.rollback()
+            if backoff_s:
+                time.sleep(backoff_s * (attempt + 1))
+            continue
+    assert last is not None
+    raise last

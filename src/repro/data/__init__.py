@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, SyntheticLM, read_shards, write_shards
+
+__all__ = ["Prefetcher", "SyntheticLM", "read_shards", "write_shards"]

@@ -1,0 +1,21 @@
+"""repro.kernels — Pallas TPU kernels for the framework's compute hot spots.
+
+Layout (per the repo convention):
+
+    kernels/<name>/kernel.py   pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+    kernels/<name>/ref.py      pure-jnp oracle (also the CPU lowering path)
+    kernels/ops.py             jit'd dispatch wrappers used by the models
+
+Dispatch policy: on a TPU backend the Pallas kernel is lowered; elsewhere
+(this CPU container, and the multi-device dry-run) the mathematically
+identical jnp reference is lowered so XLA cost analysis stays well-defined.
+`REPRO_KERNELS=interpret` forces Pallas-in-interpret-mode (used by the
+kernel test suite to execute the actual kernel bodies on CPU).
+
+The paper (CannyFS) has no compute-kernel contribution — these kernels are
+the perf-critical layers of the surrounding training/serving framework
+(attention, SSD scan, RG-LRU scan, fused RMSNorm), per the brief.
+"""
+from . import ops
+
+__all__ = ["ops"]

@@ -1,0 +1,136 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Shared mask logic for all attention variants in the framework:
+
+* ``causal``      — q_pos >= k_pos
+* ``window > 0``  — sliding window: q_pos - k_pos < window
+* ``chunk > 0``   — llama4-style chunked locality: q_pos//chunk == k_pos//chunk
+* k positions < 0 mark invalid (unwritten cache slots)
+
+GQA is native: q has H heads, k/v have K heads, H = K * G.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+                   window: int = 0, chunk: int = 0) -> jax.Array:
+    """(..., Sq), (..., Sk) int32 -> (..., Sq, Sk) bool (True = attend)."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    m = k >= 0
+    if causal:
+        m &= q >= k
+    if window:
+        m &= (q - k) < window
+    if chunk:
+        m &= (q // chunk) == (k // chunk)
+    return m
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, window: int = 0, chunk: int = 0,
+            q_positions: jax.Array | None = None,
+            k_positions: jax.Array | None = None,
+            softcap: float = 0.0, scale: float | None = None) -> jax.Array:
+    """q (B,Sq,H,dh); k,v (B,Sk,K,dh) -> (B,Sq,H,dh).
+
+    Softmax statistics in fp32; output in q.dtype."""
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = scale if scale is not None else dh ** -0.5
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        if Sq != Sk:  # decode: new tokens sit at the end of the kv history
+            q_positions = q_positions + (Sk - Sq)
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+
+    qg = q.reshape(B, Sq, K, G, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = attention_mask(q_positions, k_positions, causal=causal,
+                          window=window, chunk=chunk)  # (B,Sq,Sk)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def mha_blocked(q, k, v, *, causal=True, window=0, chunk=0,
+                softcap: float = 0.0, scale: float | None = None,
+                block_q: int = 1024):
+    """Query-blocked exact attention (jnp): identical math to mha_ref but
+    never materializes the full (Sq, Sk) score matrix — the CPU/XLA
+    lowering analogue of the flash kernel, used for long self-attention so
+    the dry-run's memory analysis reflects a production schedule rather
+    than an O(S²) buffer."""
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = scale if scale is not None else dh ** -0.5
+    assert Sq % block_q == 0, (Sq, block_q)
+    nq = Sq // block_q
+    qb = q.reshape(B, nq, block_q, K, G, dh)
+    k_pos = jnp.arange(Sk)
+
+    def one_block(i):
+        qi = qb[:, i]                                 # (B,bq,K,G,dh)
+        q_pos = i * block_q + jnp.arange(block_q)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qi, k,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        m = attention_mask(q_pos[None], k_pos[None], causal=causal,
+                           window=window, chunk=chunk)  # (1,bq,Sk)
+        logits = jnp.where(m[:, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+
+    out = jax.lax.map(one_block, jnp.arange(nq))       # (nq,B,bq,K,G,dh)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, dh)
+    return out
+
+
+def mha_blocked_windowed(q, k, v, *, causal=True, window=0, chunk=0,
+                         softcap: float = 0.0, scale: float | None = None,
+                         block_q: int = 1024):
+    """Locality-aware blocked attention: each q-block only reads the K/V
+    slice its mask can reach (sliding window / chunk locality), instead of
+    scoring against the full sequence.  Python loop with static slice
+    bounds — every block appears in the HLO, so both the work saving and
+    the cost accounting are exact.  This is the jnp-path analogue of the
+    Pallas kernel's block skipping."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    assert Sq == Sk and Sq % block_q == 0
+    assert window or chunk, "use mha_blocked for global attention"
+    nq = Sq // block_q
+    outs = []
+    for i in range(nq):
+        hi = (i + 1) * block_q if causal else min(
+            Sk, (i + 1) * block_q + (window or chunk))
+        lo = 0
+        if window:
+            lo = max(0, i * block_q - window + 1)
+        if chunk:
+            lo = max(lo, (i * block_q // chunk) * chunk)
+        qi = q[:, i * block_q:(i + 1) * block_q]
+        ki = k[:, lo:hi]
+        vi = v[:, lo:hi]
+        q_pos = jnp.broadcast_to(
+            i * block_q + jnp.arange(block_q), (B, block_q))
+        k_pos = jnp.broadcast_to(jnp.arange(lo, hi), (B, hi - lo))
+        outs.append(mha_ref(qi, ki, vi, causal=causal, window=window,
+                            chunk=chunk, q_positions=q_pos,
+                            k_positions=k_pos, softcap=softcap, scale=scale))
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,116 @@
+"""Dispatch wrappers: the models call these; we pick Pallas-on-TPU,
+Pallas-interpret (kernel tests), or the jnp reference (CPU / dry-run).
+
+Env override: REPRO_KERNELS = auto | jnp | pallas | interpret
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def kernel_mode() -> str:
+    mode = os.environ.get("REPRO_KERNELS", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return mode
+
+
+def _interpret() -> bool:
+    return kernel_mode() == "interpret"
+
+
+def _use_pallas() -> bool:
+    return kernel_mode() in ("pallas", "interpret")
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, residual=None):
+    from .rmsnorm.ref import rmsnorm_ref
+    if _use_pallas() and x.ndim >= 2 and x.shape[-1] % 128 == 0:
+        from .rmsnorm.kernel import rmsnorm_pallas
+        return rmsnorm_pallas(x, scale, eps=eps, residual=residual,
+                              interpret=_interpret())
+    return rmsnorm_ref(x, scale, eps=eps, residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=0, chunk=0,
+                    q_positions=None, k_positions=None, softcap=0.0,
+                    scale=None):
+    """q (B,Sq,H,dh), k/v (B,Sk,K,dh) -> (B,Sq,H,dh).
+
+    The Pallas path requires static self-attention layout (Sq == Sk,
+    positions defaulted, 128-aligned seq) — exactly the training/prefill
+    shapes; everything else (decode, ragged cache) falls back to the ref.
+    """
+    from .flash_attention.ref import mha_blocked, mha_ref
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    pallas_ok = (_use_pallas() and q_positions is None and k_positions is None
+                 and Sq == Sk and Sq % 256 == 0 and dh % 128 == 0
+                 and softcap == 0.0)
+    if pallas_ok:
+        from .flash_attention.kernel import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      chunk=chunk, scale=scale,
+                                      interpret=_interpret())
+    # self-attention on the jnp path: query-blocked exact attention so the
+    # lowered HLO never holds an O(S²) buffer (the flash-like production
+    # schedule — the dry-run's memory analysis reflects this)
+    if (q_positions is None and k_positions is None and Sq == Sk
+            and Sq >= 2048 and Sq % 1024 == 0):
+        # hillclimbed variant: slice K/V to the mask's reach per q-block
+        if ((window or chunk) and
+                os.environ.get("REPRO_WINDOWED_ATTN") == "1"):
+            from .flash_attention.ref import mha_blocked_windowed
+            return mha_blocked_windowed(q, k, v, causal=causal,
+                                        window=window, chunk=chunk,
+                                        softcap=softcap, scale=scale)
+        return mha_blocked(q, k, v, causal=causal, window=window, chunk=chunk,
+                           softcap=softcap, scale=scale)
+    return mha_ref(q, k, v, causal=causal, window=window, chunk=chunk,
+                   q_positions=q_positions, k_positions=k_positions,
+                   softcap=softcap, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128):
+    from .ssd.ref import ssd_chunked
+    S = x.shape[1]
+    if _use_pallas() and S % chunk == 0 and x.shape[-1] % 8 == 0:
+        from .ssd.kernel import ssd_pallas
+        return ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk,
+                          interpret=_interpret())
+    if S % chunk == 0:
+        return ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+    from .ssd.ref import ssd_sequential
+    return ssd_sequential(x, dt, A, Bm, Cm, D)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+def rglru_scan(log_a, gx, h0=None):
+    """log_a, gx (B,S,W) -> (y, h_last)."""
+    from .rglru.ref import rglru_assoc, rglru_sequential
+    B, S, W = gx.shape
+    if _use_pallas() and S % 128 == 0 and W % 128 == 0:
+        from .rglru.kernel import rglru_pallas
+        return rglru_pallas(log_a, gx, h0=h0, interpret=_interpret())
+    if S >= 64:
+        return rglru_assoc(log_a, gx, h0=h0)
+    return rglru_sequential(log_a, gx, h0=h0)

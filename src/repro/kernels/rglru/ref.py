@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the RG-LRU (Real-Gated Linear Recurrent Unit) scan.
+
+Griffin / RecurrentGemma (arXiv:2402.19427):
+
+    r_t = sigmoid(gate_a(x_t))               recurrence gate
+    i_t = sigmoid(gate_x(x_t))               input gate
+    log a_t = -c * softplus(Λ) * r_t         (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The gates are block-diagonal linear maps (num_heads blocks) computed by the
+caller; this module implements the recurrence itself given per-step
+log-decay ``log_a`` and gated input ``gx``:
+
+    h_t = exp(log_a_t) ⊙ h_{t-1} + sqrt(1 - exp(2 log_a_t)) ⊙ gx_t
+
+Two references: exact sequential scan (oracle) and a block-parallel
+formulation (what the Pallas kernel implements): within a block of T steps,
+    h_{t} = exp(cum_t - cum_j) terms — computed via an associative scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_sequential(log_a: jax.Array, gx: jax.Array,
+                     h0: jax.Array | None = None):
+    """log_a, gx: (B, S, W) -> (y (B,S,W), h_S (B,W)). fp32 internals."""
+    B, S, W = gx.shape
+    f32 = jnp.float32
+    la = log_a.astype(f32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * la), 1e-12))
+    u = beta * gx.astype(f32)
+    h = jnp.zeros((B, W), f32) if h0 is None else h0.astype(f32)
+
+    def step(h, inp):
+        la_t, u_t = inp
+        h = jnp.exp(la_t) * h + u_t
+        return h, h
+
+    h_last, ys = jax.lax.scan(step, h, (jnp.moveaxis(la, 1, 0),
+                                        jnp.moveaxis(u, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(gx.dtype), h_last
+
+
+def rglru_assoc(log_a: jax.Array, gx: jax.Array,
+                h0: jax.Array | None = None):
+    """Same math via jax.lax.associative_scan (log-depth; used on the CPU
+    path for long sequences)."""
+    f32 = jnp.float32
+    la = log_a.astype(f32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * la), 1e-12))
+    u = beta * gx.astype(f32)
+    if h0 is not None:
+        # fold h0 in as a virtual step 0 with a=0 contribution
+        la = jnp.concatenate([jnp.zeros_like(la[:, :1]), la], axis=1)
+        u = jnp.concatenate([h0.astype(f32)[:, None], u], axis=1)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, u1 * a2 + u2
+
+    a_acc, y = jax.lax.associative_scan(
+        combine, (jnp.exp(la), u), axis=1)
+    if h0 is not None:
+        y = y[:, 1:]
+    return y.astype(gx.dtype), y[:, -1].astype(f32)
+
+
+def rglru_gates(x: jax.Array, p: dict, *, c: float = 8.0):
+    """Compute (log_a, gx) from inputs and block-diagonal gate params.
+
+    x (B,S,W); p = {a_gate_w (Hb, bw, bw), a_gate_b (Hb, bw),
+                    x_gate_w, x_gate_b, a_param (W,)} with W = Hb*bw."""
+    B, S, W = x.shape
+    Hb, bw, _ = p["a_gate_w"].shape
+    xb = x.reshape(B, S, Hb, bw)
+    f32 = jnp.float32
+    ra = jax.nn.sigmoid(jnp.einsum("bshi,hij->bshj", xb.astype(f32),
+                                   p["a_gate_w"].astype(f32))
+                        + p["a_gate_b"].astype(f32))
+    ix = jax.nn.sigmoid(jnp.einsum("bshi,hij->bshj", xb.astype(f32),
+                                   p["x_gate_w"].astype(f32))
+                        + p["x_gate_b"].astype(f32))
+    log_a_base = -c * jax.nn.softplus(p["a_param"].astype(f32))  # (W,)
+    log_a = ra.reshape(B, S, W) * log_a_base
+    gx = ix.reshape(B, S, W) * x.astype(f32)
+    return log_a, gx

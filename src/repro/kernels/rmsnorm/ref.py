@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-6, residual=None):
+    """y = x / rms(x) * scale (+1 Gemma-style offset is NOT used here);
+    optional fused residual add (y += residual) for the epilogue case."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    y = y * scale.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y.astype(x.dtype)

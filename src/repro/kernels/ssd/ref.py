@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space duality) scan.
+
+Two references:
+
+* ``ssd_sequential`` — the exact recurrence, scanned one timestep at a time.
+  This is the ground-truth oracle.
+* ``ssd_chunked``    — the SSD chunked decomposition (intra-chunk quadratic
+  term + inter-chunk state passing), mathematically identical, and the
+  algorithm the Pallas kernel implements.  Also the CPU lowering path.
+
+Shapes follow Mamba-2 (arXiv:2405.21060):
+    x  (B, S, H, P)   values (P = head dim)
+    dt (B, S, H)      positive step sizes (already softplus'ed)
+    A  (H,)           negative real decay per head
+    Bm (B, S, G, N)   input matrix  (G groups, N = state dim)
+    Cm (B, S, G, N)   output matrix
+    D  (H,)           skip connection
+Recurrence per head h (group g = h * G // H):
+    state_t = exp(dt_t A_h) * state_{t-1} + dt_t * x_t ⊗ B_t
+    y_t     = C_t · state_t + D_h * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(Bm: jax.Array, H: int) -> jax.Array:
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group over its heads."""
+    G = Bm.shape[2]
+    assert H % G == 0
+    return jnp.repeat(Bm, H // G, axis=2)
+
+
+def ssd_sequential(x, dt, A, Bm, Cm, D):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Bh = _expand_groups(Bm.astype(jnp.float32), H)
+    Ch = _expand_groups(Cm.astype(jnp.float32), H)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32))  # (B,S,H)
+
+    def step(state, inp):
+        xt, bt, ct, at, dtt = inp       # (B,H,P),(B,H,N),(B,H,N),(B,H),(B,H)
+        state = state * at[..., None, None] + (
+            (dtt[..., None] * xt)[..., :, None] * bt[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(Bh, 1, 0),
+          jnp.moveaxis(Ch, 1, 0), jnp.moveaxis(decay, 1, 0),
+          jnp.moveaxis(dtf, 1, 0))
+    _, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int = 128):
+    """The SSD algorithm: O(S·chunk) intra-chunk + O(S/chunk) state pass."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xf = x.astype(f32).reshape(B, nc, chunk, H, P)
+    dtf = dt.astype(f32).reshape(B, nc, chunk, H)
+    Bh = _expand_groups(Bm.astype(f32), H).reshape(B, nc, chunk, H, N)
+    Ch = _expand_groups(Cm.astype(f32), H).reshape(B, nc, chunk, H, N)
+
+    dA = dtf * A.astype(f32)                      # (B,nc,Q,H) log-decay
+    cum = jnp.cumsum(dA, axis=2)                  # inclusive cumulative
+    total = cum[:, :, -1:]                        # (B,nc,1,H)
+
+    # intra-chunk quadratic term: att[i,j] = exp(cum_i - cum_j) for i >= j.
+    # The argument is masked BEFORE the exp — masking the exp's output
+    # leaves exp(+big) = inf on the dead branch, whose gradient is
+    # inf * 0 = NaN (the standard where-grad trap).
+    li = cum[:, :, :, None, :]                    # (B,nc,Q,1,H)
+    lj = cum[:, :, None, :, :]                    # (B,nc,1,Q,H)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+    arg = jnp.where(causal[None, None, :, :, None], li - lj, -1e30)
+    att = jnp.exp(arg)                            # (B,nc,Q,Q,H)
+    cb = jnp.einsum("bcqhn,bcshn->bcqsh", Ch, Bh)
+    y_intra = jnp.einsum("bcqsh,bcqsh,bcsh,bcshp->bcqhp",
+                         cb, att, dtf, xf)
+
+    # per-chunk end state: sum_j exp(total - cum_j) * dt_j * B_j x_j
+    decay_to_end = jnp.exp(total - cum)           # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn",
+                             decay_to_end, dtf, Bh, xf)
+
+    # inter-chunk recurrence over nc chunks
+    def step(state, inp):
+        st_c, tot_c = inp                          # (B,H,P,N), (B,H)
+        out_state = state                          # state entering the chunk
+        state = state * jnp.exp(tot_c)[..., None, None] + st_c
+        return state, out_state
+
+    s0 = jnp.zeros((B, H, P, N), f32)
+    _, states_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_state, 1, 0),
+                   jnp.moveaxis(total[:, :, 0], 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)      # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_i exp(cum_i) state_in
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(cum), Ch, states_in)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm, D):
+    """Single-token decode: state (B,H,P,N), x (B,H,P), dt (B,H),
+    Bm/Cm (B,G,N) -> (new_state, y)."""
+    H = x.shape[1]
+    f32 = jnp.float32
+    Bh = _expand_groups(Bm.astype(f32)[:, None], H)[:, 0]
+    Ch = _expand_groups(Cm.astype(f32)[:, None], H)[:, 0]
+    dtf = dt.astype(f32)
+    a = jnp.exp(dtf * A.astype(f32))
+    state = state * a[..., None, None] + (
+        (dtf[..., None] * x.astype(f32))[..., :, None] * Bh[..., None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + x.astype(f32) * D.astype(f32)[None, :, None]
+    return state, y.astype(x.dtype)

@@ -1,0 +1,5 @@
+"""repro.launch — meshes, input specs, dry-run, and the training launcher.
+
+NOTE: importing this package must NOT touch jax device state; dryrun.py
+sets XLA_FLAGS before any jax import and is run as __main__ only.
+"""

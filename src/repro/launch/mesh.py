@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required for the smoke tests, which must
+see the real single CPU device, while the dry-run forces 512 host devices
+before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model); 'pod' carries
+    only gradient reduction (or pipeline stages) over the slow links."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    if multi_pod and n >= 8:
+        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"))
+    if n == 1:
+        return jax.make_mesh((1, 1), ("data", "model"))
+    d = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((d, n // d), ("data", "model"))

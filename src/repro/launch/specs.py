@@ -1,0 +1,84 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch × input-shape) cell.
+
+No device allocation — the dry-run lowers against these.  Shapes per the
+assignment:
+
+    train_4k     seq 4,096   global_batch 256   (train_step)
+    prefill_32k  seq 32,768  global_batch 32    (prefill / encode)
+    decode_32k   kv 32,768   global_batch 128   (serve_step, 1 new token)
+    long_500k    kv 524,288  global_batch 1     (serve_step, 1 new token)
+
+Skips (DESIGN.md §4): encoder-only archs have no decode; pure
+full-attention archs skip long_500k.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_cache
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    cell = SHAPES[shape_name]
+    if cell.step == "decode":
+        if not cfg.supports_decode():
+            return False, "encoder-only: no decode step"
+        if cell.name == "long_500k" and not cfg.long_context_ok():
+            return False, "full attention: long_500k needs sub-quadratic attn"
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, seq_len: int, batch: int,
+                *, training: bool) -> dict:
+    """ShapeDtypeStructs for one train/prefill batch."""
+    out = {"tokens": S((batch, seq_len), jnp.int32)}
+    if training:
+        out["labels"] = S((batch, seq_len), jnp.int32)
+    if cfg.modality == "audio_stub":
+        out["features"] = S((batch, seq_len, 512), jnp.bfloat16)
+        if training:
+            out["loss_mask"] = S((batch, seq_len), jnp.bool_)
+    if cfg.modality == "vision_stub":
+        n_img = min(cfg.frontend_tokens or 1024, seq_len // 2)
+        out["vision_embeds"] = S((batch, n_img, cfg.d_model), jnp.bfloat16)
+        out["vision_mask"] = S((batch, seq_len), jnp.bool_)
+        out["positions3"] = S((3, batch, seq_len), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def decode_token_specs(batch: int):
+    return S((batch, 1), jnp.int32)
+
+
+def cell_tokens(shape_name: str) -> int:
+    cell = SHAPES[shape_name]
+    if cell.step == "decode":
+        return cell.global_batch          # one new token per sequence
+    return cell.global_batch * cell.seq_len

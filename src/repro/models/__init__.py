@@ -1,0 +1,11 @@
+"""repro.models — pure-functional JAX model zoo for the 10 assigned archs."""
+from .config import ModelConfig, ATTN_KINDS, MIXER_KINDS
+from .model import (decode_step, forward_train, init_cache, init_params,
+                    param_specs, prefill)
+from .layers import cross_entropy
+
+__all__ = [
+    "ATTN_KINDS", "MIXER_KINDS", "ModelConfig", "cross_entropy",
+    "decode_step", "forward_train", "init_cache", "init_params",
+    "param_specs", "prefill",
+]

@@ -1,0 +1,395 @@
+"""Transformer / SSM / RG-LRU blocks, as pure functions over param pytrees.
+
+Block contract:
+
+    apply_block(kind, params, x, ctx, cache) -> (x_out, new_cache)
+
+where ``ctx`` carries positions, rotary tables, config and the activation-
+sharding hook.  ``cache=None`` means training (full-sequence, no state);
+otherwise cache is this block's decode state and is threaded functionally.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels.ssd.ref import ssd_decode_step
+from repro.kernels.rglru.ref import rglru_gates
+from .config import ATTN_KINDS, ModelConfig
+from .layers import act_fn, dense, gated_mlp, rmsnorm
+from .rope import apply_rotary
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg, key, fan_in, shape):
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std)
+
+
+def init_attn(key, cfg: ModelConfig) -> dict:
+    D, dh = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _norm_init(cfg, ks[0], D, (D, H * dh)),
+        "wk": _norm_init(cfg, ks[1], D, (D, K * dh)),
+        "wv": _norm_init(cfg, ks[2], D, (D, K * dh)),
+        "wo": _norm_init(cfg, ks[3], H * dh, (H * dh, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((K * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((K * dh,), jnp.float32)
+    return p
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int) -> dict:
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": _norm_init(cfg, ks[0], D, (D, d_ff)),
+        "up": _norm_init(cfg, ks[1], D, (D, d_ff)),
+        "down": _norm_init(cfg, ks[2], d_ff, (d_ff, D)),
+    }
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    D, E = cfg.d_model, cfg.num_experts
+    F = cfg.moe_dff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _norm_init(cfg, ks[0], D, (D, E)),
+        "w_gate": _norm_init(cfg, ks[1], D, (E, D, F)),
+        "w_up": _norm_init(cfg, ks[2], D, (E, D, F)),
+        "w_down": _norm_init(cfg, ks[3], F, (E, F, D)),
+    }
+    if cfg.shared_expert_dff:
+        p["shared"] = init_ffn(ks[4], cfg, cfg.shared_expert_dff)
+    return p
+
+
+def init_ssd(key, cfg: ModelConfig) -> dict:
+    D, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _norm_init(cfg, ks[0], D, (D, 2 * di + 2 * G * N + H)),
+        "conv_w": _norm_init(cfg, ks[1], cfg.ssm_conv, (conv_ch, cfg.ssm_conv)),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, H))).astype(jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": _norm_init(cfg, ks[2], di, (di, D)),
+    }
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    D, W = cfg.d_model, cfg.resolved_lru_width
+    Hb = cfg.num_heads
+    bw = W // Hb
+    ks = jax.random.split(key, 6)
+    # a_param init so the decay a lies in (0.9, 0.999) (Griffin appendix):
+    # log a = -8 softplus(a_param) r, r~1  =>  a_param = softplus^-1(-log(u)/8)
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))
+    return {
+        "in_x": _norm_init(cfg, ks[1], D, (D, W)),
+        "in_gate": _norm_init(cfg, ks[2], D, (D, W)),
+        "a_gate_w": _norm_init(cfg, ks[3], bw, (Hb, bw, bw)),
+        "a_gate_b": jnp.zeros((Hb, bw), jnp.float32),
+        "x_gate_w": _norm_init(cfg, ks[4], bw, (Hb, bw, bw)),
+        "x_gate_b": jnp.zeros((Hb, bw), jnp.float32),
+        "a_param": a_param,
+        "conv_w": _norm_init(cfg, ks[5], cfg.ssm_conv, (W, cfg.ssm_conv)),
+        "conv_b": jnp.zeros((W,), jnp.float32),
+        "out": _norm_init(cfg, ks[0], W, (W, D)),
+    }
+
+
+def init_mixer(key, cfg: ModelConfig, kind: str) -> dict:
+    if kind in ATTN_KINDS:
+        return init_attn(key, cfg)
+    if kind == "ssd":
+        return init_ssd(key, cfg)
+    if kind == "rglru":
+        return init_rglru(key, cfg)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shared by ssd / rglru)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array | None = None):
+    """x (B,S,C), w (C,K) depthwise, causal.  With ``state`` (B,K-1,C) the
+    conv consumes carried history and returns the updated state."""
+    B, S, C = x.shape
+    K = w.shape[1]
+    if state is not None:
+        x_ext = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        x_ext, w.astype(x.dtype)[:, None, :].transpose(2, 1, 0),  # (K,1,C)->OIW?
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C)
+    out = out + b.astype(x.dtype)
+    new_state = x_ext[:, -(K - 1):, :] if K > 1 else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+def _attn_geometry(cfg: ModelConfig, kind: str):
+    causal = cfg.causal and kind != "attn_bidir"
+    window = cfg.window if kind in ("attn_sliding", "attn_local") else 0
+    chunk = cfg.chunk_size if kind == "attn_chunked" else 0
+    use_rope = cfg.pos_type != "none" and kind != "attn_global"  # iRoPE/NoPE
+    return causal, window, chunk, use_rope
+
+
+def attn_forward(p, x, kind, ctx, cache=None):
+    cfg: ModelConfig = ctx["cfg"]
+    B, S, D = x.shape
+    H, K, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    causal, window, chunk, use_rope = _attn_geometry(cfg, kind)
+
+    q = dense(x, p["wq"], p.get("bq")).reshape(B, S, H, dh)
+    k = dense(x, p["wk"], p.get("bk")).reshape(B, S, K, dh)
+    v = dense(x, p["wv"], p.get("bv")).reshape(B, S, K, dh)
+    if use_rope:
+        q = apply_rotary(q, ctx["cos"], ctx["sin"])
+        k = apply_rotary(k, ctx["cos"], ctx["sin"])
+
+    if cache is None:  # training: pure self-attention
+        out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                   chunk=chunk)
+        new_cache = None
+    else:
+        Sc = cache["k"].shape[1]
+        t = ctx["t"]  # int32 scalar: #tokens already in cache
+        if S > 1:      # prefill (t == 0)
+            if S <= Sc:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+                cpos = jax.lax.dynamic_update_slice(
+                    cache["pos"], jnp.arange(S, dtype=jnp.int32), (0,))
+            else:
+                # ring cache shorter than the prompt (sliding/chunked):
+                # keep the last Sc tokens at their ring slots p % Sc
+                shift = S % Sc
+                ck = jnp.roll(k[:, S - Sc:].astype(cache["k"].dtype),
+                              shift, axis=1)
+                cv = jnp.roll(v[:, S - Sc:].astype(cache["v"].dtype),
+                              shift, axis=1)
+                cpos = jnp.roll(jnp.arange(S - Sc, S, dtype=jnp.int32), shift)
+            out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                       chunk=chunk)
+        else:          # decode one token at position t
+            slot = jnp.mod(t, Sc)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                cache["pos"], t[None].astype(jnp.int32), (slot,))
+            seq_axes = ctx.get("kv_seq_axes")
+            if seq_axes and kind != "attn_bidir":
+                # sequence-sharded cache -> distributed flash-decode
+                from repro.parallel.flash_decode import (
+                    seq_sharded_decode_attention)
+                out = seq_sharded_decode_attention(
+                    ctx["mesh"], seq_axes, q, ck.astype(q.dtype),
+                    cv.astype(q.dtype), cpos, t.astype(jnp.int32),
+                    batch_axes=ctx.get("kv_batch_axes", ()),
+                    causal=causal, window=window, chunk=chunk)
+            else:
+                q_pos = jnp.broadcast_to(t[None, None], (B, 1)).astype(jnp.int32)
+                k_pos = jnp.broadcast_to(cpos[None], (B, Sc))
+                out = kops.flash_attention(
+                    q, ck.astype(q.dtype), cv.astype(q.dtype), causal=causal,
+                    window=window, chunk=chunk, q_positions=q_pos,
+                    k_positions=k_pos)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    out = out.reshape(B, S, H * dh)
+    return dense(out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE block (scatter-based dropless-with-capacity dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_forward(p, x, ctx):
+    """x (B,S,D).  Each batch row is a dispatch group (maps onto the dp
+    shard); capacity bounds the per-expert buffer.  Returns (y, aux_loss)."""
+    cfg: ModelConfig = ctx["cfg"]
+    B, S, D = x.shape
+    E, kk = cfg.num_experts, cfg.experts_per_token
+    C = int(math.ceil(S * kk * cfg.capacity_factor / E))
+    C = max(min(C, S * kk), 1)
+
+    router_logits = dense(x, p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    w, sel = jax.lax.top_k(probs, kk)                          # (B,S,k)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+
+    # ---- slot bookkeeping: position of each (token,k) within its expert
+    e_flat = sel.reshape(B, S * kk)                            # (B, T)
+    order = jnp.argsort(e_flat, axis=1, stable=True)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    seg_start = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E)))(e_sorted)
+    ranks_sorted = jnp.arange(S * kk)[None] - jnp.take_along_axis(
+        seg_start, e_sorted, axis=1)
+    inv = jnp.argsort(order, axis=1)
+    ranks = jnp.take_along_axis(ranks_sorted, inv, axis=1)     # (B,T)
+    keep = ranks < C
+    pos = jnp.where(keep, ranks, C)                            # overflow -> slot C
+
+    # ---- dispatch: buf (B,E,C+1,D); slot C is the overflow trash slot
+    tok = jnp.repeat(jnp.arange(S), kk)[None].repeat(B, 0)     # (B,T) token ids
+    xs = jnp.take_along_axis(x, tok[..., None], axis=1)        # (B,T,D)
+    buf = jnp.zeros((B, E, C + 1, D), x.dtype)
+    bidx = jnp.arange(B)[:, None].repeat(S * kk, 1)
+    buf = buf.at[bidx, e_flat, pos].set(xs)
+
+    # ---- expert FFN (stacked einsum; E dim shards as EP)
+    h = buf[:, :, :C]                                          # (B,E,C,D)
+    g = act_fn(cfg.act)(jnp.einsum("becd,edf->becf", h,
+                                   p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("becd,edf->becf", h, p["w_up"].astype(x.dtype))
+    y_e = jnp.einsum("becf,efd->becd", g * u, p["w_down"].astype(x.dtype))
+    y_e = jnp.pad(y_e, ((0, 0), (0, 0), (0, 1), (0, 0)))       # restore slot C
+
+    # ---- combine
+    gathered = y_e[bidx, e_flat, pos]                          # (B,T,D)
+    wk = (w.reshape(B, S * kk) * keep).astype(x.dtype)
+    y = jnp.sum((gathered * wk[..., None]).reshape(B, S, kk, D), axis=2)
+
+    if "shared" in p:
+        y = y + gated_mlp(x, p["shared"], cfg.act)
+
+    # ---- Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(sel, E).sum(2) > 0).astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def ssd_forward(p, x, ctx, cache=None):
+    cfg: ModelConfig = ctx["cfg"]
+    B, S, D = x.shape
+    di, G, N = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = dense(x, p["in_proj"])
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, new_conv = causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None:
+        y = kops.ssd_scan(xs, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk)
+        new_cache = None
+    elif S > 1:  # prefill: run the scan, then recompute the final state
+        y = kops.ssd_scan(xs, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk)
+        # final state via sequential fold of the last chunk is cheap but
+        # simplest correct option: fold everything (prefill is one-time)
+        state = cache["state"]
+        def fold(state, t):
+            s, _ = ssd_decode_step(state, xs[:, t], dt[:, t], A,
+                                   Bm[:, t], Cm[:, t], p["D"])
+            return s, None
+        state, _ = jax.lax.scan(fold, state.astype(jnp.float32),
+                                jnp.arange(S))
+        new_cache = {"conv": new_conv, "state": state}
+    else:        # decode
+        state, y = ssd_decode_step(cache["state"], xs[:, 0], dt[:, 0], A,
+                                   Bm[:, 0], Cm[:, 0], p["D"])
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "state": state}
+
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], eps=cfg.norm_eps)
+    return dense(y, p["out_proj"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block
+# ---------------------------------------------------------------------------
+
+def rglru_forward(p, x, ctx, cache=None):
+    cfg: ModelConfig = ctx["cfg"]
+    B, S, D = x.shape
+    W = cfg.resolved_lru_width
+    xb = dense(x, p["in_x"])
+    gate = act_fn("gelu")(dense(x, p["in_gate"]))
+    conv_state = cache["conv"] if cache is not None else None
+    xb, new_conv = causal_conv1d(xb, p["conv_w"], p["conv_b"], conv_state)
+    log_a, gx = rglru_gates(xb, p)
+    h0 = cache["h"] if cache is not None else None
+    y, h_last = kops.rglru_scan(log_a, gx, h0=h0)
+    y = y.astype(x.dtype) * gate
+    out = dense(y, p["out"])
+    new_cache = None if cache is None else {"conv": new_conv, "h": h_last}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# unified block application (pre-norm residual layer)
+# ---------------------------------------------------------------------------
+
+def apply_block(kind: str, p: dict, x: jax.Array, ctx: dict,
+                cache: Optional[dict] = None):
+    """One full layer: mixer + FFN/MoE, pre-norm residuals.
+
+    Returns (x, new_cache, aux_loss)."""
+    cfg: ModelConfig = ctx["cfg"]
+    constrain = ctx.get("constrain", lambda a: a)
+    aux = jnp.zeros((), jnp.float32)
+
+    h = rmsnorm(x, p["norm1"], eps=cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        mixed, new_cache = attn_forward(p["mixer"], h, kind, ctx, cache)
+    elif kind == "ssd":
+        mixed, new_cache = ssd_forward(p["mixer"], h, ctx, cache)
+    elif kind == "rglru":
+        mixed, new_cache = rglru_forward(p["mixer"], h, ctx, cache)
+    else:
+        raise ValueError(kind)
+    x = constrain(x + mixed)
+
+    if "moe" in p or "ffn" in p:   # mamba2 backbone is mixer-only (d_ff=0)
+        h = rmsnorm(x, p["norm2"], eps=cfg.norm_eps)
+        if "moe" in p:
+            y, aux = moe_forward(p["moe"], h, ctx)
+        else:
+            y = gated_mlp(h, p["ffn"], cfg.act)
+        x = constrain(x + y)
+    return x, new_cache, aux

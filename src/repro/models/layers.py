@@ -1,0 +1,91 @@
+"""Shared layer primitives: norms, gated MLPs, embeddings, losses.
+
+Everything is a pure function over explicit parameter pytrees; compute dtype
+is the dtype of the activations passed in (params are cast at the call
+site by ``model.apply``-level code).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm computed in fp32 (mixed-precision-sensitive reduction)."""
+    from repro.kernels import ops as kops  # late import; dispatch layer
+    return kops.rmsnorm(x, scale, eps=eps)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def gated_mlp(x: jax.Array, p: dict, act: str = "silu") -> jax.Array:
+    """SwiGLU/GeGLU: down( act(x @ gate) * (x @ up) )."""
+    g = act_fn(act)(dense(x, p["gate"]))
+    u = dense(x, p["up"])
+    return dense(g * u, p["down"])
+
+
+def embed(tokens: jax.Array, table: jax.Array, dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(x: jax.Array, table_or_head: jax.Array, *,
+            tied: bool, softcap: float = 0.0) -> jax.Array:
+    w = table_or_head.astype(x.dtype)
+    logits = x @ (w.T if tied else w)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None, z_loss: float = 0.0,
+                  compute_dtype=jnp.float32):
+    """Token-mean CE with fp32 reductions (default) and optional z-loss.
+
+    logits (..., V) any float dtype; labels (...) int32; mask (...) bool.
+    The gold logit is extracted with a masked reduction rather than a
+    gather: it partitions trivially when V is model-sharded (gathers on a
+    sharded dim trip XLA's SPMD partitioner inside partial-manual regions).
+
+    compute_dtype=bfloat16 skips the fp32 materialization of the
+    (B,S,V) tensor — a memory-roofline lever; the per-token max subtraction
+    keeps it stable and the final reductions still accumulate in fp32."""
+    logits = logits.astype(compute_dtype)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1, dtype=jnp.float32)
+    lse = jnp.log(sumexp) + m[..., 0].astype(jnp.float32)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1, dtype=jnp.float32)
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll), jnp.size(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom, denom
+
+
+def cast_tree(tree, dtype):
+    """Cast floating leaves of a param tree to the compute dtype."""
+    def c(x):
+        if isinstance(x, jax.Array) or hasattr(x, "dtype"):
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                return x.astype(dtype)
+        return x
+    return jax.tree.map(c, tree)

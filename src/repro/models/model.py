@@ -1,0 +1,334 @@
+"""Model assembly: embeddings → scanned superblocks → head.
+
+The layer stack is organized as ``pattern × n_superblocks (+ remainder)``;
+per-pattern-position parameter trees are stacked along a leading superblock
+axis and the forward pass ``lax.scan``s over them (compact HLO — one
+superblock traced once regardless of depth — which is what keeps the
+512-device dry-run compile times sane and is standard production practice).
+
+Public entry points:
+
+    init_params(rng, cfg)                   -> fp32 param pytree
+    forward_train(params, batch, cfg, ...)  -> (logits, aux)
+    init_cache(cfg, B, max_len, dtype)      -> decode cache pytree
+    prefill(params, batch, cache, cfg, ...) -> (last_logits, cache)
+    decode_step(params, tokens, cache, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .config import ATTN_KINDS, ModelConfig
+from .layers import cast_tree, embed, rmsnorm, unembed
+from .rope import mrope_cos_sin, rope_cos_sin, text_positions3
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str, layer_idx: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "mixer": blocks.init_mixer(k1, cfg, kind),
+    }
+    if cfg.num_experts and layer_idx >= cfg.first_k_dense:
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["moe"] = blocks.init_moe(k2, cfg)
+    elif cfg.d_ff:
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ffn"] = blocks.init_ffn(k3, cfg, cfg.d_ff)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    n_pat = len(cfg.block_pattern)
+    n_sb = cfg.n_superblocks
+    keys = jax.random.split(rng, cfg.num_layers + 4)
+    params: dict[str, Any] = {}
+    params["embed"] = (jax.random.truncated_normal(
+        keys[-1], -3, 3, (cfg.vocab_size, cfg.d_model), jnp.float32)
+        * cfg.d_model ** -0.5)
+    if cfg.modality == "audio_stub":
+        params["frontend_proj"] = (jax.random.truncated_normal(
+            keys[-2], -3, 3, (512, cfg.d_model), jnp.float32) * 512 ** -0.5)
+
+    # stacked superblocks: per pattern position, stack n_sb layer trees
+    stacked = []
+    for pos in range(n_pat):
+        per_layer = [
+            _init_block(keys[sb * n_pat + pos], cfg, cfg.block_pattern[pos],
+                        sb * n_pat + pos)
+            for sb in range(n_sb)
+        ]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer))
+    params["blocks"] = stacked
+
+    # remainder layers (unstacked)
+    base = n_sb * n_pat
+    params["rem"] = [
+        _init_block(keys[base + i], cfg, kind, base + i)
+        for i, kind in enumerate(cfg.remainder_pattern)
+    ]
+
+    params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.truncated_normal(
+            keys[-3], -3, 3, (cfg.d_model, cfg.vocab_size), jnp.float32)
+            * cfg.d_model ** -0.5)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def _cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    if kind in ("attn_sliding", "attn_local"):
+        return min(cfg.window, max_len)
+    if kind == "attn_chunked":
+        return min(cfg.chunk_size, max_len)
+    return max_len
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, B: int, max_len: int,
+                      dtype) -> Optional[dict]:
+    if kind in ATTN_KINDS:
+        Sc = _cache_len(cfg, kind, max_len)
+        K, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((B, Sc, K, dh), dtype),
+            "v": jnp.zeros((B, Sc, K, dh), dtype),
+            "pos": jnp.full((Sc,), -1, jnp.int32),
+        }
+    if kind == "ssd":
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "conv": jnp.zeros((B, cfg.ssm_conv - 1, conv_ch), dtype),
+            "state": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim,
+                                cfg.ssm_state), jnp.float32),
+        }
+    if kind == "rglru":
+        W = cfg.resolved_lru_width
+        return {
+            "conv": jnp.zeros((B, cfg.ssm_conv - 1, W), dtype),
+            "h": jnp.zeros((B, W), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    n_sb = cfg.n_superblocks
+    stacked = []
+    for kind in cfg.block_pattern:
+        one = _init_block_cache(cfg, kind, batch, max_len, dtype)
+        stacked.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_sb,) + x.shape), one))
+    rem = [_init_block_cache(cfg, kind, batch, max_len, dtype)
+           for kind in cfg.remainder_pattern]
+    return {"blocks": stacked, "rem": rem, "t": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# forward machinery
+# ---------------------------------------------------------------------------
+
+def _make_ctx(cfg: ModelConfig, positions, positions3, dtype, t,
+              constrain, extra_ctx=None) -> dict:
+    dh = cfg.resolved_head_dim
+    if cfg.pos_type == "mrope":
+        p3 = positions3 if positions3 is not None else text_positions3(positions)
+        cos, sin = mrope_cos_sin(p3, dh, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.pos_type == "rope":
+        cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)
+    else:
+        cos = sin = None
+    ctx = {"cfg": cfg, "cos": cos, "sin": sin, "t": t,
+           "constrain": constrain or (lambda x: x)}
+    if extra_ctx:
+        ctx.update(extra_ctx)
+    return ctx
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig, dtype):
+    if cfg.modality == "audio_stub":
+        # stub frontend: precomputed conv features (B,S,512) -> d_model
+        x = batch["features"].astype(dtype) @ params["frontend_proj"].astype(dtype)
+        return x
+    x = embed(batch["tokens"], params["embed"], dtype)
+    if cfg.modality == "vision_stub" and "vision_embeds" in batch:
+        # early fusion: scatter precomputed patch embeddings over the
+        # placeholder token positions (vision_mask True)
+        ve = batch["vision_embeds"].astype(dtype)       # (B, n_img, D)
+        mask = batch["vision_mask"]                     # (B, S) bool
+        B, S, D = x.shape
+        n_img = ve.shape[1]
+        # positions of the j-th True in each row -> scatter target
+        idx = jnp.argsort(~mask, axis=1, stable=True)[:, :n_img]  # (B,n_img)
+        rows = jnp.arange(B)[:, None]
+        x = x.at[rows, idx].set(
+            jnp.where(jnp.take_along_axis(mask, idx, 1)[..., None], ve,
+                      x[rows, idx]))
+    return x
+
+
+def _run_stack(params, x, cfg: ModelConfig, ctx, cache, *,
+               remat_policy: Optional[str] = None, dtype=jnp.bfloat16,
+               scan_layers: bool = True):
+    """Scan superblocks (+ remainder layers); returns (x, new_cache, aux).
+
+    scan_layers=False unrolls the superblock loop in Python — identical
+    math, one HLO instance per layer.  The dry-run uses this so
+    cost_analysis / collective parsing attribute per-layer work exactly
+    (XLA's cost analysis counts a while body once, not × trip count);
+    production training keeps the scan for compact HLO."""
+    pattern = cfg.block_pattern
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def superblock(x, layer_params, layer_cache):
+        layer_params = cast_tree(layer_params, dtype)
+        new_caches = []
+        aux_sb = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pattern):
+            c = None if layer_cache is None else layer_cache[i]
+            x, nc, aux = blocks.apply_block(kind, layer_params[i], x, ctx, c)
+            new_caches.append(nc)
+            aux_sb = aux_sb + aux
+        return x, tuple(new_caches), aux_sb
+
+    if remat_policy:
+        from repro.parallel.remat import wrap_remat
+        superblock = wrap_remat(superblock, remat_policy)
+
+    n_sb = cfg.n_superblocks
+
+    def sb_slice(tree, i):
+        return jax.tree.map(lambda a: a[i], tree)
+
+    if cache is None:
+        if scan_layers:
+            def body(carry, layer_params):
+                x, aux = carry
+                x, _, aux_sb = superblock(x, layer_params, None)
+                return (x, aux + aux_sb), None
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), tuple(params["blocks"]))
+        else:
+            for i in range(n_sb):
+                x, _, aux_sb = superblock(
+                    x, sb_slice(tuple(params["blocks"]), i), None)
+                aux_total = aux_total + aux_sb
+        new_block_caches = None
+    else:
+        if scan_layers:
+            def body(carry, xs):
+                x, aux = carry
+                layer_params, layer_cache = xs
+                x, ncs, aux_sb = superblock(x, layer_params, layer_cache)
+                return (x, aux + aux_sb), ncs
+            (x, aux_total), new_block_caches = jax.lax.scan(
+                body, (x, aux_total), (tuple(params["blocks"]),
+                                       tuple(cache["blocks"])))
+        else:
+            ncs_all = []
+            for i in range(n_sb):
+                x, ncs, aux_sb = superblock(
+                    x, sb_slice(tuple(params["blocks"]), i),
+                    sb_slice(tuple(cache["blocks"]), i))
+                aux_total = aux_total + aux_sb
+                ncs_all.append(ncs)
+            # restack to match the scanned layout (n_sb leading axis)
+            new_block_caches = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *ncs_all)
+
+    # remainder layers
+    new_rem = []
+    base = cfg.n_superblocks * len(pattern)
+    for i, kind in enumerate(cfg.remainder_pattern):
+        p = cast_tree(params["rem"][i], dtype)
+        c = None if cache is None else cache["rem"][i]
+        x, nc, aux = blocks.apply_block(kind, p, x, ctx, c)
+        new_rem.append(nc)
+        aux_total = aux_total + aux
+
+    if cache is None:
+        return x, None, aux_total
+    new_cache = {"blocks": list(new_block_caches), "rem": new_rem,
+                 "t": cache["t"]}
+    return x, new_cache, aux_total
+
+
+def _head(params, x, cfg: ModelConfig):
+    x = rmsnorm(x, params["final_norm"].astype(x.dtype), eps=cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, table, tied=cfg.tie_embeddings,
+                   softcap=cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params, batch, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+                  remat_policy: Optional[str] = None,
+                  constrain: Optional[Callable] = None,
+                  scan_layers: bool = True, extra_ctx=None):
+    """Full-sequence forward; returns (logits (B,S,V), aux_loss)."""
+    x = _embed_inputs(params, batch, cfg, dtype)
+    B, S = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ctx = _make_ctx(cfg, positions, batch.get("positions3"), dtype,
+                    jnp.zeros((), jnp.int32), constrain, extra_ctx)
+    x, _, aux = _run_stack(params, x, cfg, ctx, None,
+                           remat_policy=remat_policy, dtype=dtype,
+                           scan_layers=scan_layers)
+    return _head(params, x, cfg), aux
+
+
+def prefill(params, batch, cache, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+            constrain: Optional[Callable] = None, extra_ctx=None,
+            scan_layers: bool = True):
+    """Process the prompt, fill the cache, return last-position logits only
+    (never materializes (B,S,V))."""
+    x = _embed_inputs(params, batch, cfg, dtype)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ctx = _make_ctx(cfg, positions, batch.get("positions3"), dtype,
+                    jnp.zeros((), jnp.int32), constrain, extra_ctx)
+    x, new_cache, _ = _run_stack(params, x, cfg, ctx, cache, dtype=dtype,
+                                 scan_layers=scan_layers)
+    new_cache["t"] = jnp.asarray(S, jnp.int32)
+    logits = _head(params, x[:, -1:], cfg)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig, *,
+                dtype=jnp.bfloat16, constrain: Optional[Callable] = None,
+                extra_ctx=None, scan_layers: bool = True):
+    """One decode step: tokens (B,1) int32 -> (logits (B,V), new cache)."""
+    x = embed(tokens, params["embed"], dtype)
+    B = x.shape[0]
+    t = cache["t"]
+    positions = jnp.broadcast_to(t[None, None], (B, 1)).astype(jnp.int32)
+    ctx = _make_ctx(cfg, positions, None, dtype, t, constrain, extra_ctx)
+    x, new_cache, _ = _run_stack(params, x, cfg, ctx, cache, dtype=dtype,
+                                 scan_layers=scan_layers)
+    new_cache["t"] = t + 1
+    logits = _head(params, x, cfg)
+    return logits[:, 0], new_cache
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct tree of the parameters (no allocation) — used by the
+    dry-run."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))

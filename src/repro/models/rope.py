@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (multimodal RoPE, arXiv:2409.12191): the head-dim frequency bands are
+split into (temporal, height, width) sections; each band rotates by the
+corresponding coordinate of the 3-D position id.  Text tokens carry equal
+(t,h,w) ids, so M-RoPE degenerates to RoPE on pure text.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _inv_freq(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions (..., S) int -> cos/sin (..., S, head_dim)."""
+    inv = _inv_freq(head_dim, theta)
+    freqs = positions[..., None].astype(jnp.float32) * inv  # (..., S, half)
+    emb = jnp.concatenate([freqs, freqs], axis=-1)
+    return jnp.cos(emb), jnp.sin(emb)
+
+
+def mrope_cos_sin(positions3: jax.Array, head_dim: int, theta: float,
+                  sections: tuple):
+    """positions3 (3, ..., S) -> cos/sin (..., S, head_dim).
+
+    sections partition the half-dim frequency bands among (t, h, w)."""
+    assert positions3.shape[0] == 3
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = _inv_freq(head_dim, theta)
+    # (3, ..., S, half)
+    freqs = positions3[..., None].astype(jnp.float32) * inv
+    # pick which of t/h/w drives each band
+    band_src = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)
+    freqs = jnp.take_along_axis(
+        freqs, band_src[(None,) * (freqs.ndim - 1)].astype(jnp.int32),
+        axis=0)[0]  # (..., S, half)
+    emb = jnp.concatenate([freqs, freqs], axis=-1)
+    return jnp.cos(emb), jnp.sin(emb)
+
+
+def _rotate_half(x: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, dh); cos/sin (B, S, dh) or (S, dh)."""
+    while cos.ndim < x.ndim:
+        cos = cos[..., None, :] if cos.ndim == x.ndim - 1 else cos[None]
+        sin = sin[..., None, :] if sin.ndim == x.ndim - 1 else sin[None]
+    orig = x.dtype
+    x32 = x.astype(jnp.float32)
+    out = x32 * cos + _rotate_half(x32) * sin
+    return out.astype(orig)
+
+
+def text_positions3(positions: jax.Array) -> jax.Array:
+    """Lift 1-D positions to degenerate (t,h,w) ids for text tokens."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

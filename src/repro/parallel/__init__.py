@@ -1,0 +1,4 @@
+"""repro.parallel — meshes, sharding rules, remat, and distributed steps."""
+from .remat import POLICIES, wrap_remat
+
+__all__ = ["POLICIES", "wrap_remat"]

@@ -1,0 +1,91 @@
+"""Pipeline parallelism over the pod axis (GPipe schedule).
+
+When the `pod` axis is repurposed as a pipeline axis, each pod holds a
+contiguous slice of the superblock stack and microbatches flow through
+`ppermute` ring steps — only (mb, S, D) activations ever cross the slow
+inter-pod links (vs full gradient all-reduce under pod-DP).
+
+Expressed as a shard_map manual over `pod` only: the stacked layer
+parameters (n_superblocks leading axis) are sharded P('pod') so each stage
+receives its local slice; data/model parallelism inside a stage stays
+under GSPMD auto-partitioning.
+
+The schedule below is the forward pipeline (validated for bit-equivalence
+against the sequential stack in tests/test_distribution.py); the training
+integration reuses it under jax.grad — the backward of ppermute is the
+reverse ppermute, which yields the standard GPipe backward schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pp_forward(mesh: Mesh, stage_body: Callable, stacked_params,
+               x_micro: jax.Array, *, axis: str = "pod"):
+    """GPipe forward.
+
+    stage_body(local_params, x) -> x   applies this stage's layer slice
+    stacked_params: pytree with leading n_superblocks axis (sharded P(axis))
+    x_micro: (n_micro, mb, S, D) microbatched embeddings (replicated over
+    the pipeline axis; only stage 0 consumes them)
+    returns (n_micro, mb, S, D) outputs (replicated — psum'd off the last
+    stage).
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x_micro.shape[0]
+    assert n_micro >= n_stages, "need >= n_stages microbatches to fill"
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def local(params_local, xs):
+        stage = jax.lax.axis_index(axis)
+        buf = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+        for t in range(n_micro + n_stages - 1):
+            recv = jax.lax.ppermute(buf, axis, perm)
+            feed = xs[t] if t < n_micro else jnp.zeros_like(xs[0])
+            x_in = jnp.where(stage == 0, feed, recv)
+            buf = stage_body(params_local, x_in)
+            k = t - (n_stages - 1)
+            if k >= 0:
+                outs = outs.at[k].set(
+                    jnp.where(stage == n_stages - 1, buf, outs[k]))
+        # replicate the last stage's outputs to every stage
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)),
+            axis)
+        return outs
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        axis_names={axis}, check_vma=False,
+    )(stacked_params, x_micro)
+
+
+def pp_stage_body(cfg, ctx, dtype):
+    """Builds stage_body for a uniform-pattern decoder (one attn/ssd block
+    per superblock)."""
+    from repro.models import blocks as B
+    from repro.models.layers import cast_tree
+
+    pattern = cfg.block_pattern
+
+    def body(params_local, x):
+        n_local = jax.tree.leaves(params_local)[0].shape[0]
+
+        def one(x, layer_params):
+            layer_params = cast_tree(layer_params, dtype)
+            for i, kind in enumerate(pattern):
+                x, _, _ = B.apply_block(kind, layer_params[i], x, ctx, None)
+            return x, None
+
+        x, _ = jax.lax.scan(one, x, params_local)
+        return x
+
+    return body

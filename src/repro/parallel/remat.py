@@ -1,0 +1,30 @@
+"""Activation-checkpoint (remat) policies for the scanned layer stack.
+
+Policies (hillclimb knobs for the memory roofline term):
+
+    none          — save everything (max memory, min recompute)
+    full          — save nothing (min memory, max recompute)
+    dots          — save matmul outputs (jax's dots_saveable)
+    dots_no_batch — dots_with_no_batch_dims_saveable (Megatron-style
+                    'selective' checkpointing: saves projections, recomputes
+                    attention/softmax)
+"""
+from __future__ import annotations
+
+import jax
+
+POLICIES = ("none", "full", "dots", "dots_no_batch")
+
+
+def wrap_remat(fn, policy: str):
+    if policy in (None, "none"):
+        return fn
+    cp = jax.checkpoint_policies
+    if policy == "full":
+        return jax.checkpoint(fn, policy=cp.nothing_saveable,
+                              static_argnums=())
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=cp.dots_saveable)
+    if policy == "dots_no_batch":
+        return jax.checkpoint(fn, policy=cp.dots_with_no_batch_dims_saveable)
+    raise ValueError(f"unknown remat policy {policy!r}; options {POLICIES}")

@@ -1,0 +1,261 @@
+"""Sharding rules: parameter, optimizer-state, batch, and cache
+PartitionSpecs for every architecture on the production meshes.
+
+Mesh axes:
+    pod    — slowest links (DCN/inter-pod ICI).  Data-parallel by default;
+             only gradient all-reduce crosses it (optionally compressed).
+    data   — intra-pod data parallelism (+ ZeRO-1 optimizer sharding).
+    model  — tensor/expert parallelism.
+
+Rules are Megatron-style:
+    attn  : wq/wk/wv column-parallel (heads on model), wo row-parallel
+    ffn   : gate/up column-parallel, down row-parallel
+    moe   : experts on model (EP); shared expert like ffn
+    rglru : width on model
+    embed : vocab-sharded; lm_head vocab-sharded (column)
+    ssd   : replicated (mamba2-130m is small; TP of the mixed in_proj
+            layout is not worth it — DESIGN.md §4)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel meta-axis: ('pod','data') on multi-pod meshes."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % _axis_size(mesh, axis) == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _param_rule(path: tuple[str, ...], shape: tuple[int, ...],
+                cfg: ModelConfig, mesh: Mesh,
+                replicate_embed: bool = False) -> P:
+    """path: names along the pytree (superblock stacking prepends a leading
+    axis to every block leaf — handled by the caller offset)."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    m = "model"
+
+    def ok(dim_size):  # only shard when divisible
+        return dim_size % _axis_size(mesh, m) == 0
+
+    # embeddings / head
+    if name == "embed":
+        # replicate_embed: gathers on a sharded operand dim CHECK-fail in
+        # XLA's SPMD partitioner inside partial-manual (pod-compress)
+        # regions — replicated tables sidestep the bug at a memory cost
+        if replicate_embed:
+            return P(None, None)
+        return P(m, None) if ok(shape[0]) else P()
+    if name == "lm_head":
+        return P(None, m) if ok(shape[1]) else P()
+    if name == "frontend_proj":
+        return P(None, m) if ok(shape[1]) else P()
+
+    # attention
+    if name in ("wq", "wk", "wv"):
+        return P(None, m) if ok(shape[-1]) else P(None, None)
+    if name in ("bq", "bk", "bv"):
+        return P(m) if ok(shape[-1]) else P(None)
+    if name == "wo":
+        return P(m, None) if ok(shape[-2]) else P(None, None)
+
+    # dense ffn / shared expert
+    if parent in ("ffn", "shared"):
+        if name in ("gate", "up"):
+            return P(None, m) if ok(shape[-1]) else P(None, None)
+        if name == "down":
+            return P(m, None) if ok(shape[-2]) else P(None, None)
+
+    # moe experts: EP on model
+    if name in ("w_gate", "w_up", "w_down"):
+        return (P(m, None, None) if ok(shape[-3]) else P(None, None, None))
+    if name == "router":
+        return P(None, None)
+
+    # rglru
+    if name in ("in_x", "in_gate"):
+        return P(None, m) if ok(shape[-1]) else P(None, None)
+    if name in ("a_gate_w", "x_gate_w"):
+        return P(m, None, None) if ok(shape[-3]) else P(None, None, None)
+    if name in ("a_gate_b", "x_gate_b"):
+        return P(m, None) if ok(shape[-2]) else P(None, None)
+    if name == "a_param":
+        return P(m) if ok(shape[-1]) else P(None)
+    if name == "out":
+        return P(m, None) if ok(shape[-2]) else P(None, None)
+    if name in ("conv_w", "conv_b") and parent != "mixer":
+        pass
+
+    # ssd (mamba2): replicate — see module docstring
+    # norms, scalars, conv taps: replicate
+    return P(*([None] * len(shape)))
+
+
+def _path_names(kp) -> tuple[str, ...]:
+    names = []
+    for e in kp:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"[{e.idx}]")
+    return tuple(names)
+
+
+def param_pspecs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                 *, replicate_embed: bool = False):
+    """params_shape: pytree of ShapeDtypeStruct (or arrays)."""
+    def rule(kp, leaf):
+        names = _path_names(kp)
+        shape = tuple(leaf.shape)
+        # stacked superblock leaves carry a leading n_superblocks axis
+        stacked = len(names) >= 1 and names[0] == "blocks"
+        core_shape = shape[1:] if stacked else shape
+        spec = _param_rule(tuple(n for n in names if not n.startswith("[")),
+                           core_shape, cfg, mesh,
+                           replicate_embed=replicate_embed)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def zero1_specs(param_specs, params_shape, mesh: Mesh):
+    """ZeRO-1: extend each spec by sharding the largest unsharded dim over
+    'data' when divisible (optimizer moments + master copy only)."""
+    dsize = _axis_size(mesh, "data")
+    if dsize == 1:
+        return param_specs
+
+    def extend(spec: P, leaf):
+        shape = tuple(leaf.shape)
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        # pick the largest dim that is unsharded and divisible by data
+        cand = [(shape[i], i) for i in range(len(shape))
+                if parts[i] is None and shape[i] % dsize == 0 and shape[i] > 1]
+        if not cand:
+            return spec
+        _, i = max(cand)
+        parts[i] = "data"
+        return P(*parts)
+
+    return jax.tree.map(extend, param_specs, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ModelConfig, batch_shape: dict, mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        nb = v.shape[0] if v.ndim else 1
+        lead = dp if nb % int(np.prod([_axis_size(mesh, a) for a in dp])) == 0 \
+            else None
+        out[k] = P(lead, *([None] * (v.ndim - 1)))
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh,
+                 *, seq_axes: tuple = ()):
+    """Decode-cache specs.  KV layout (B, Sc, K, dh) (+ leading superblock
+    axis when stacked).  Batch on dp when divisible; kv-heads on model when
+    divisible, else the sequence dim over ``seq_axes`` (distributed
+    flash-decode handles the softmax)."""
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    msize = _axis_size(mesh, "model")
+    seq_total = int(np.prod([_axis_size(mesh, a) for a in seq_axes])) \
+        if seq_axes else 1
+
+    def rule(kp, leaf):
+        names = _path_names(kp)
+        name = names[-1]
+        shape = tuple(leaf.shape)
+        stacked = names[0] == "blocks"
+        core = shape[1:] if stacked else shape
+        if name in ("k", "v"):
+            B, Sc, K, dh = core
+            bspec = dp if B % dp_total == 0 and B > 1 else None
+            if K % msize == 0:
+                spec = P(bspec, None, "model", None)
+            elif seq_axes and Sc % seq_total == 0:
+                sa = tuple(a for a in seq_axes if bspec is None or a not in bspec)
+                spec = P(bspec, sa, None, None)
+            else:
+                spec = P(bspec, None, None, None)
+        elif name == "pos":
+            if seq_axes and core[0] % seq_total == 0:
+                spec = P(tuple(seq_axes))
+            else:
+                spec = P(None)
+        elif name == "conv":
+            B = core[0]
+            bspec = dp if B % dp_total == 0 and B > 1 else None
+            spec = P(bspec, *([None] * (len(core) - 1)))
+        elif name in ("state", "h"):
+            B = core[0]
+            bspec = dp if B % dp_total == 0 and B > 1 else None
+            spec = P(bspec, *([None] * (len(core) - 1)))
+        elif name == "t":
+            spec = P()
+        else:
+            spec = P(*([None] * len(core)))
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def make_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_constrainer(mesh: Mesh, mode: str = "dp", exclude=()):
+    """Activation sharding hook threaded into the model (ctx['constrain']).
+
+    dp     — batch-only (B on dp)
+    dp_sp  — sequence parallelism: residual stream also sharded on model
+             along the sequence dim (norm/elementwise regions)
+    exclude — axes not mentionable (e.g. 'pod' inside a pod-manual
+              shard_map region)."""
+    dp = tuple(a for a in dp_axes(mesh) if a not in exclude)
+
+    def constrain(x):
+        if x.ndim < 3:
+            return x
+        if mode == "dp_sp":
+            spec = P(dp, "model", None)
+        else:
+            spec = P(dp, None, None)
+        try:
+            # a raw PartitionSpec resolves against the *context* mesh, which
+            # keeps this valid inside partial-manual shard_map regions
+            return jax.lax.with_sharding_constraint(x, spec)
+        except (ValueError, TypeError):
+            try:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, spec))
+            except (ValueError, TypeError):
+                return x
+    return constrain

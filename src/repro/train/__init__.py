@@ -1,0 +1,7 @@
+from .steps import (TrainConfig, make_decode_step, make_encode_step,
+                    make_eval_step, make_prefill_step, make_train_step,
+                    serve_shardings, train_shardings)
+
+__all__ = ["TrainConfig", "make_decode_step", "make_encode_step",
+           "make_eval_step", "make_prefill_step", "make_train_step",
+           "serve_shardings", "train_shardings"]

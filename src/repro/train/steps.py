@@ -1,0 +1,220 @@
+"""Step builders: training (fwd+bwd+AdamW) and serving (prefill / decode).
+
+These are the functions the launcher jits with explicit in/out shardings;
+the dry-run lowers exactly these.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import (ModelConfig, cross_entropy, decode_step,
+                          forward_train, prefill)
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.parallel.sharding import (activation_constrainer, batch_pspecs,
+                                     cache_pspecs, dp_axes, make_shardings,
+                                     param_pspecs, zero1_specs)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    dtype: Any = jnp.bfloat16
+    remat_policy: str = "dots_no_batch"
+    activation_mode: str = "dp"         # "dp" | "dp_sp"
+    z_loss: float = 1e-4
+    peak_lr: float = 3e-4
+    adamw: AdamWConfig = field(default_factory=AdamWConfig)
+    zero1: bool = True
+    pod_grad_compress: bool = False      # int8 cross-pod gradient psum
+    scan_layers: bool = True             # False: unrolled (dry-run analysis)
+    loss_dtype: Any = jnp.float32        # bfloat16: skip fp32 logits pass
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    tc: TrainConfig = TrainConfig()) -> Callable:
+    pod_manual = tc.pod_grad_compress and "pod" in mesh.axis_names
+    constrain = activation_constrainer(
+        mesh, tc.activation_mode, exclude=("pod",) if pod_manual else ())
+
+    def step_body(params, opt, batch, lr, grad_sync=None):
+        def loss_fn(p):
+            logits, aux = forward_train(
+                p, batch, cfg, dtype=tc.dtype, remat_policy=tc.remat_policy,
+                constrain=constrain, scan_layers=tc.scan_layers)
+            labels = batch["labels"]
+            loss, denom = cross_entropy(logits, labels,
+                                        batch.get("loss_mask"),
+                                        z_loss=tc.z_loss,
+                                        compute_dtype=tc.loss_dtype)
+            total = loss + cfg.router_aux_coef * aux
+            return total, (loss, aux)
+
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if grad_sync is not None:
+            grads, loss, aux, total = grad_sync(grads, loss, aux, total)
+        new_params, new_opt, om = adamw_update(grads, opt, params, lr,
+                                               tc.adamw)
+        metrics = {"loss": loss, "aux_loss": aux, "total_loss": total,
+                   "grad_norm": om["grad_norm"], "lr": lr}
+        return new_params, new_opt, metrics
+
+    if not pod_manual:
+        def train_step(params, opt, batch, lr):
+            return step_body(params, opt, batch, lr)
+        return train_step
+
+    # --- compressed cross-pod DP: shard_map over 'pod' only; data/model
+    # stay under GSPMD auto-partitioning inside the region -----------------
+    from repro.parallel.compress import compressed_grad_psum
+    n_pods = mesh.shape["pod"]
+
+    def pod_body(params, opt, batch, lr):
+        def sync(grads, loss, aux, total):
+            grads = compressed_grad_psum(grads, "pod", n_pods)
+            loss = jax.lax.pmean(loss, "pod")
+            aux = jax.lax.pmean(aux, "pod")
+            total = jax.lax.pmean(total, "pod")
+            return grads, loss, aux, total
+        return step_body(params, opt, batch, lr, grad_sync=sync)
+
+    def train_step(params, opt, batch, lr):
+        batch_specs = {k: P("pod", *([None] * (v.ndim - 1)))
+                       for k, v in batch.items()}
+        return jax.shard_map(
+            pod_body, mesh=mesh,
+            in_specs=(P(), P(), batch_specs, P()),
+            out_specs=(P(), P(), P()),
+            axis_names={"pod"}, check_vma=False,
+        )(params, opt, batch, lr)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, mesh: Mesh,
+                   tc: TrainConfig = TrainConfig()) -> Callable:
+    constrain = activation_constrainer(mesh, tc.activation_mode)
+
+    def eval_step(params, batch):
+        logits, _ = forward_train(params, batch, cfg, dtype=tc.dtype,
+                                  constrain=constrain)
+        loss, _ = cross_entropy(logits, batch["labels"],
+                                batch.get("loss_mask"))
+        return {"loss": loss}
+
+    return eval_step
+
+
+def make_encode_step(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16,
+                     scan_layers: bool = True) -> Callable:
+    """Encoder-only forward (hubert prefill_32k): embeddings -> logits."""
+    constrain = activation_constrainer(mesh, "dp")
+
+    def encode_step(params, batch):
+        logits, _ = forward_train(params, batch, cfg, dtype=dtype,
+                                  constrain=constrain,
+                                  scan_layers=scan_layers)
+        return logits
+
+    return encode_step
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def serve_extra_ctx(cfg: ModelConfig, mesh: Mesh, batch: int,
+                    max_len: int) -> dict:
+    """Decide KV-cache sequence sharding (-> distributed flash-decode).
+
+    Heads shard on 'model' when divisible; otherwise the cache sequence dim
+    is sharded — over 'model' only (batch still on dp) or over
+    (data, model) when the batch itself is unshardable (long-context B=1)."""
+    msize = mesh.shape.get("model", 1)
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    extra: dict = {"mesh": mesh}
+    if cfg.num_kv_heads % msize == 0:
+        return extra  # head-sharded KV; no seq sharding needed
+    if batch % dp_total == 0 and batch > 1:
+        if max_len % msize == 0:
+            extra["kv_seq_axes"] = ("model",)
+            extra["kv_batch_axes"] = dp
+    else:
+        axes = tuple(dp) + ("model",)
+        tot = dp_total * msize
+        if max_len % tot == 0:
+            extra["kv_seq_axes"] = axes
+    return extra
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, *, batch: int,
+                      max_len: int, dtype=jnp.bfloat16,
+                      scan_layers: bool = True) -> Callable:
+    constrain = activation_constrainer(mesh, "dp")
+    extra = serve_extra_ctx(cfg, mesh, batch, max_len)
+
+    def prefill_step(params, batch_in, cache):
+        return prefill(params, batch_in, cache, cfg, dtype=dtype,
+                       constrain=constrain, extra_ctx=extra,
+                       scan_layers=scan_layers)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch: int,
+                     max_len: int, dtype=jnp.bfloat16,
+                     sample: bool = False, scan_layers: bool = True) -> Callable:
+    constrain = activation_constrainer(mesh, "dp")
+    extra = serve_extra_ctx(cfg, mesh, batch, max_len)
+
+    def serve_step(params, tokens, cache):
+        logits, cache = decode_step(params, tokens, cache, cfg, dtype=dtype,
+                                    constrain=constrain, extra_ctx=extra,
+                                    scan_layers=scan_layers)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding bundles (used by launcher, dry-run and checkpoint reshard)
+# ---------------------------------------------------------------------------
+
+def train_shardings(cfg: ModelConfig, mesh: Mesh, params_shape, batch_shape,
+                    *, zero1: bool = True, replicate_embed: bool = False):
+    pspecs = param_pspecs(cfg, params_shape, mesh,
+                          replicate_embed=replicate_embed)
+    opt_shape = jax.eval_shape(init_opt_state, params_shape)
+    mv_specs = zero1_specs(pspecs, params_shape, mesh) if zero1 else pspecs
+    opt_specs = {"m": mv_specs, "v": mv_specs, "count": P()}
+    bspecs = batch_pspecs(cfg, batch_shape, mesh)
+    return {
+        "params": make_shardings(mesh, pspecs),
+        "opt": make_shardings(mesh, opt_specs),
+        "batch": make_shardings(mesh, bspecs),
+        "pspecs": pspecs,
+        "opt_specs": opt_specs,
+        "batch_specs": bspecs,
+    }
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, params_shape, cache_shape,
+                    batch: int, max_len: int):
+    pspecs = param_pspecs(cfg, params_shape, mesh)
+    extra = serve_extra_ctx(cfg, mesh, batch, max_len)
+    cspecs = cache_pspecs(cfg, cache_shape, mesh,
+                          seq_axes=extra.get("kv_seq_axes", ()))
+    return {
+        "params": make_shardings(mesh, pspecs),
+        "cache": make_shardings(mesh, cspecs),
+        "pspecs": pspecs,
+        "cache_specs": cspecs,
+    }

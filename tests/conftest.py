@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests must see the real single CPU device (the 512-device override is
+# exclusively dryrun.py's), and run kernels against their jnp refs unless a
+# test opts into interpret mode explicitly.
+os.environ.setdefault("REPRO_KERNELS", "jnp")

@@ -1,0 +1,225 @@
+"""Unit tests: CannyFS engine semantics (paper §2–§3)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (CannyFS, EagerFlags, EnginePoisonedError,
+                        InMemoryBackend, LatencyBackend, LatencyModel,
+                        Transaction, TransactionFailedError, run_transaction)
+
+
+def make_fs(**kw):
+    be = InMemoryBackend()
+    fs = CannyFS(be, **kw)
+    return be, fs
+
+
+def test_eager_ack_is_fast_and_correct():
+    be = InMemoryBackend()
+    lat = LatencyBackend(be, LatencyModel(meta_ms=5.0, data_ms=5.0,
+                                          jitter_sigma=0.0))
+    fs = CannyFS(lat, max_inflight=1000, workers=16)
+    t0 = time.monotonic()
+    fs.mkdir("d")
+    fs.write_file("d/a", b"hello")
+    ack = time.monotonic() - t0
+    assert ack < 0.05, f"eager ops should ACK instantly, took {ack:.3f}s"
+    fs.close()
+    assert be.snapshot()["files"]["d/a"] == b"hello"
+
+
+def test_read_after_write_barrier():
+    be, fs = make_fs()
+    fs.mkdir("x")
+    for i in range(20):
+        fs.write_file(f"x/f{i}", bytes([i]) * (i + 1))
+    # reads see every previously ACKed write
+    for i in range(20):
+        assert fs.read_file(f"x/f{i}") == bytes([i]) * (i + 1)
+    fs.close()
+
+
+def test_per_path_write_ordering():
+    be, fs = make_fs()
+    fs.create("f")
+    with fs.open("f", "wb") as h:
+        for i in range(50):
+            h.write(bytes([i]))
+    assert fs.read_file("f") == bytes(range(50))
+    fs.close()
+
+
+def test_rename_and_readdir_order():
+    be, fs = make_fs()
+    fs.mkdir("d")
+    fs.write_file("d/a", b"1")
+    fs.rename("d/a", "d/b")
+    names = fs.readdir("d")
+    assert names == ["b"]
+    assert fs.read_file("d/b") == b"1"
+    fs.close()
+
+
+def test_rmtree_waits_children():
+    be, fs = make_fs()
+    fs.makedirs("t/u/v")
+    for i in range(30):
+        fs.write_file(f"t/u/v/f{i}", b"x")
+    fs.rmtree("t")
+    fs.drain()
+    snap = be.snapshot()
+    assert snap["files"] == {}
+    assert snap["dirs"] == {""}
+    assert len(fs.ledger) == 0, fs.ledger.entries()
+    fs.close()
+
+
+def test_budget_blocks_submitter():
+    be = InMemoryBackend()
+    lat = LatencyBackend(be, LatencyModel(meta_ms=3.0, jitter_sigma=0.0))
+    fs = CannyFS(lat, max_inflight=4, workers=2)
+    for i in range(20):
+        fs.create(f"f{i}")
+    assert fs.engine.stats.max_queue_depth <= 4
+    fs.close()
+
+
+def test_mock_stat_from_pending_writes():
+    be = InMemoryBackend()
+    lat = LatencyBackend(be, LatencyModel(meta_ms=10.0, jitter_sigma=0.0))
+    fs = CannyFS(lat, workers=4)
+    fs.mkdir("m")
+    fs.write_file("m/a", b"12345")
+    t0 = time.monotonic()
+    st = fs.stat("m/a")          # served from write-through cache
+    assert time.monotonic() - t0 < 0.01
+    assert st.exists and st.size == 5 and st.mocked
+    fs.close()
+
+
+def test_negative_stat_after_unlink():
+    be, fs = make_fs()
+    fs.write_file("z", b"1")
+    fs.unlink("z")
+    assert not fs.exists("z")
+    fs.close()
+
+
+def test_deferred_error_lands_in_ledger():
+    class Bad(InMemoryBackend):
+        def write_at(self, p, o, d):
+            if "bad" in p:
+                raise OSError(28, "no space")
+            return super().write_at(p, o, d)
+
+    fs = CannyFS(Bad())
+    fs.write_file("ok", b"1")
+    fs.write_file("bad", b"2")
+    fs.drain()
+    assert len(fs.ledger) == 1
+    assert fs.ledger.entries()[0].kind == "write"
+    fs.close()
+
+
+def test_abort_on_error_poisons_engine():
+    class Bad(InMemoryBackend):
+        def create(self, p):
+            if p == "bad":
+                raise PermissionError(p)
+            super().create(p)
+
+    fs = CannyFS(Bad(), abort_on_error=True)
+    fs.create("bad")
+    fs.drain()
+    with pytest.raises(EnginePoisonedError):
+        for i in range(100):
+            fs.create(f"later{i}")   # must fail fast once poisoned
+    fs.engine.reset_poison()
+    fs.close()
+
+
+def test_transaction_commit_clean():
+    be, fs = make_fs()
+    with Transaction(fs) as txn:
+        fs.mkdir("out")
+        fs.write_file("out/r", b"result")
+    assert txn.committed
+    assert be.snapshot()["files"]["out/r"] == b"result"
+    fs.close()
+
+
+def test_transaction_rollback_removes_outputs():
+    class Bad(InMemoryBackend):
+        def write_at(self, p, o, d):
+            if "bad" in p:
+                raise OSError(122, "quota")
+            return super().write_at(p, o, d)
+
+    be = Bad()
+    fs = CannyFS(be)
+    txn = Transaction(fs)
+    with pytest.raises(TransactionFailedError):
+        with txn:
+            fs.makedirs("out/deep")
+            fs.write_file("out/deep/ok", b"1")
+            fs.write_file("out/bad", b"2")
+    txn.rollback()
+    snap = be.snapshot()
+    assert "out" not in snap["dirs"] and snap["files"] == {}
+    fs.close()
+
+
+def test_run_transaction_retries_until_success():
+    attempts = []
+
+    class Flaky(InMemoryBackend):
+        def write_at(self, p, o, d):
+            if p == "out/flaky" and len(attempts) < 2:
+                attempts.append(1)
+                raise OSError(5, "io error")
+            return super().write_at(p, o, d)
+
+    be = Flaky()
+    fs = CannyFS(be)
+
+    def job(fs):
+        fs.makedirs("out")
+        fs.write_file("out/flaky", b"eventually")
+
+    run_transaction(fs, job, retries=3)
+    assert be.snapshot()["files"]["out/flaky"] == b"eventually"
+    assert len(attempts) == 2
+    fs.close()
+
+
+def test_thread_per_op_executor_mode():
+    be, fs_kw = InMemoryBackend(), {}
+    fs = CannyFS(be, executor="thread_per_op", workers=1)
+    fs.mkdir("d")
+    for i in range(20):
+        fs.write_file(f"d/f{i}", b"v")
+    fs.close()
+    assert len(be.snapshot()["files"]) == 20
+
+
+def test_concurrent_submitters():
+    be, fs = make_fs(workers=8)
+    fs.mkdir("c")
+
+    def writer(k):
+        for i in range(25):
+            fs.write_file(f"c/t{k}_{i}", bytes([k, i]))
+
+    threads = [threading.Thread(target=writer, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fs.drain()
+    snap = be.snapshot()
+    assert len(snap["files"]) == 100
+    for k in range(4):
+        for i in range(25):
+            assert snap["files"][f"c/t{k}_{i}"] == bytes([k, i])
+    fs.close()

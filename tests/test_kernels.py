@@ -1,0 +1,193 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs the pure-jnp
+oracle in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (2, 17, 256), (3, 100, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), shape[-1:], jnp.float32)
+    got = rmsnorm_pallas(x, s, interpret=True)
+    want = rmsnorm_ref(x, s)
+    assert got.dtype == want.dtype
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    **tol(dtype))
+
+
+def test_rmsnorm_residual_fusion():
+    from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 33, 128))
+    r = jax.random.normal(jax.random.PRNGKey(1), (4, 33, 128))
+    s = jnp.ones((128,))
+    got = rmsnorm_pallas(x, s, residual=r, interpret=True)
+    want = rmsnorm_ref(x, s, residual=r)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,K,dh", [
+    (1, 256, 4, 4, 128),     # MHA
+    (2, 512, 8, 2, 128),     # GQA 4:1
+    (1, 256, 4, 1, 128),     # MQA
+    (1, 256, 2, 2, 256),     # big head dim (recurrentgemma-like)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, S, H, K, dh, dtype):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import mha_ref
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, dh), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = mha_ref(q, k, v, causal=True)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    **tol(dtype))
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=False),
+    dict(causal=True, window=100),
+    dict(causal=True, window=512),    # window > S: degenerates to causal
+    dict(causal=True, chunk=128),
+    dict(causal=True, chunk=256),
+])
+def test_flash_attention_masks(kwargs):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import mha_ref
+    B, S, H, K, dh = 1, 512, 4, 2, 128
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, K, dh))
+    v = jax.random.normal(ks[2], (B, S, K, dh))
+    got = flash_attention_pallas(q, k, v, interpret=True, **kwargs)
+    want = mha_ref(q, k, v, **kwargs)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_attention_matches_ref():
+    from repro.kernels.flash_attention.ref import mha_blocked, mha_ref
+    B, S, H, K, dh = 1, 2048, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, K, dh))
+    v = jax.random.normal(ks[2], (B, S, K, dh))
+    for kw in (dict(causal=True), dict(causal=True, window=300),
+               dict(causal=True, chunk=1024), dict(causal=False)):
+        got = mha_blocked(q, k, v, block_q=1024, **kw)
+        want = mha_ref(q, k, v, **kw)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                        atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (1, 128, 2, 64, 1, 64, 64),
+    (2, 256, 3, 64, 1, 128, 128),
+    (1, 256, 4, 32, 2, 64, 128),      # grouped B/C
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(B, S, H, P, G, N, chunk, dtype):
+    from repro.kernels.ssd.kernel import ssd_pallas
+    from repro.kernels.ssd.ref import ssd_chunked, ssd_sequential
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = (jax.random.normal(ks[3], (B, S, G, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, G, N)) * 0.3).astype(dtype)
+    D = jax.random.normal(ks[5], (H,))
+    want = ssd_sequential(x, dt, A, Bm, Cm, D)
+    got_chunked = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+    got_pallas = ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    t = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-3, atol=2e-3)
+    assert_allclose(np.asarray(got_chunked, np.float32),
+                    np.asarray(want, np.float32), **t)
+    assert_allclose(np.asarray(got_pallas, np.float32),
+                    np.asarray(want, np.float32), **t)
+
+
+def test_ssd_decode_step_matches_scan():
+    from repro.kernels.ssd.ref import ssd_decode_step, ssd_sequential
+    B, S, H, P, G, N = 1, 16, 2, 32, 1, 64
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    D = jax.random.normal(ks[5], (H,))
+    want = ssd_sequential(x, dt, A, Bm, Cm, D)
+    state = jnp.zeros((B, H, P, N))
+    for t in range(S):
+        state, y = ssd_decode_step(state, x[:, t], dt[:, t], A, Bm[:, t],
+                                   Cm[:, t], D)
+        assert_allclose(np.asarray(y), np.asarray(want[:, t]), rtol=1e-4,
+                        atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W,t_blk", [
+    (1, 128, 128, 128), (2, 256, 256, 128), (1, 384, 128, 128),
+])
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_rglru_sweep(B, S, W, t_blk, with_h0):
+    from repro.kernels.rglru.kernel import rglru_pallas
+    from repro.kernels.rglru.ref import rglru_assoc, rglru_sequential
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    la = -jax.nn.softplus(jax.random.normal(ks[0], (B, S, W)))
+    gx = jax.random.normal(ks[1], (B, S, W))
+    h0 = jax.random.normal(ks[2], (B, W)) if with_h0 else None
+    y_seq, h_seq = rglru_sequential(la, gx, h0)
+    y_assoc, _ = rglru_assoc(la, gx, h0)
+    y_pal, h_pal = rglru_pallas(la, gx, h0, t_blk=t_blk, interpret=True)
+    assert_allclose(np.asarray(y_assoc), np.asarray(y_seq), rtol=1e-4,
+                    atol=1e-4)
+    assert_allclose(np.asarray(y_pal), np.asarray(y_seq), rtol=1e-4,
+                    atol=1e-4)
+    assert_allclose(np.asarray(h_pal), np.asarray(h_seq), rtol=1e-4,
+                    atol=1e-4)
+
+
+def test_rglru_gates_block_diagonal():
+    from repro.kernels.rglru.ref import rglru_gates
+    B, S, W, Hb = 1, 8, 64, 4
+    bw = W // Hb
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    p = {"a_gate_w": jax.random.normal(ks[0], (Hb, bw, bw)) * 0.1,
+         "a_gate_b": jnp.zeros((Hb, bw)),
+         "x_gate_w": jax.random.normal(ks[1], (Hb, bw, bw)) * 0.1,
+         "x_gate_b": jnp.zeros((Hb, bw)),
+         "a_param": jnp.ones((W,))}
+    x = jax.random.normal(ks[2], (B, S, W))
+    log_a, gx = rglru_gates(x, p)
+    assert log_a.shape == (B, S, W) and gx.shape == (B, S, W)
+    assert np.all(np.asarray(log_a) <= 0), "decay must be <= 1"
