@@ -159,6 +159,32 @@ def rw_switch() -> list:
     return rows
 
 
+def fault_recovery() -> list:
+    """The paper's error-path story (§1/§4): a theoretically possible I/O
+    error "will frequently warrant the resubmission of a full job" — so the
+    cost of eagerness under faults is (rollback + resubmit) time, which
+    should still beat a synchronous run that pays latency on every op.
+
+    Runs the chaos extract+rmtree workload with real (slept) latency so the
+    eager-vs-synchronous wall-time gap is measurable, and reports retries
+    and injected/deferred error counts per {fault rate x eagerness} cell."""
+    from .fault_sweep import run_chaos_config
+    rows = []
+    for rate in (0.0, 0.01, 0.05):
+        for eager in (True, False):
+            r = run_chaos_config(fault_rate=rate, eager=eager, seed=0,
+                                 virtual=False)
+            name = f"faults/rate{rate:g}/{'cannyfs' if eager else 'direct'}"
+            rows.append((name, f"{r['wall_s'] * 1e6:.0f}",
+                         f"wall={r['wall_s']:.2f}s;"
+                         f"retries={r['retries']};"
+                         f"rollbacks={r['rollbacks']};"
+                         f"injected={r['injected_faults']};"
+                         f"deferred={r['deferred_errors']};"
+                         f"committed={r['committed']}"))
+    return rows
+
+
 def variance_under_load(replicates: int = 6) -> list:
     """Fig 2/4's variance story: time spread under jittery load."""
     spec = TreeSpec(n_files=250, n_dirs=20).scaled()

@@ -60,13 +60,16 @@ def synth_tree(spec: TreeSpec):
 
 
 def make_remote_backend(load: float = 1.0, seed: int = 0,
-                        jitter: float = 0.45):
-    """The paper's NFS-over-GbE under cluster load."""
+                        jitter: float = 0.45, clock=None):
+    """The paper's NFS-over-GbE under cluster load.  Pass
+    ``clock=VirtualClock()`` to replay the same latency schedule without
+    real sleeps (fault/chaos benchmarks and CI-budget runs)."""
     return LatencyBackend(
         InMemoryBackend(),
         LatencyModel(meta_ms=1.5, data_ms=1.5, bandwidth_mb_s=110.0,
                      jitter_sigma=jitter, server_slots=64, load=load,
-                     seed=seed))
+                     seed=seed),
+        clock=clock)
 
 
 # ---------------------------------------------------------------------------

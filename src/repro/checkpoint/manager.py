@@ -28,8 +28,12 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core import CannyFS, norm_path
-from repro.core.errors import TransactionFailedError
+from repro.core import CannyFS, is_under, norm_path
+from repro.core.errors import CannyError
+
+# ledger kinds that cannot be a checkpoint write failure — a failed or
+# cancelled readdir-prefetch stat on the step dir must not condemn a save
+_READ_KINDS = frozenset({"stat", "readdir", "read", "readlink"})
 
 from .serialization import (flatten_for_save, manifest_bytes, parse_manifest,
                             unflatten_from)
@@ -44,6 +48,7 @@ class SaveResult:
     directory: str
     ok: bool = False
     error: Optional[str] = None
+    gc_error: Optional[str] = None   # GC hiccup after a durable commit
     ack_s: float = 0.0        # time the train loop was blocked
     commit_s: float = 0.0     # background time to durable commit
     bytes: int = 0
@@ -58,14 +63,38 @@ class TransactionalCheckpointManager:
         self._lock = threading.Lock()
         self._finalizer: Optional[threading.Thread] = None
         self._results: list[SaveResult] = []
-        if not fs.exists(self.dir):
-            fs.makedirs(self.dir)
+        # steps whose COMMIT this manager validated or wrote itself —
+        # lets _gc use the validated list without re-reading markers
+        self._committed_cache: set[int] = set()
+        with fs.detached():   # the ckpt root is not any transaction's output
+            if not fs.exists(self.dir):
+                fs.makedirs(self.dir)
         self.rollback_uncommitted()
 
     # ------------------------------------------------------------------
 
     def _step_dir(self, step: int) -> str:
         return f"{self.dir}/step_{step:010d}"
+
+    def _is_committed(self, step: int) -> bool:
+        """A COMMIT marker is only trusted if its content names the step —
+        an empty/partial marker (write faulted after create) is not a
+        commit.  Only a *missing* marker means uncommitted; any other read
+        error propagates — treating a transient EIO as 'not committed'
+        would let startup recovery delete a durable checkpoint."""
+        if step in self._committed_cache:
+            return True
+        try:
+            data = self.fs.read_file(f"{self._step_dir(step)}/{COMMIT_FILE}")
+        except FileNotFoundError:
+            return False
+        try:
+            ok = int(data.decode()) == step
+        except (ValueError, UnicodeDecodeError):
+            return False
+        if ok:
+            self._committed_cache.add(step)
+        return ok
 
     def list_steps(self, *, committed_only: bool = True) -> list[int]:
         steps = []
@@ -76,8 +105,7 @@ class TransactionalCheckpointManager:
                 step = int(name.split("_", 1)[1])
             except ValueError:
                 continue
-            if committed_only and not self.fs.exists(
-                    f"{self.dir}/{name}/{COMMIT_FILE}"):
+            if committed_only and not self._is_committed(step):
                 continue
             steps.append(step)
         return sorted(steps)
@@ -86,13 +114,25 @@ class TransactionalCheckpointManager:
         """Startup recovery: delete any checkpoint without a COMMIT marker
         (the paper's 'roll back the failed transaction')."""
         rolled = []
+        removed_dirs = []
         committed = set(self.list_steps(committed_only=True))
-        for step in self.list_steps(committed_only=False):
-            if step not in committed:
-                self.fs.rmtree(self._step_dir(step))
-                rolled.append(step)
-        if rolled:
-            self.fs.drain()
+        with self.fs.detached():
+            for step in self.list_steps(committed_only=False):
+                if step not in committed:
+                    d = self._step_dir(step)
+                    self.fs.rmtree(d)
+                    rolled.append(step)
+                    removed_dirs.append(d)
+            if rolled:
+                self.fs.drain()
+                # drop the removals' own deferred errors (already echoed at
+                # record time) — stale entries under a step dir would fail
+                # the first re-save of that step's path-scoped commit check
+                self.fs.ledger.clear_where(
+                    lambda e: e.region is None and any(
+                        any(is_under(p, d) for p in e.paths)
+                        for d in removed_dirs))
+                self.fs.engine.reset_poison()
         return rolled
 
     # ------------------------------------------------------------------
@@ -107,38 +147,122 @@ class TransactionalCheckpointManager:
         res = SaveResult(step=step, directory=d)
         manifest, leaves = flatten_for_save(state)
 
-        self.fs.makedirs(d)
-        total = 0
-        self.fs.write_file(f"{d}/{MANIFEST_FILE}", manifest_bytes(manifest))
-        ledger_start = len(self.fs.ledger)
-        for key, arr in leaves:
-            fname = key.replace("/", "__") + ".bin"
-            self.fs.write_file(f"{d}/{fname}", arr.tobytes())
-            total += arr.nbytes
+        def under_d(e):
+            # untagged only: the manager's own (detached) I/O — a user
+            # transaction's entries under the step dir belong to its commit
+            return (e.region is None and e.kind not in _READ_KINDS
+                    and any(is_under(p, d) for p in e.paths))
+
+        def abort_save(e: BaseException) -> SaveResult:
+            """Ack-phase failure (e.g. poisoned engine rejecting a queued
+            write): report via SaveResult — never raise into the train
+            loop — and best-effort roll the partial step dir back."""
+            res.ok = False
+            res.error = repr(e)
+            res.ack_s = time.monotonic() - t0   # loop was blocked this long
+            try:
+                self.fs.engine.reset_poison()
+                with self.fs.detached():
+                    if self.fs.exists(d):
+                        self.fs.rmtree(d)
+                        self.fs.drain()
+                self.fs.ledger.clear_where(under_d)
+            except (OSError, CannyError):
+                pass  # startup rollback_uncommitted() is the backstop
+            res.commit_s = time.monotonic() - t0
+            with self._lock:
+                self._results.append(res)
+            return res
+
+        # detached: checkpoint files belong to the manager's own commit
+        # protocol — they must not be journaled into (or their failures
+        # blamed on) whatever user Transaction is open on this mount
+        try:
+            with self.fs.detached():
+                self.fs.makedirs(d)
+                total = 0
+                self.fs.write_file(f"{d}/{MANIFEST_FILE}",
+                                   manifest_bytes(manifest))
+                for key, arr in leaves:
+                    fname = key.replace("/", "__") + ".bin"
+                    self.fs.write_file(f"{d}/{fname}", arr.tobytes())
+                    total += arr.nbytes
+        except (OSError, CannyError) as e:
+            return abort_save(e)
         res.bytes = total
         res.ack_s = time.monotonic() - t0
 
         def finalize():
+            try:
+                with self.fs.detached():
+                    finalize_detached()
+            except (OSError, CannyError) as e:
+                # e.g. poisoned engine rejecting the COMMIT write, or a
+                # sync-mode mount surfacing the fault directly — the
+                # checkpoint is not durable, and the caller must hear it
+                res.ok = False
+                res.error = res.error or repr(e)
+                try:  # best-effort rollback (a partial COMMIT marker would
+                      # otherwise make the step look durable)
+                    self.fs.engine.reset_poison()  # or cleanup can't run
+                    with self.fs.detached():
+                        if self.fs.exists(d):
+                            self.fs.rmtree(d)
+                            self.fs.drain()
+                    self.fs.ledger.clear_where(under_d)
+                except (OSError, CannyError):
+                    pass  # startup rollback_uncommitted() is the backstop
+            finally:
+                res.commit_s = time.monotonic() - t0
+                with self._lock:
+                    self._results.append(res)
+
+        def finalize_detached():
             self.fs.drain()
-            errs = self.fs.ledger.entries()[ledger_start:]
+            # path-scoped, not positional: a concurrent transaction
+            # rollback can clear unrelated ledger entries, which would
+            # shift a positional slice and hide this checkpoint's failures
+            errs = [e for e in self.fs.ledger.entries() if under_d(e)]
+            if not errs:
+                self.fs.write_file(f"{d}/{COMMIT_FILE}", str(step).encode())
+                self.fs.engine.barrier(f"{d}/{COMMIT_FILE}")
+                # the COMMIT write itself can fail (eager => deferred);
+                # re-scan or a lost marker gets reported as durable
+                errs = [e for e in self.fs.ledger.entries() if under_d(e)]
             if errs:
-                # transaction failed -> roll back this checkpoint
+                # handled (reported below + rolled back): clear exactly
+                # the scanned entries by identity so a re-save of this
+                # step works and other regions' entries are untouched
+                handled = set(map(id, errs))
+                self.fs.ledger.clear_where(lambda e: id(e) in handled)
+                res.ok = False
+                res.error = "; ".join(str(e) for e in errs[:4])
+                # un-poison *before* the rmtree (its sync readdir would
+                # fail fast on a poisoned engine and leak the partial step
+                # dir) — the failure is handled, and the promised retry at
+                # the next save interval needs a working mount anyway
+                self.fs.engine.reset_poison()
                 try:
                     self.fs.rmtree(d)
                     self.fs.drain()
-                except OSError:
+                except (OSError, CannyError):
                     pass
-                res.ok = False
-                res.error = "; ".join(str(e) for e in errs[:4])
+                # the rollback itself may defer errors under the step dir;
+                # report them alongside the originals, then clear them too
+                # (stale entries would fail every future save of this step)
+                cleanup = self.fs.ledger.clear_where(under_d)
+                if cleanup:
+                    res.error += "; " + "; ".join(
+                        str(e) for e in cleanup[:2])
             else:
-                self.fs.write_file(f"{d}/{COMMIT_FILE}",
-                                   str(step).encode())
-                self.fs.engine.barrier(f"{d}/{COMMIT_FILE}")
                 res.ok = True
-                self._gc()
-            res.commit_s = time.monotonic() - t0
-            with self._lock:
-                self._results.append(res)
+                self._committed_cache.add(step)
+                try:
+                    self._gc()
+                except (OSError, CannyError) as e:
+                    # the checkpoint IS durable (COMMIT landed) — a GC
+                    # hiccup must not flip ok; report it separately
+                    res.gc_error = repr(e)
 
         if block:
             finalize()
@@ -155,9 +279,12 @@ class TransactionalCheckpointManager:
             self._finalizer = None
 
     def _gc(self) -> None:
+        # validated list via the committed-step cache: zero marker reads
+        # for steps committed (or once validated) by this process
         steps = self.list_steps()
         for step in steps[:-self.keep] if self.keep else []:
             self.fs.rmtree(self._step_dir(step))
+            self._committed_cache.discard(step)
 
     @property
     def results(self) -> list[SaveResult]:

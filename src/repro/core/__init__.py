@@ -8,21 +8,56 @@ Public API:
         fs.mkdir("out"); fs.write_file("out/x.bin", b"...")
     # txn.commit() ran at exit; on deferred error -> rollback + retry via
     # run_transaction(fs, body)
+
+Backend decorator stack
+-----------------------
+
+Backends compose as decorators around a base store; each layer adds one
+orthogonal behaviour and delegates the rest::
+
+    base    = InMemoryBackend()                 # or LocalBackend(root)
+    remote  = LatencyBackend(base, LatencyModel(load=4.0),
+                             clock=VirtualClock())   # NFS-like delays
+    quota   = QuotaBackend(remote, budget_bytes=64 << 20)   # EDQUOT budget
+    chaos   = FaultInjectingBackend(quota, FaultPlan([
+                  FaultRule(error="EIO", ops=("write",),
+                            path_glob="out/*", probability=0.01)], seed=0))
+    fs      = CannyFS(chaos, abort_on_error=True)
+
+* ``LatencyBackend``        — per-op latency, bandwidth cap, server slots;
+  pass ``clock=VirtualClock()`` for deterministic, near-instant replay.
+* ``QuotaBackend``          — byte budget; quota exhaustion (EDQUOT)
+  emerges organically mid-write and is *released* by rollback's unlinks.
+* ``FaultInjectingBackend`` — seeded ``FaultPlan`` of ``FaultRule`` clauses
+  (match op kind / path glob / call window / probability; raise EACCES,
+  ENOSPC, EDQUOT, EIO or connection loss).  Same seed, same schedule —
+  fault tests replay bit-identically.
+
+Injected failures flow through the normal deferred-error machinery: the
+ErrorLedger records them, ``abort_on_error`` poisons the engine, and
+``run_transaction`` rolls back (restoring namespace *and* quota) and
+resubmits — the paper's transactional story, now exercisable end to end.
 """
-from .backend import (InMemoryBackend, LatencyBackend, LatencyModel,
-                      LocalBackend, StatResult, StorageBackend, norm_path,
-                      parent_of)
+from .backend import (Clock, InMemoryBackend, LatencyBackend, LatencyModel,
+                      LocalBackend, RealClock, StatResult, StorageBackend,
+                      VirtualClock, is_under, norm_path, parent_of)
 from .engine import EagerIOEngine, EngineStats
 from .errors import (CannyError, EnginePoisonedError, ErrorLedger,
-                     LedgerEntry, OpCancelledError, TransactionFailedError)
+                     LedgerEntry, OpCancelledError, RollbackLeakError,
+                     TransactionFailedError)
+from .faults import (FaultInjectingBackend, FaultPlan, FaultRule,
+                     QuotaBackend, make_fault)
 from .flags import EagerFlags, N_FLAGS
 from .fs import CannyFS, CannyFile
 from .transaction import Transaction, run_transaction
 
 __all__ = [
-    "CannyError", "CannyFS", "CannyFile", "EagerFlags", "EagerIOEngine",
-    "EngineStats", "EnginePoisonedError", "ErrorLedger", "InMemoryBackend",
+    "CannyError", "CannyFS", "CannyFile", "Clock", "EagerFlags",
+    "EagerIOEngine", "EngineStats", "EnginePoisonedError", "ErrorLedger",
+    "FaultInjectingBackend", "FaultPlan", "FaultRule", "InMemoryBackend",
     "LatencyBackend", "LatencyModel", "LedgerEntry", "LocalBackend", "N_FLAGS",
-    "OpCancelledError", "StatResult", "StorageBackend", "Transaction",
-    "TransactionFailedError", "norm_path", "parent_of", "run_transaction",
+    "OpCancelledError", "QuotaBackend", "RealClock", "RollbackLeakError",
+    "StatResult",
+    "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
+    "is_under", "make_fault", "norm_path", "parent_of", "run_transaction",
 ]

@@ -35,6 +35,12 @@ def parent_of(path: str) -> str:
     return head
 
 
+def is_under(path: str, root: str) -> bool:
+    """True iff ``path`` is ``root`` or lies inside its subtree (both
+    already normalized)."""
+    return path == root or path.startswith(root + "/")
+
+
 @dataclass(frozen=True)
 class StatResult:
     exists: bool
@@ -410,6 +416,45 @@ METADATA_OPS = {
 }
 
 
+class Clock:
+    """Time source for latency simulation.  ``RealClock`` sleeps for real;
+    ``VirtualClock`` only advances a counter, so latency+fault schedules
+    replay deterministically and orders of magnitude faster in tests."""
+
+    def now(self) -> float: raise NotImplementedError
+    def sleep(self, dt: float) -> None: raise NotImplementedError
+
+
+class RealClock(Clock):
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+class VirtualClock(Clock):
+    """Lock-protected simulated time.  ``sleep`` returns immediately after
+    crediting the virtual elapsed time; ``now()`` is the total simulated
+    seconds 'slept' so far across all threads (an upper bound on what a
+    serial execution would have waited — per-op schedules stay exact)."""
+
+    def __init__(self, start: float = 0.0):
+        self._lock = threading.Lock()
+        self._now = float(start)
+
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+    def sleep(self, dt: float) -> None:
+        if dt <= 0:
+            return
+        with self._lock:
+            self._now += dt
+
+
 @dataclass
 class LatencyModel:
     """Calibrated to the paper's environment: NFSv3 over a single GbE port
@@ -444,9 +489,11 @@ class LatencyModel:
 class LatencyBackend(StorageBackend):
     """Decorator that makes any backend behave like remote storage."""
 
-    def __init__(self, inner: StorageBackend, model: LatencyModel | None = None):
+    def __init__(self, inner: StorageBackend, model: LatencyModel | None = None,
+                 clock: Clock | None = None):
         self.inner = inner
         self.model = model or LatencyModel()
+        self.clock = clock or RealClock()
         self._rng = random.Random(self.model.seed)
         self._rng_lock = threading.Lock()
         self._slots = threading.Semaphore(self.model.server_slots)
@@ -459,7 +506,7 @@ class LatencyBackend(StorageBackend):
             self.op_count += 1
             self.busy_s += lat
         with self._slots:
-            time.sleep(lat)
+            self.clock.sleep(lat)
 
     def __getattr__(self, name):  # delegate non-op attrs
         return getattr(self.inner, name)

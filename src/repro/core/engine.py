@@ -48,15 +48,17 @@ NEEDS_CHILDREN = {"rmdir", "readdir", "rename"}
 class _Op:
     __slots__ = ("seq", "kind", "paths", "fn", "done", "error", "result",
                  "remaining_deps", "dependents", "cancelled", "submitted_at",
-                 "started_at", "finished_at", "eager")
+                 "started_at", "finished_at", "eager", "region")
 
     def __init__(self, seq: int, kind: str, paths: tuple[str, ...],
-                 fn: Callable[[], Any], eager: bool = True):
+                 fn: Callable[[], Any], eager: bool = True,
+                 region: object = None):
         self.seq = seq
         self.kind = kind
         self.paths = paths
         self.fn = fn
         self.eager = eager
+        self.region = region  # active Transaction at submission, if any
         self.done = threading.Event()
         self.error: BaseException | None = None
         self.result: Any = None
@@ -81,6 +83,14 @@ class EngineStats:
     max_queue_depth: int = 0
     ack_latency_s: float = 0.0   # total caller-visible latency of eager ops
     exec_latency_s: float = 0.0  # total background execution time
+    # -- fault / trace counters (chaos + error-path observability) --------
+    deferred_errors: int = 0     # background failures recorded in the ledger
+    injected_faults: int = 0     # of those, carried an `.injected` tag
+    rollbacks: int = 0           # Transaction.rollback() invocations
+    rollback_leftovers: int = 0  # paths a verified rollback failed to remove
+    retries: int = 0             # run_transaction resubmissions
+    op_counts: dict = field(default_factory=dict)     # kind -> submitted
+    error_counts: dict = field(default_factory=dict)  # kind -> deferred errs
 
 
 class _StatCache:
@@ -163,7 +173,9 @@ class EagerIOEngine:
         self.flags = flags or EagerFlags()
         self.max_inflight = int(max_inflight)
         self.abort_on_error = abort_on_error
-        self.ledger = ledger or ErrorLedger()
+        # explicit None-check: an empty ErrorLedger is falsy (__len__ == 0),
+        # so `ledger or ...` would silently discard a caller-provided ledger
+        self.ledger = ledger if ledger is not None else ErrorLedger()
         self.stats = EngineStats()
         self.stat_cache = _StatCache()
 
@@ -199,7 +211,8 @@ class EagerIOEngine:
 
     def submit(self, kind: str, paths: tuple[str, ...],
                fn: Callable[[], Any], *, eager: bool,
-               cache_kw: dict | None = None) -> Any:
+               cache_kw: dict | None = None,
+               region: object = None) -> Any:
         """Route one op through the DAG.  Eager → returns None immediately;
         sync → waits and returns the op's result (re-raising its error)."""
         t0 = time.monotonic()
@@ -214,7 +227,7 @@ class EagerIOEngine:
             while self._inflight >= self.max_inflight:
                 self._budget_cv.wait()
             self._seq += 1
-            op = _Op(self._seq, kind, paths, fn, eager=eager)
+            op = _Op(self._seq, kind, paths, fn, eager=eager, region=region)
             deps: list[_Op] = []
             seen: set[int] = set()
 
@@ -242,14 +255,17 @@ class EagerIOEngine:
                     self._pending_children.setdefault(parent_of(p), {})[op.seq] = op
             self._inflight += 1
             self.stats.submitted += 1
+            self.stats.op_counts[kind] = self.stats.op_counts.get(kind, 0) + 1
             self.stats.max_queue_depth = max(self.stats.max_queue_depth,
                                              self._inflight)
+            # write-through cache updates before the op can possibly run:
+            # a fast-failing op's error-path invalidation must win over
+            # this ACK-time mocked entry, so order them under the lock
+            if cache_kw is not None:
+                self.stat_cache.on_op(kind, paths, **cache_kw)
             if op.remaining_deps == 0:
                 self._ready.append(op)
                 self._ready_cv.notify()
-        # write-through metadata cache sees the op the moment it is ACKed
-        if cache_kw is not None:
-            self.stat_cache.on_op(kind, paths, **cache_kw)
         if eager:
             self.stats.eager_acks += 1
             self.stats.ack_latency_s += time.monotonic() - t0
@@ -351,6 +367,13 @@ class EagerIOEngine:
             op.error = OpCancelledError(f"{op.kind}{op.paths}")
             op.cancelled = True
             self.stats.cancelled += 1
+            # a cancelled eager op was ACKed but never executed — without a
+            # ledger entry a transaction commit (region-tagged) or the
+            # checkpoint manager's path scan (untagged) would conclude the
+            # I/O landed when it was silently dropped
+            if op.eager:
+                self.ledger.record(op.seq, op.kind, op.paths, op.error,
+                                   region=op.region)
         else:
             try:
                 op.result = op.fn()
@@ -359,13 +382,26 @@ class EagerIOEngine:
                 # the ledger exists for errors the caller never saw (paper:
                 # "not properly reported back"); sync ops re-raise directly
                 if op.eager:
-                    self.ledger.record(op.seq, op.kind, op.paths, e)
+                    self.ledger.record(op.seq, op.kind, op.paths, e,
+                                       region=op.region)
                     if self.abort_on_error:
                         self._poison()
         op.finished_at = time.monotonic()
         self.stats.exec_latency_s += op.finished_at - op.started_at
         self.stats.executed += 1
+        if op.error is not None:
+            # the write-through cache recorded this op's effect at ACK time;
+            # it never materialized (failed or cancelled), so the mocked
+            # entry is wrong — drop it and let the backend answer again
+            for p in op.paths:
+                self.stat_cache.invalidate(p)
         with self._lock:
+            if op.error is not None and op.eager and not op.cancelled:
+                self.stats.deferred_errors += 1
+                self.stats.error_counts[op.kind] = \
+                    self.stats.error_counts.get(op.kind, 0) + 1
+                if getattr(op.error, "injected", False):
+                    self.stats.injected_faults += 1
             for d in op.dependents:
                 d.remaining_deps -= 1
                 if d.remaining_deps == 0:

@@ -25,6 +25,12 @@ class OpCancelledError(CannyError):
     """A queued op was cancelled (engine poisoned before execution)."""
 
 
+class RollbackLeakError(CannyError):
+    """Rollback verified that some transaction outputs could not be
+    removed.  Recorded in the ledger (untagged) when the job ultimately
+    succeeds anyway, so teardown reporting still surfaces the leak."""
+
+
 class TransactionFailedError(CannyError):
     """Commit found deferred errors in the ledger."""
 
@@ -37,13 +43,20 @@ class TransactionFailedError(CannyError):
 
 @dataclass(frozen=True)
 class LedgerEntry:
-    """One deferred failure: which op, on what path(s), what went wrong."""
+    """One deferred failure: which op, on what path(s), what went wrong.
+
+    ``region`` identifies the transaction that was active when the op was
+    *submitted* (None for non-transactional work).  Record order cannot be
+    scoped positionally — op ``seq`` is assigned at submission, ops finish
+    out of order, and concurrent regions interleave — so the tag is what
+    attributes an entry exactly."""
 
     seq: int
     kind: str
     paths: tuple[str, ...]
     error: BaseException
     wallclock: float
+    region: object = None
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return f"op#{self.seq} {self.kind}({', '.join(self.paths)}): {self.error!r}"
@@ -64,18 +77,44 @@ class ErrorLedger:
         self._echo = echo
 
     def record(self, seq: int, kind: str, paths: tuple[str, ...],
-               error: BaseException) -> LedgerEntry:
-        entry = LedgerEntry(seq=seq, kind=kind, paths=paths, error=error,
-                            wallclock=time.time())
+               error: BaseException, region: object = None) -> LedgerEntry:
         with self._lock:
+            entry = LedgerEntry(seq=seq, kind=kind, paths=paths, error=error,
+                                wallclock=time.time(), region=region)
             self._entries.append(entry)
-        if self._echo:
+        # cancellations are secondary effects of one poisoning failure —
+        # echoing thousands of them per rollback drowns the root cause
+        if self._echo and not isinstance(error, OpCancelledError):
             print(f"cannyfs: deferred error: {entry}", file=sys.stderr)
         return entry
 
     def entries(self) -> list[LedgerEntry]:
         with self._lock:
             return list(self._entries)
+
+    def entries_for(self, region: object) -> list[LedgerEntry]:
+        """Entries from ops submitted while ``region`` was the active
+        transaction."""
+        with self._lock:
+            return [e for e in self._entries if e.region is region]
+
+    def clear_where(self, pred) -> list["LedgerEntry"]:
+        """Drop (and return) every entry matching ``pred`` — for callers
+        that handled a scoped set of failures themselves (the checkpoint
+        manager's per-directory commit check)."""
+        with self._lock:
+            dropped = [e for e in self._entries if pred(e)]
+            self._entries = [e for e in self._entries if not pred(e)]
+            return dropped
+
+    def clear_region(self, region: object) -> list["LedgerEntry"]:
+        """Drop (and return) exactly one region's entries.
+
+        This is the transaction-scoped clear: a rollback must forget the
+        failed region's errors without touching entries from earlier work
+        (region None) or from another region that opened concurrently —
+        serial ranges of interleaved regions overlap, tags don't."""
+        return self.clear_where(lambda e: e.region is region)
 
     def __len__(self) -> int:
         with self._lock:
@@ -86,11 +125,18 @@ class ErrorLedger:
             self._entries.clear()
 
     def report(self) -> None:
-        """Teardown-time second report (the paper's global destructor)."""
+        """Teardown-time second report (the paper's global destructor).
+        Cancellations are summarized as one count line, not spelled out."""
         entries = self.entries()
         if not entries or not self._echo:
             return
+        real = [e for e in entries
+                if not isinstance(e.error, OpCancelledError)]
+        n_cancelled = len(entries) - len(real)
         print(f"cannyfs: {len(entries)} deferred I/O error(s) at teardown:",
               file=sys.stderr)
-        for e in entries:
+        for e in real:
             print(f"cannyfs:   {e}", file=sys.stderr)
+        if n_cancelled:
+            print(f"cannyfs:   (+{n_cancelled} op(s) cancelled by poisoning)",
+                  file=sys.stderr)

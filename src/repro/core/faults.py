@@ -1,0 +1,367 @@
+"""Deterministic fault injection for the storage stack.
+
+The paper's central bet — every I/O can be eagerly ACKed because a failure
+"will frequently warrant the resubmission of a full job" — is only testable
+if the stack can *produce* failures on demand.  This module provides:
+
+* ``FaultRule``  — one failure clause: match by op kind, path glob, call
+  window and/or probability; raise a chosen errno (``EACCES``/``ENOSPC``/
+  ``EDQUOT``/``EIO``) or a connection loss.
+* ``FaultPlan``  — a seeded, thread-safe collection of rules.  The same
+  seed always yields the same fault schedule, so ledger contents and
+  rollback behaviour replay bit-identically in tests.
+* ``FaultInjectingBackend`` — decorator that consults a plan before every
+  primitive op.  Composable with the other decorators:
+
+      FaultInjectingBackend(QuotaBackend(LatencyBackend(InMemoryBackend())))
+
+* ``QuotaBackend`` — enforces a byte budget so disk-quota exhaustion (a
+  headline error class in the paper) emerges organically mid-write instead
+  of being scripted; rollback's unlinks release the charged bytes, which is
+  exactly why the paper's roll-back-and-resubmit loop converges.
+"""
+from __future__ import annotations
+
+import errno as _errno
+import fnmatch
+import random
+import threading
+from dataclasses import dataclass, field
+
+from .backend import StorageBackend, is_under, norm_path
+
+# errno spellings accepted by FaultRule.error (connection loss raises a
+# ConnectionResetError, which the engine defers like any other OSError).
+ERRNOS = {
+    "EACCES": _errno.EACCES,
+    "ENOSPC": _errno.ENOSPC,
+    "EDQUOT": _errno.EDQUOT,
+    "EIO": _errno.EIO,
+    "ECONNRESET": _errno.ECONNRESET,
+}
+
+
+def make_fault(error: str, path: str) -> OSError:
+    """Build the OSError for one injected failure, tagged ``.injected``."""
+    if error not in ERRNOS:
+        raise ValueError(f"unknown fault error {error!r}; one of {sorted(ERRNOS)}")
+    if error == "ECONNRESET":
+        exc: OSError = ConnectionResetError(
+            ERRNOS[error], "injected connection loss", path)
+    else:
+        exc = OSError(ERRNOS[error], f"injected {error}", path)
+    exc.injected = True  # lets tests/ledgers distinguish chaos from real bugs
+    return exc
+
+
+@dataclass(frozen=True)
+class FaultRule:
+    """One failure clause.  A rule *matches* an op when every constraint
+    holds; whether a matching call actually *fires* is then decided by the
+    call-count window, ``probability`` (seeded plan RNG) and the remaining
+    ``max_failures`` budget."""
+
+    error: str = "EIO"
+    ops: tuple[str, ...] | None = None   # op kinds to match; None = all
+    path_glob: str | None = None         # fnmatch over the normalized path
+    probability: float = 1.0             # chance a matching call fires
+    after_count: int = 0                 # skip the first N matching calls
+    max_failures: int | None = None      # stop firing after N failures
+
+    def matches(self, kind: str, path: str) -> bool:
+        if self.ops is not None and kind not in self.ops:
+            return False
+        if self.path_glob is not None and not fnmatch.fnmatchcase(
+                norm_path(path), self.path_glob):
+            return False
+        return True
+
+
+class FaultPlan:
+    """Seeded, thread-safe fault schedule.
+
+    ``check(kind, path)`` returns the OSError to raise (or None).
+    Probability draws are derived per (seed, rule, match-index) rather than
+    from one shared sequential RNG, so the *number* of fires within any
+    fixed count of matching calls is identical for a given seed no matter
+    how worker threads interleave.  Exact ledger contents (which paths
+    faulted) additionally require a deterministic execution order — a
+    single worker, a drained step-by-step workload, or count/glob-based
+    rules."""
+
+    def __init__(self, rules: list[FaultRule] | None = None, *, seed: int = 0):
+        self.rules = list(rules or [])
+        self.seed = seed
+        self._lock = threading.Lock()
+        self._active = True
+        self.match_counts = [0] * len(self.rules)
+        self.fire_counts = [0] * len(self.rules)
+        self.injected = 0                      # total faults raised
+        self.injected_by_kind: dict[str, int] = {}
+        self.op_counts: dict[str, int] = {}    # trace: every op seen
+
+    # -- schedule control -------------------------------------------------
+    def expire(self) -> None:
+        """Disable every rule (the 'transient outage ends' knob)."""
+        with self._lock:
+            self._active = False
+
+    def reset(self, *, seed: int | None = None) -> None:
+        """Re-arm all rules and counters (optionally reseeding)."""
+        with self._lock:
+            self._active = True
+            if seed is not None:
+                self.seed = seed
+            self.match_counts = [0] * len(self.rules)
+            self.fire_counts = [0] * len(self.rules)
+            self.injected = 0
+            self.injected_by_kind = {}
+            self.op_counts = {}
+
+    # -- the hot path -----------------------------------------------------
+    def check(self, kind: str, path: str) -> OSError | None:
+        with self._lock:
+            self.op_counts[kind] = self.op_counts.get(kind, 0) + 1
+            if not self._active:
+                return None
+            for i, rule in enumerate(self.rules):
+                if not rule.matches(kind, path):
+                    continue
+                self.match_counts[i] += 1
+                if self.match_counts[i] <= rule.after_count:
+                    continue
+                if (rule.max_failures is not None
+                        and self.fire_counts[i] >= rule.max_failures):
+                    continue
+                if rule.probability < 1.0:
+                    # per-(seed, rule, match-index) draw: fire counts are
+                    # scheduling-independent (tuple-of-int hash is stable
+                    # across processes, unlike str hashing)
+                    draw = random.Random(
+                        hash((self.seed, i, self.match_counts[i]))).random()
+                    if draw >= rule.probability:
+                        continue
+                self.fire_counts[i] += 1
+                self.injected += 1
+                self.injected_by_kind[kind] = \
+                    self.injected_by_kind.get(kind, 0) + 1
+                return make_fault(rule.error, path)
+        return None
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "injected": self.injected,
+                "injected_by_kind": dict(self.injected_by_kind),
+                "match_counts": list(self.match_counts),
+                "fire_counts": list(self.fire_counts),
+                "ops_seen": dict(self.op_counts),
+            }
+
+
+# ---------------------------------------------------------------------------
+
+
+class FaultInjectingBackend(StorageBackend):
+    """Decorator: consult a FaultPlan before delegating each primitive.
+
+    Sits anywhere in the decorator stack; putting it outermost means the
+    fault is charged *before* latency/quota are paid (a client-visible
+    refusal), innermost means the op travelled to the 'server' first."""
+
+    def __init__(self, inner: StorageBackend, plan: FaultPlan):
+        self.inner = inner
+        self.plan = plan
+
+    def __getattr__(self, name):  # delegate non-op attrs (snapshot, model…)
+        return getattr(self.inner, name)
+
+    def _gate(self, kind: str, path: str) -> None:
+        err = self.plan.check(kind, path)
+        if err is not None:
+            raise err
+
+    # namespace
+    def mkdir(self, path): self._gate("mkdir", path); self.inner.mkdir(path)
+    def rmdir(self, path): self._gate("rmdir", path); self.inner.rmdir(path)
+    def create(self, path): self._gate("create", path); self.inner.create(path)
+    def unlink(self, path): self._gate("unlink", path); self.inner.unlink(path)
+    def rename(self, src, dst):
+        # gate both endpoints so dst-targeting globs see renames *into*
+        # their subtree (each counts as a matching call)
+        self._gate("rename", src)
+        self._gate("rename", dst)
+        self.inner.rename(src, dst)
+    def symlink(self, t, p): self._gate("symlink", p); self.inner.symlink(t, p)
+    def link(self, s, d): self._gate("link", d); self.inner.link(s, d)
+    def readlink(self, p): self._gate("readlink", p); return self.inner.readlink(p)
+    # data
+    def write_at(self, p, o, data):
+        self._gate("write", p); return self.inner.write_at(p, o, data)
+    def read_at(self, p, o, size):
+        self._gate("read", p); return self.inner.read_at(p, o, size)
+    def truncate(self, p, s): self._gate("truncate", p); self.inner.truncate(p, s)
+    def fallocate(self, p, s): self._gate("fallocate", p); self.inner.fallocate(p, s)
+    def fsync(self, p): self._gate("fsync", p); self.inner.fsync(p)
+    # metadata
+    def chmod(self, p, m): self._gate("chmod", p); self.inner.chmod(p, m)
+    def chown(self, p, u, g): self._gate("chown", p); self.inner.chown(p, u, g)
+    def utimens(self, p, a, m): self._gate("utimens", p); self.inner.utimens(p, a, m)
+    def setxattr(self, p, k, v): self._gate("setxattr", p); self.inner.setxattr(p, k, v)
+    def removexattr(self, p, k): self._gate("removexattr", p); self.inner.removexattr(p, k)
+    def stat(self, p): self._gate("stat", p); return self.inner.stat(p)
+    def readdir(self, p): self._gate("readdir", p); return self.inner.readdir(p)
+
+
+# ---------------------------------------------------------------------------
+
+
+class QuotaBackend(StorageBackend):
+    """Byte-budget decorator: EDQUOT once cumulative file bytes exceed
+    ``budget_bytes``.
+
+    Accounting is by charged byte ranges per path (grow on write/truncate/
+    fallocate past the previous high-water mark, release on unlink or
+    shrinking truncate, move on rename).  Pre-existing files written
+    directly to the inner backend are not charged — the budget covers what
+    flows *through* this decorator, which is the transaction's footprint."""
+
+    def __init__(self, inner: StorageBackend, budget_bytes: int):
+        self.inner = inner
+        self.budget_bytes = int(budget_bytes)
+        self._qlock = threading.Lock()
+        self._charged: dict[str, int] = {}   # path -> charged size
+        self.used = 0
+        self.edquot_count = 0
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    @property
+    def remaining(self) -> int:
+        with self._qlock:
+            return self.budget_bytes - self.used
+
+    def _grow(self, path: str, new_size: int) -> int:
+        """Charge growth up to new_size; raise EDQUOT if over budget.
+        Returns the bytes charged so a failed delegate can uncharge."""
+        path = norm_path(path)
+        with self._qlock:
+            prev = self._charged.get(path, 0)
+            growth = new_size - prev
+            if growth <= 0:
+                return 0
+            if self.used + growth > self.budget_bytes:
+                self.edquot_count += 1
+                # no .injected tag: this is organic budget exhaustion, not
+                # scripted chaos — keep the two distinguishable in stats
+                raise OSError(_errno.EDQUOT, "disk quota exceeded", path)
+            self._charged[path] = new_size
+            self.used += growth
+            return growth
+
+    def _uncharge(self, path: str, growth: int) -> None:
+        """Back out a charge whose delegated op raised — no bytes landed."""
+        if growth <= 0:
+            return
+        path = norm_path(path)
+        with self._qlock:
+            cur = self._charged.get(path, 0) - growth
+            if cur <= 0:
+                self._charged.pop(path, None)
+            else:
+                self._charged[path] = cur
+            self.used -= growth
+
+    def _release(self, path: str, new_size: int = 0) -> None:
+        path = norm_path(path)
+        with self._qlock:
+            prev = self._charged.get(path, 0)
+            if new_size >= prev:
+                return
+            if new_size <= 0:
+                self._charged.pop(path, None)
+            else:
+                self._charged[path] = new_size
+            self.used -= prev - new_size
+
+    # namespace (dirs are free; files move/release their charge)
+    def mkdir(self, path): self.inner.mkdir(path)
+    def rmdir(self, path): self.inner.rmdir(path)
+
+    def create(self, path):
+        self.inner.create(path)
+        self._release(path)   # create truncates (O_TRUNC): old bytes are gone
+
+    def unlink(self, path):
+        self.inner.unlink(path)
+        self._release(path)
+
+    def rename(self, src, dst):
+        self.inner.rename(src, dst)
+        src, dst = norm_path(src), norm_path(dst)
+        if src == dst:
+            return
+        with self._qlock:
+            # an overwriting rename destroys the old destination file —
+            # release its charge or `used` inflates forever
+            prev = self._charged.pop(dst, None)
+            if prev:
+                self.used -= prev
+            for p in [p for p in self._charged if is_under(p, src)]:
+                self._charged[dst + p[len(src):]] = self._charged.pop(p)
+
+    def symlink(self, t, p): self.inner.symlink(t, p)
+
+    def link(self, src, dst):
+        # charge the new name as if it were a copy: per-path accounting
+        # over-counts shared storage, but the alternative (free links whose
+        # unlink releases the charge) lets linked data escape the budget
+        with self._qlock:
+            src_charge = self._charged.get(norm_path(src), 0)
+        growth = self._grow(dst, src_charge)
+        try:
+            self.inner.link(src, dst)
+        except BaseException:
+            self._uncharge(dst, growth)
+            raise
+
+    def readlink(self, p): return self.inner.readlink(p)
+
+    # data
+    def write_at(self, path, offset, data):
+        growth = self._grow(path, offset + len(data))
+        try:
+            return self.inner.write_at(path, offset, data)
+        except BaseException:
+            self._uncharge(path, growth)
+            raise
+
+    def read_at(self, p, o, size): return self.inner.read_at(p, o, size)
+
+    def truncate(self, path, size):
+        growth = self._grow(path, size)
+        try:
+            self.inner.truncate(path, size)
+        except BaseException:
+            self._uncharge(path, growth)
+            raise
+        self._release(path, size)
+
+    def fallocate(self, path, size):
+        growth = self._grow(path, size)
+        try:
+            self.inner.fallocate(path, size)
+        except BaseException:
+            self._uncharge(path, growth)
+            raise
+
+    def fsync(self, p): self.inner.fsync(p)
+    # metadata
+    def chmod(self, p, m): self.inner.chmod(p, m)
+    def chown(self, p, u, g): self.inner.chown(p, u, g)
+    def utimens(self, p, a, m): self.inner.utimens(p, a, m)
+    def setxattr(self, p, k, v): self.inner.setxattr(p, k, v)
+    def removexattr(self, p, k): self.inner.removexattr(p, k)
+    def stat(self, p): return self.inner.stat(p)
+    def readdir(self, p): return self.inner.readdir(p)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import threading
 import time
+from contextlib import contextmanager
 from typing import Iterable, Optional
 
 from .backend import StorageBackend, StatResult, norm_path, parent_of
@@ -94,47 +95,92 @@ class CannyFS:
                  max_inflight: int = 300,
                  workers: int = 32,
                  executor: str = "pool",
-                 abort_on_error: bool = False):
+                 abort_on_error: bool = False,
+                 echo_errors: bool = True):
         self.flags = flags or EagerFlags()
         self.engine = EagerIOEngine(
             backend, flags=self.flags, max_inflight=max_inflight,
-            workers=workers, executor=executor, abort_on_error=abort_on_error)
+            workers=workers, executor=executor, abort_on_error=abort_on_error,
+            ledger=ErrorLedger(echo=echo_errors))
         self.backend = backend
         self._txn_lock = threading.Lock()
         self._txn = None  # active Transaction (set by Transaction.__enter__)
+        self._detached = threading.local()  # per-thread txn opt-out
 
     # ------------------------------------------------------------------
     # plumbing
     # ------------------------------------------------------------------
 
+    _REGION_UNSET = object()
+
     def _submit(self, kind: str, paths: tuple[str, ...], fn, *,
-                cache_kw: dict | None = None):
+                cache_kw: dict | None = None, region=_REGION_UNSET):
         eager = self.flags.is_eager(kind)
+        # tag the op with the active transaction so its deferred error is
+        # attributed (and later scope-cleared) exactly, even when another
+        # region opens before this one's rollback runs.  Journaling ops
+        # pass the txn they captured so tag and journal can never diverge.
+        if region is CannyFS._REGION_UNSET:
+            region = self._active_txn()
         return self.engine.submit(kind, paths, fn, eager=eager,
-                                  cache_kw=cache_kw)
+                                  cache_kw=cache_kw, region=region)
 
-    def _journal_create(self, path: str, is_dir: bool) -> None:
+    def _active_txn(self):
+        """The transaction to journal into, captured at submission time.
+        _active flips on only once __enter__ completes — work racing the
+        open is pre-region and must not be journaled (a rollback would
+        otherwise delete it)."""
+        if getattr(self._detached, "on", False):
+            return None
         txn = self._txn
-        if txn is not None:
-            txn._record_create(norm_path(path), is_dir)
+        return txn if (txn is not None and txn._active) else None
 
-    def _journal_rename(self, src: str, dst: str) -> None:
-        txn = self._txn
-        if txn is not None:
-            txn._record_rename(norm_path(src), norm_path(dst))
+    @contextmanager
+    def detached(self):
+        """Run the enclosed I/O outside any active transaction on this
+        thread: nothing is journaled and deferred errors stay untagged.
+        For subsystems with their own commit protocol (the checkpoint
+        manager) whose files must not be rolled back — or whose failures
+        blamed on — a user transaction that happens to be open."""
+        prev = getattr(self._detached, "on", False)
+        self._detached.on = True
+        try:
+            yield self
+        finally:
+            self._detached.on = prev
+
+    def _submit_journaled(self, kind: str, paths: tuple[str, ...], call,
+                          journal, *, cache_kw: dict | None = None):
+        """Delegate, then journal into the region on *success*, from the
+        executing worker: a failed (or pre-existing-target) op created
+        nothing, so rollback must not remove it.  The txn is captured at
+        submission — keeping the ledger region tag and the journal in
+        lockstep — and rollback's drain guarantees every journal write
+        lands before the journal is read."""
+        txn = self._active_txn()
+
+        def fn():
+            out = call()
+            if txn is not None:
+                journal(txn)
+            return out
+
+        return self._submit(kind, paths, fn, cache_kw=cache_kw, region=txn)
 
     # ------------------------------------------------------------------
     # namespace ops
     # ------------------------------------------------------------------
 
     def mkdir(self, path: str) -> None:
-        b = self.backend
-        self._journal_create(path, True)
-        self._submit("mkdir", (path,), lambda: b.mkdir(path), cache_kw={})
+        b, p = self.backend, norm_path(path)
+        self._submit_journaled("mkdir", (p,), lambda: b.mkdir(p),
+                               lambda t: t._record_create(p, True),
+                               cache_kw={})
 
     def makedirs(self, path: str, exist_ok: bool = True) -> None:
         parts = norm_path(path).split("/")
         cur = ""
+        txn = self._active_txn()
         for part in parts:
             cur = f"{cur}/{part}" if cur else part
             st = self.engine.stat_cache.get(cur)
@@ -144,23 +190,36 @@ class CannyFS:
                 continue
             b, p = self.backend, cur
 
-            def fn(p=p):
+            def fn(p=p, txn=txn):
                 try:
                     b.mkdir(p)
                 except FileExistsError:
                     if not exist_ok:
                         raise
-            self._journal_create(p, True)
-            self._submit("mkdir", (p,), fn, cache_kw={})
+                else:  # journal only dirs this region actually created
+                    if txn is not None:
+                        txn._record_create(p, True)
+            self._submit("mkdir", (p,), fn, cache_kw={}, region=txn)
 
     def rmdir(self, path: str) -> None:
         b = self.backend
         self._submit("rmdir", (path,), lambda: b.rmdir(path), cache_kw={})
 
     def create(self, path: str) -> None:
-        b = self.backend
-        self._journal_create(path, False)
-        self._submit("create", (path,), lambda: b.create(path), cache_kw={})
+        b, p, txn = self.backend, norm_path(path), self._active_txn()
+
+        def fn():
+            # create succeeds on an existing file (O_TRUNC) — journal only
+            # true creations, or rollback would unlink a pre-transaction
+            # file outright.  (Truncated content is not restored: the
+            # journal records namespace, not data.)  The extra stat is paid
+            # only inside transactions, by the background worker.
+            existed = txn is not None and b.stat(p).exists
+            b.create(p)
+            if txn is not None and not existed:
+                txn._record_create(p, False)
+
+        self._submit("create", (p,), fn, cache_kw={}, region=txn)
 
     def unlink(self, path: str) -> None:
         b = self.backend
@@ -168,20 +227,22 @@ class CannyFS:
 
     def rename(self, src: str, dst: str) -> None:
         b = self.backend
-        self._journal_rename(src, dst)
-        self._submit("rename", (src, dst), lambda: b.rename(src, dst),
-                     cache_kw={})
+        s, d = norm_path(src), norm_path(dst)
+        self._submit_journaled("rename", (s, d), lambda: b.rename(s, d),
+                               lambda t: t._record_rename(s, d),
+                               cache_kw={})
 
     def symlink(self, target: str, path: str) -> None:
-        b = self.backend
-        self._journal_create(path, False)
-        self._submit("symlink", (path,), lambda: b.symlink(target, path),
-                     cache_kw={})
+        b, p = self.backend, norm_path(path)
+        self._submit_journaled("symlink", (p,), lambda: b.symlink(target, p),
+                               lambda t: t._record_create(p, False),
+                               cache_kw={})
 
     def link(self, src: str, dst: str) -> None:
         b = self.backend
-        self._journal_create(dst, False)
-        self._submit("link", (src, dst), lambda: b.link(src, dst))
+        s, d = norm_path(src), norm_path(dst)
+        self._submit_journaled("link", (s, d), lambda: b.link(s, d),
+                               lambda t: t._record_create(d, False))
 
     def readlink(self, path: str) -> str:
         b = self.backend
@@ -193,9 +254,28 @@ class CannyFS:
     # ------------------------------------------------------------------
 
     def _write_at(self, path: str, offset: int, data: bytes) -> None:
-        b = self.backend
-        self._submit("write", (path,), lambda: b.write_at(path, offset, data),
-                     cache_kw={"offset": offset, "nbytes": len(data)})
+        b, p, txn = self.backend, norm_path(path), self._active_txn()
+
+        def fn():
+            # write_at creates a missing file implicitly; if its create op
+            # faulted earlier, the file would otherwise be an unjournaled
+            # orphan that rollback cannot remove.  The existence probe is
+            # skipped on the hot paths (path already journaled, or already
+            # proven to pre-exist — streamed appends pay one probe total).
+            probe = (txn is not None and not txn._has_created(p)
+                     and not txn._is_preexisting(p))
+            existed = b.stat(p).exists if probe else True
+            out = b.write_at(p, offset, data)
+            if probe:
+                if existed:
+                    txn._mark_preexisting(p)
+                else:
+                    txn._record_create(p, False)
+            return out
+
+        self._submit("write", (p,), fn,
+                     cache_kw={"offset": offset, "nbytes": len(data)},
+                     region=txn)
 
     def write_file(self, path: str, data: bytes) -> None:
         """create + write + close — the common whole-file put."""
@@ -302,7 +382,12 @@ class CannyFS:
                 if cache.get(child) is None:
                     def pf(child=child):
                         if cache.get(child) is None:
-                            cache.put(child, b.stat(child))
+                            try:
+                                cache.put(child, b.stat(child))
+                            except OSError:
+                                pass  # advisory warm-up only: a failure
+                                # must not land in the ledger and condemn
+                                # a transaction — consumers stat on demand
                     self.engine.submit("stat", (child,), pf, eager=True)
                     self.engine.stats.prefetched_stats += 1
         return names
@@ -347,6 +432,17 @@ class CannyFS:
     @property
     def ledger(self) -> ErrorLedger:
         return self.engine.ledger
+
+    @property
+    def stats(self):
+        """Engine counters, including the per-op fault/trace counters
+        (deferred_errors, injected_faults, rollbacks, retries)."""
+        return self.engine.stats
+
+    @property
+    def poisoned(self) -> bool:
+        """True once abort_on_error tripped; new submissions fail fast."""
+        return self.engine.poisoned
 
     def drain(self) -> None:
         self.engine.drain()

@@ -11,16 +11,27 @@ A Transaction brackets a region of work against a CannyFS mount:
 """
 from __future__ import annotations
 
-import posixpath
+import errno as _errno
 import threading
 import time
 from typing import Callable, TypeVar
 
-from .backend import norm_path
-from .errors import TransactionFailedError
+from .backend import is_under
+from .errors import (EnginePoisonedError, OpCancelledError,
+                     RollbackLeakError, TransactionFailedError)
 from .fs import CannyFS
 
 T = TypeVar("T")
+
+# OSError errnos worth resubmitting a job over (the paper's transient I/O
+# failure classes).  ENOENT/EISDIR/EEXIST-style errors are deterministic
+# body bugs: retrying them just replays the same failure.
+TRANSIENT_ERRNOS = frozenset({
+    _errno.EIO, _errno.ENOSPC, _errno.EDQUOT, _errno.EACCES, _errno.EPERM,
+    _errno.ECONNRESET, _errno.ECONNABORTED, _errno.ECONNREFUSED,
+    _errno.ETIMEDOUT, _errno.ESTALE, _errno.EAGAIN, _errno.EINTR,
+    _errno.ENETDOWN, _errno.ENETUNREACH, _errno.EBUSY,
+})
 
 
 class Transaction:
@@ -29,29 +40,51 @@ class Transaction:
         self.name = name
         self._lock = threading.Lock()
         self._created: dict[str, bool] = {}   # path -> is_dir
-        self._ledger_start = 0
+        self._preexisting: set[str] = set()   # probe memo (see _write_at)
         self._active = False
         self.committed = False
         self.rolled_back = False
+        # paths rollback could not remove (verified against the backend)
+        self.rollback_leftovers: list[str] = []
+        # the region's deferred errors as they stood when rollback ran
+        # (rollback clears them from the ledger; retry decisions need them)
+        self.final_errors: list = []
 
     # -- journal hooks (called by CannyFS) --
     def _record_create(self, path: str, is_dir: bool) -> None:
         with self._lock:
             self._created[path] = is_dir
 
+    def _has_created(self, path: str) -> bool:
+        with self._lock:
+            return path in self._created
+
+    # existence-probe memo for _write_at's orphan check: paths proven to
+    # pre-exist are never probed again (streamed appends stay one op/chunk)
+    def _is_preexisting(self, path: str) -> bool:
+        with self._lock:
+            return path in self._preexisting
+
+    def _mark_preexisting(self, path: str) -> None:
+        with self._lock:
+            self._preexisting.add(path)
+
     def _record_rename(self, src: str, dst: str) -> None:
         with self._lock:
-            prefix = src + "/"
-            for p in [p for p in self._created if p == src or p.startswith(prefix)]:
+            for p in [p for p in self._created if is_under(p, src)]:
                 self._created[dst + p[len(src):]] = self._created.pop(p)
 
     # -- lifecycle --
     def __enter__(self) -> "Transaction":
-        if self.fs._txn is not None:
-            raise RuntimeError("nested transactions are not supported")
-        self._ledger_start = len(self.fs.ledger)
+        # no drain barrier here: region tags and the journal both capture
+        # the active txn at submission time, so in-flight pre-region ops
+        # stay untagged/unjournaled no matter when they finish — and a
+        # transaction open must not stall on unrelated background I/O
+        with self.fs._txn_lock:
+            if self.fs._txn is not None:
+                raise RuntimeError("nested transactions are not supported")
+            self.fs._txn = self
         self._active = True
-        self.fs._txn = self
         return self
 
     def __exit__(self, exc_type, exc, tb) -> bool:
@@ -66,7 +99,7 @@ class Transaction:
         return False
 
     def errors(self):
-        return self.fs.ledger.entries()[self._ledger_start:]
+        return self.fs.ledger.entries_for(self)
 
     def commit(self) -> None:
         """Drain all deferred I/O; surface any failure as a single
@@ -80,8 +113,14 @@ class Transaction:
 
     def rollback(self) -> None:
         """Remove every output of the transaction.  Runs synchronously and
-        directly against the backend — rollback must not itself be canny."""
+        directly against the backend — rollback must not itself be canny.
+
+        Removal is verified against the backend (one retry pass for
+        stragglers — e.g. a transient injected fault on the unlink itself);
+        anything still present afterwards is reported in
+        ``rollback_leftovers`` rather than silently leaked."""
         self.fs.drain()
+        self.final_errors = self.errors()
         with self._lock:
             created = dict(self._created)
             self._created.clear()
@@ -90,42 +129,143 @@ class Transaction:
         dirs = sorted((p for p, d in created.items() if d),
                       key=lambda p: -p.count("/"))
         backend = self.fs.backend
-        for p in files:
+
+        failed: list[str] = []
+
+        def sweep(paths: list[str], remove) -> None:
+            for p in paths:
+                try:
+                    remove(p)
+                except OSError:
+                    failed.append(p)  # a non-raising remove needs no verify
+                self.fs.engine.stat_cache.invalidate(p)
+
+        sweep(files, backend.unlink)
+        sweep(dirs, backend.rmdir)
+        # verification pass over the failures only: ask the backend what
+        # actually survived, retry once, record the rest.  A path that
+        # cannot even be stat'ed is *reported*, not assumed gone.
+        leftovers: list[str] = []
+        for p in sorted(failed, key=lambda q: -q.count("/")):
             try:
-                backend.unlink(p)
+                st = backend.stat(p)
+            except OSError:
+                leftovers.append(p)
+                continue
+            if not st.exists:
+                continue
+            try:
+                (backend.rmdir if created[p] else backend.unlink)(p)
             except OSError:
                 pass
             self.fs.engine.stat_cache.invalidate(p)
-        for p in dirs:
             try:
-                backend.rmdir(p)
+                if backend.stat(p).exists:
+                    leftovers.append(p)
             except OSError:
-                pass
-            self.fs.engine.stat_cache.invalidate(p)
-        # the failed region's errors are handled; un-poison so a retry can run
-        self.fs.ledger.clear()
+                leftovers.append(p)
+        self.rollback_leftovers = leftovers
+        # scoped clear: only this region's errors are handled — entries
+        # from earlier work or a concurrently-opened region must survive
+        self.fs.ledger.clear_region(self)
         self.fs.engine.reset_poison()
+        self.fs.engine.stats.rollbacks += 1
+        self.fs.engine.stats.rollback_leftovers += len(leftovers)
         self.rolled_back = True
+
+
+def _entry_signal(err: BaseException) -> bool | None:
+    """Transience signal of one ledger entry: None for cancellations (a
+    secondary effect of poisoning — says nothing about the root cause)."""
+    if isinstance(err, OpCancelledError):
+        return None
+    if isinstance(err, OSError):
+        return err.errno in TRANSIENT_ERRNOS
+    return True
+
+
+def _is_resubmittable(e: BaseException, region_errs=()) -> bool:
+    """Would resubmitting the job plausibly clear this failure?
+
+    Decides from root causes: cancelled-op entries are ignored, and a
+    poison raised into the body is judged by the region's own recorded
+    errors (``region_errs``, snapshotted before rollback cleared them) —
+    a deterministic ENOENT that tripped abort_on_error must not buy
+    itself a full retry budget via the poison path."""
+    if isinstance(e, TransactionFailedError):
+        # retry iff any real deferred entry looks transient — deterministic
+        # cascades (ENOENT under a faulted mkdir) carry their transient
+        # root cause in the same ledger scope
+        signals = [s for s in (_entry_signal(en.error) for en in e.entries)
+                   if s is not None]
+        return any(signals) if signals else True
+    if isinstance(e, (EnginePoisonedError, OpCancelledError)):
+        signals = [s for s in (_entry_signal(en.error) for en in region_errs)
+                   if s is not None]
+        return any(signals) if signals else True  # unknown cause: resubmit
+    if isinstance(e, OSError):
+        return e.errno in TRANSIENT_ERRNOS
+    return True  # unknown failure class: keep the paper's resubmit default
 
 
 def run_transaction(fs: CannyFS, body: Callable[[CannyFS], T], *,
                     name: str = "job", retries: int = 2,
-                    backoff_s: float = 0.0) -> T:
+                    backoff_s: float = 0.0,
+                    retry_on: tuple[type[BaseException], ...] = (
+                        TransactionFailedError, EnginePoisonedError,
+                        OpCancelledError, OSError)) -> T:
     """The paper's full model: run body as a transaction; on failure roll
-    back (outputs removed) and retry the whole thing."""
+    back (outputs removed) and retry the whole thing.
+
+    ``retry_on`` defaults to every I/O-shaped failure: deferred errors
+    surfacing at commit, fail-fast submissions against a poisoned engine,
+    and synchronous OSErrors raised straight out of the body (a blocking
+    read/readdir that hit an injected or real fault) — but only for
+    *transient* errnos (``TRANSIENT_ERRNOS``).  A deterministic body bug —
+    FileNotFoundError on a misspelled path, whether raised synchronously or
+    deferred into the commit's TransactionFailedError — is rolled back once
+    and propagates immediately.  A commit failure is still retried when
+    *any* of its entries is transient: cascade errors (ENOENT on ops under
+    a faulted mkdir) ride along with their transient root cause."""
     last: BaseException | None = None
+    leftover_acc: list[str] = []   # verified leakage across all attempts
     for attempt in range(retries + 1):
         txn = Transaction(fs, name=f"{name}#{attempt}")
         try:
             with txn:
                 out = body(fs)
+            if leftover_acc:
+                # an earlier attempt's verified leakage must not vanish
+                # behind this attempt's success — route it through the
+                # deferred-error channel so teardown reporting surfaces it
+                fs.ledger.record(
+                    0, "rollback", tuple(leftover_acc),
+                    RollbackLeakError(
+                        f"{len(leftover_acc)} path(s) survived rollback of "
+                        f"failed attempts"))
             return out
-        except TransactionFailedError as e:
-            last = e
+        except retry_on as e:
             if not txn.rolled_back:  # commit failed inside __exit__
                 txn.rollback()
-            if backoff_s:
-                time.sleep(backoff_s * (attempt + 1))
+            # rollback snapshotted the region's errors before clearing
+            # them — the resubmittability decision needs the root causes
+            region_errs = txn.final_errors
+            for p in txn.rollback_leftovers:
+                if p not in leftover_acc:
+                    leftover_acc.append(p)
+            if leftover_acc:
+                # verified on-backend leakage must reach the caller, not
+                # die with the per-attempt txn objects (a retry only
+                # journals what it created itself, so an earlier attempt's
+                # stuck path would otherwise go unreported)
+                e.rollback_leftovers = list(leftover_acc)
+            if not _is_resubmittable(e, region_errs):
+                raise  # deterministic body bug: rolled back, not retried
+            last = e
+            if attempt < retries:
+                fs.engine.stats.retries += 1
+                if backoff_s:  # no pointless sleep after the final attempt
+                    time.sleep(backoff_s * (attempt + 1))
             continue
     assert last is not None
     raise last

@@ -2,11 +2,14 @@
 failure injection, reshard-on-restore, and hypothesis pytree roundtrips."""
 import threading
 
-import hypothesis.strategies as stx
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (see requirements-dev.txt)")
+import hypothesis.strategies as stx
 from hypothesis import HealthCheck, given, settings
 
 from repro.checkpoint import (COMMIT_FILE, TransactionalCheckpointManager)

@@ -8,6 +8,10 @@ never *what*.
 """
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (see requirements-dev.txt)")
 import hypothesis.strategies as stx
 from hypothesis import HealthCheck, given, settings
 

@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocess runs: opt-in
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 

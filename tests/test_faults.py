@@ -1,0 +1,811 @@
+"""Fault-injection tests: the paper's error paths, exercised for real.
+
+Deterministic-seed chaos: injected EACCES/ENOSPC/EDQUOT/EIO/connection-loss
+land in the deferred-error ledger, poison the engine under abort_on_error,
+fail transactions at commit, and the rollback + resubmit loop converges
+once the fault schedule expires.  Same seed => same ledger contents."""
+import errno
+import threading
+
+import pytest
+
+from repro.core import (CannyFS, EagerFlags, EnginePoisonedError,
+                        FaultInjectingBackend, FaultPlan, FaultRule,
+                        InMemoryBackend, LatencyBackend, LatencyModel,
+                        OpCancelledError, QuotaBackend, Transaction,
+                        TransactionFailedError, VirtualClock, make_fault,
+                        run_transaction)
+
+
+def chaos_fs(rules, *, seed=0, workers=1, quota=None, latency=False,
+             **fs_kw):
+    """FaultInjecting(Quota?(Latency?(InMemory))) with a quiet ledger."""
+    inner = InMemoryBackend()
+    stack = inner
+    clock = None
+    if latency:
+        clock = VirtualClock()
+        stack = LatencyBackend(stack, LatencyModel(meta_ms=2.0, data_ms=2.0,
+                                                   jitter_sigma=0.3,
+                                                   seed=seed), clock=clock)
+    if quota is not None:
+        stack = QuotaBackend(stack, quota)
+    plan = FaultPlan(rules, seed=seed)
+    fs = CannyFS(FaultInjectingBackend(stack, plan), echo_errors=False,
+                 **fs_kw)
+    return inner, plan, clock, fs
+
+
+def extract(fs, n=24, root="out"):
+    fs.makedirs(f"{root}/deep")
+    for i in range(n):
+        fs.write_file(f"{root}/deep/f{i:02d}", bytes([i]) * 64)
+
+
+def ledger_signature(fs):
+    return [(e.kind, e.paths, getattr(e.error, "errno", None))
+            for e in fs.ledger.entries()]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultRule semantics
+# ---------------------------------------------------------------------------
+
+def test_rule_matching_by_kind_glob_and_window():
+    plan = FaultPlan([FaultRule(error="EACCES", ops=("write",),
+                                path_glob="out/*", after_count=2)])
+    assert plan.check("create", "out/a") is None          # kind mismatch
+    assert plan.check("write", "tmp/a") is None           # glob mismatch
+    assert plan.check("write", "out/a") is None           # window: call 1
+    assert plan.check("write", "out/b") is None           # window: call 2
+    err = plan.check("write", "out/c")                    # call 3 fires
+    assert isinstance(err, OSError) and err.errno == errno.EACCES
+    assert err.injected
+
+
+def test_plan_max_failures_and_expire():
+    plan = FaultPlan([FaultRule(error="EIO", max_failures=2)])
+    fired = [plan.check("write", f"p{i}") for i in range(5)]
+    assert [e is not None for e in fired] == [True, True, False, False, False]
+    plan.reset()
+    assert plan.check("write", "p") is not None
+    plan.expire()
+    assert plan.check("write", "p") is None
+    assert plan.stats()["injected"] == 1  # reset cleared the first two
+
+
+def test_probability_schedule_is_seeded():
+    def fires(seed):
+        plan = FaultPlan([FaultRule(error="EIO", probability=0.3)], seed=seed)
+        return [plan.check("write", f"p{i}") is not None for i in range(64)]
+
+    assert fires(7) == fires(7)
+    assert fires(7) != fires(8)      # astronomically unlikely to collide
+    assert 4 < sum(fires(7)) < 40    # rate is in the right ballpark
+
+
+def test_make_fault_errnos_and_connection_loss():
+    for name, eno in (("EACCES", errno.EACCES), ("ENOSPC", errno.ENOSPC),
+                      ("EDQUOT", errno.EDQUOT), ("EIO", errno.EIO)):
+        e = make_fault(name, "p")
+        assert isinstance(e, OSError) and e.errno == eno and e.injected
+    e = make_fault("ECONNRESET", "p")
+    assert isinstance(e, ConnectionResetError) and e.injected
+    with pytest.raises(ValueError):
+        make_fault("EBOGUS", "p")
+
+
+# ---------------------------------------------------------------------------
+# ledger / poisoning through the engine
+# ---------------------------------------------------------------------------
+
+def test_mid_extract_eio_lands_in_ledger():
+    _, plan, _, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("write",), path_glob="*f07*")])
+    extract(fs)
+    fs.drain()
+    sig = ledger_signature(fs)
+    assert sig == [("write", ("out/deep/f07",), errno.EIO)]
+    assert fs.stats.deferred_errors == 1
+    assert fs.stats.injected_faults == 1
+    assert fs.stats.error_counts == {"write": 1}
+    fs.close()
+
+
+def test_mid_rmtree_fault_poisons_engine_under_abort():
+    inner, plan, _, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("unlink",), path_glob="*f03*")],
+        abort_on_error=True)
+    extract(fs)
+    fs.drain()
+    assert not fs.poisoned
+    try:
+        fs.rmtree("out")   # poison can trip while rmtree is still submitting
+    except EnginePoisonedError:
+        pass
+    fs.drain()
+    assert fs.poisoned
+    with pytest.raises(EnginePoisonedError):
+        for i in range(50):
+            fs.create(f"later{i}")
+    fs.engine.reset_poison()
+    fs.close()
+
+
+def test_cancelled_untagged_ops_are_ledgered():
+    """Poison cancels queued eager ops; even untagged ones were ACKed and
+    never executed — they must not vanish from the error record."""
+    class Gate(InMemoryBackend):
+        def __init__(self):
+            super().__init__()
+            self.ev = threading.Event()
+
+        def chmod(self, p, m):
+            self.ev.wait()              # hold the single worker...
+            raise PermissionError(p)    # ...then poison
+
+    be = Gate()
+    fs = CannyFS(be, abort_on_error=True, workers=1, echo_errors=False)
+    fs.write_file("x", b"1")
+    fs.drain()
+    fs.chmod("x", 0o600)                # blocks the worker
+    for i in range(5):
+        fs.create(f"q{i}")              # queued behind the blocked worker
+    be.ev.set()
+    fs.drain()
+    assert fs.poisoned
+    entries = fs.ledger.entries()
+    assert len(entries) == 6            # the chmod + 5 cancelled creates
+    assert sum(isinstance(e.error, OpCancelledError) for e in entries) == 5
+    fs.engine.reset_poison()
+    fs.close()
+
+
+def test_failed_op_cache_invalidation_wins():
+    """Instant-failing injected ops race the ACK-time cache write; the
+    error-path invalidation must always win or retries see phantoms."""
+    plan = FaultPlan([FaultRule(error="EIO", ops=("mkdir",))])
+    fs = CannyFS(FaultInjectingBackend(InMemoryBackend(), plan),
+                 echo_errors=False)
+    for i in range(50):
+        fs.mkdir(f"d{i}")
+    fs.drain()
+    for i in range(50):
+        assert fs.engine.stat_cache.get(f"d{i}") is None, f"phantom d{i}"
+    fs.close()
+
+
+def test_connection_loss_is_deferred_like_any_error():
+    _, plan, _, fs = chaos_fs(
+        [FaultRule(error="ECONNRESET", ops=("write",), max_failures=1)])
+    extract(fs, n=4)
+    fs.drain()
+    assert len(fs.ledger) == 1
+    assert isinstance(fs.ledger.entries()[0].error, ConnectionResetError)
+    fs.close()
+
+
+def test_sync_mode_surfaces_fault_directly():
+    _, plan, _, fs = chaos_fs(
+        [FaultRule(error="EACCES", ops=("create",), path_glob="out/*")],
+        flags=EagerFlags.all_off(), workers=2)
+    fs.makedirs("out")
+    with pytest.raises(PermissionError):
+        fs.create("out/x")
+    assert len(fs.ledger) == 0   # sync errors are the caller's, not deferred
+    fs.close()
+
+
+def test_engine_keeps_caller_provided_empty_ledger():
+    """Regression: an empty ErrorLedger is falsy (__len__ == 0); the engine
+    must not swap a caller's ledger for a default echoing one."""
+    from repro.core import EagerIOEngine, ErrorLedger
+    led = ErrorLedger(echo=False)
+    eng = EagerIOEngine(InMemoryBackend(), ledger=led)
+    assert eng.ledger is led
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# quota backend
+# ---------------------------------------------------------------------------
+
+def test_quota_edquot_emerges_mid_write_and_unlink_releases():
+    inner = InMemoryBackend()
+    q = QuotaBackend(inner, 1000)
+    q.mkdir("d")
+    q.write_at("d/a", 0, b"x" * 600)
+    with pytest.raises(OSError) as ei:
+        q.write_at("d/b", 0, b"y" * 600)     # 1200 > 1000
+    assert ei.value.errno == errno.EDQUOT
+    assert not getattr(ei.value, "injected", False)  # organic, not chaos
+    assert q.used == 600
+    q.unlink("d/a")
+    assert q.used == 0
+    q.write_at("d/b", 0, b"y" * 900)          # fits after the release
+    assert inner.snapshot()["files"]["d/b"] == b"y" * 900
+
+
+def test_quota_rewrite_truncate_and_rename_accounting():
+    q = QuotaBackend(InMemoryBackend(), 1000)
+    q.mkdir("d")
+    q.write_at("d/a", 0, b"x" * 400)
+    q.write_at("d/a", 100, b"y" * 100)    # within the charged range: free
+    assert q.used == 400
+    q.truncate("d/a", 50)
+    assert q.used == 50
+    q.rename("d/a", "d/b")
+    assert q.used == 50
+    q.unlink("d/b")
+    assert q.used == 0
+
+
+def test_quota_uncharges_when_inner_op_fails():
+    """A charge whose delegated write never landed must be backed out —
+    otherwise failing ops leak budget no rollback can release."""
+    q = QuotaBackend(InMemoryBackend(), 1000)
+    with pytest.raises(FileNotFoundError):
+        q.write_at("missing_dir/f", 0, b"x" * 400)   # parent absent
+    assert q.used == 0
+    with pytest.raises(FileNotFoundError):
+        q.truncate("missing", 400)
+    assert q.used == 0
+    q.mkdir("d")
+    q.write_at("d/f", 0, b"x" * 900)                 # budget still intact
+    assert q.used == 900
+
+
+def test_quota_create_truncates_and_releases_old_charge():
+    q = QuotaBackend(InMemoryBackend(), 150)
+    q.mkdir("d")
+    q.write_at("d/f", 0, b"x" * 100)
+    q.create("d/f")                    # O_TRUNC rewrite: bytes are gone
+    assert q.used == 0
+    q.write_at("d/f", 0, b"y" * 10)
+    q.write_at("d/g", 0, b"z" * 100)   # 110 fits: no spurious EDQUOT
+    assert q.used == 110
+
+
+def test_fault_rule_matches_rename_destination():
+    plan = FaultPlan([FaultRule(error="EIO", ops=("rename",),
+                                path_glob="out/*")])
+    be = FaultInjectingBackend(InMemoryBackend(), plan)
+    be.mkdir("tmp")
+    be.mkdir("out")
+    be.create("tmp/x")
+    with pytest.raises(OSError):
+        be.rename("tmp/x", "out/x")    # dst matches the glob
+    be.rename("tmp/x", "tmp/y")        # neither endpoint matches: fine
+
+
+def test_quota_rename_over_existing_releases_dst_charge():
+    q = QuotaBackend(InMemoryBackend(), 1000)
+    q.mkdir("d")
+    q.write_at("d/a", 0, b"x" * 100)
+    q.write_at("d/b", 0, b"y" * 200)
+    q.rename("d/a", "d/b")     # overwrite: d/b's old 200 bytes are gone
+    assert q.used == 100
+    q.unlink("d/b")
+    assert q.used == 0
+
+
+def test_quota_hardlink_cannot_escape_budget():
+    """Per-path accounting charges a link like a copy; unlinking one name
+    must not free bytes still reachable through the other."""
+    q = QuotaBackend(InMemoryBackend(), 1000)
+    q.mkdir("d")
+    q.write_at("d/a", 0, b"x" * 400)
+    q.link("d/a", "d/b")
+    assert q.used == 800          # conservative double-count
+    q.unlink("d/a")
+    assert q.used == 400          # 'd/b' still holds its charge
+    with pytest.raises(OSError) as ei:
+        q.write_at("d/c", 0, b"y" * 700)   # 400 + 700 > 1000
+    assert ei.value.errno == errno.EDQUOT
+    q.unlink("d/b")
+    assert q.used == 0
+
+
+def test_quota_exhaustion_fails_transaction_and_rollback_releases():
+    inner = InMemoryBackend()
+    q = QuotaBackend(inner, 1500)
+    fs = CannyFS(q, echo_errors=False)
+
+    def body(fs):
+        extract(fs, n=40)   # 40 * 64 = 2560 bytes > 1500 budget
+
+    # eager writes defer the EDQUOT into the ledger; commit surfaces it
+    with pytest.raises(TransactionFailedError) as ei:
+        run_transaction(fs, body, retries=2)
+    assert all(e.error.errno == errno.EDQUOT for e in ei.value.entries)
+    assert inner.snapshot()["files"] == {}    # rolled back every attempt
+    assert q.used == 0                        # budget fully released
+    assert fs.stats.rollbacks == 3
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# transaction rollback / resubmit under faults
+# ---------------------------------------------------------------------------
+
+def test_rollback_and_retry_succeeds_after_plan_exhausts():
+    inner, plan, _, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("write",), path_glob="out/*",
+                   max_failures=1)])
+    run_transaction(fs, extract, retries=3)
+    fs.drain()
+    snap = inner.snapshot()
+    assert len(snap["files"]) == 24
+    assert fs.stats.retries == 1 and fs.stats.rollbacks == 1
+    assert plan.injected == 1
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_retry_succeeds_once_plan_expires():
+    inner, plan, _, fs = chaos_fs(
+        [FaultRule(error="ENOSPC", ops=("write", "create"))])  # always fails
+    attempts = []
+
+    def body(fs):
+        attempts.append(1)
+        if len(attempts) == 2:
+            plan.expire()        # the outage ends between attempts
+        extract(fs, n=8)
+
+    run_transaction(fs, body, retries=4)
+    assert len(attempts) == 2    # one failed attempt, one clean
+    assert len(inner.snapshot()["files"]) == 8
+    fs.close()
+
+
+def test_rollback_clears_only_transaction_scoped_ledger_entries():
+    """The satellite fix: a rollback must not wipe deferred errors recorded
+    *before* the transaction began."""
+    _, plan, _, fs = chaos_fs(
+        [FaultRule(error="EACCES", ops=("chmod",), max_failures=1),
+         FaultRule(error="EIO", ops=("write",), path_glob="out/*",
+                   max_failures=1)])
+    fs.create("pre")
+    fs.chmod("pre", 0o600)       # rule 1: pre-transaction deferred error
+    fs.drain()
+    assert len(fs.ledger) == 1
+    txn = Transaction(fs)
+    with pytest.raises(TransactionFailedError):
+        with txn:
+            extract(fs, n=6)     # rule 2 fires inside the region
+    assert not txn.rolled_back
+    txn.rollback()
+    sig = ledger_signature(fs)
+    assert sig == [("chmod", ("pre",), errno.EACCES)], \
+        "pre-transaction ledger entry must survive rollback"
+    fs.close()
+
+
+def test_inflight_pre_txn_error_survives_rollback():
+    """An eager op still in flight when the transaction starts must have
+    its deferred error recorded *outside* the region's ledger scope."""
+    _, plan, _, fs = chaos_fs(
+        [FaultRule(error="EACCES", ops=("chmod",), max_failures=1),
+         FaultRule(error="EIO", ops=("write",), path_glob="out/*",
+                   max_failures=1)],
+        latency=True)   # latency keeps the chmod in flight at __enter__
+    fs.create("pre")
+    fs.chmod("pre", 0o600)       # eager; fails in the background, untagged
+    txn = Transaction(fs)
+    with pytest.raises(TransactionFailedError):
+        with txn:
+            extract(fs, n=6)
+    if not txn.rolled_back:
+        txn.rollback()
+    assert ("chmod", ("pre",), errno.EACCES) in ledger_signature(fs)
+    fs.close()
+
+
+def test_non_transient_body_error_is_not_retried():
+    """FileNotFoundError is a deterministic body bug: rolled back once,
+    propagated immediately — no pointless resubmissions."""
+    inner = InMemoryBackend()
+    fs = CannyFS(inner, echo_errors=False)
+    attempts = []
+
+    def body(fs):
+        attempts.append(1)
+        fs.makedirs("out")
+        fs.read_file("out/misspelled")   # sync read -> ENOENT
+
+    with pytest.raises(FileNotFoundError):
+        run_transaction(fs, body, retries=3)
+    assert len(attempts) == 1
+    assert fs.stats.retries == 0
+    assert "out" not in inner.snapshot()["dirs"]   # still rolled back
+    fs.close()
+
+
+def test_deferred_deterministic_bug_is_not_retried():
+    """Eager mode must match sync mode: a body bug whose ENOENT is deferred
+    into the commit's TransactionFailedError propagates after one attempt —
+    and is still rolled back, leaving a clean, usable mount."""
+    inner = InMemoryBackend()
+    fs = CannyFS(inner, echo_errors=False)
+    attempts = []
+
+    def body(fs):
+        attempts.append(1)
+        fs.mkdir("out")                           # journaled output
+        fs.write_file("misspelled_dir/x", b"d")   # eager: ENOENT deferred
+
+    with pytest.raises(TransactionFailedError) as ei:
+        run_transaction(fs, body, retries=3)
+    assert len(attempts) == 1
+    assert all(isinstance(e.error, FileNotFoundError)
+               for e in ei.value.entries)
+    # the failed region was rolled back despite not being retried
+    snap = inner.snapshot()
+    assert "out" not in snap["dirs"] and snap["files"] == {}
+    assert len(fs.ledger) == 0
+    assert not fs.poisoned
+    fs.write_file("after", b"ok")                 # mount still usable
+    fs.drain()
+    assert inner.snapshot()["files"]["after"] == b"ok"
+    fs.close()
+
+
+def test_deterministic_bug_under_abort_on_error_not_retried():
+    """A deterministic ENOENT that trips abort_on_error must not buy a
+    full retry budget via the poison path — one rollback, then propagate."""
+    fs = CannyFS(InMemoryBackend(), abort_on_error=True, workers=1,
+                 echo_errors=False)
+    attempts = []
+
+    def body(fs):
+        attempts.append(1)
+        fs.write_file("misspelled_dir/x", b"d")  # deferred ENOENT -> poison
+        fs.drain()
+        fs.write_file("more", b"y")              # poisoned: raises or cancels
+
+    with pytest.raises((TransactionFailedError, EnginePoisonedError)):
+        run_transaction(fs, body, retries=3)
+    assert len(attempts) == 1
+    assert not fs.poisoned                       # rollback un-poisoned it
+    fs.close()
+
+
+def test_cascade_errors_ride_along_with_transient_root_cause():
+    """A faulted mkdir makes every op under it fail with ENOENT; the commit
+    failure mixes deterministic-looking cascades with the transient root —
+    it must still be retried (and converge once the fault expires)."""
+    inner, plan, _, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("mkdir",), path_glob="out*",
+                   max_failures=1)])
+    run_transaction(fs, lambda f: extract(f, n=6), retries=3)
+    assert len(inner.snapshot()["files"]) == 6
+    assert fs.stats.retries == 1
+    fs.close()
+
+
+def test_pre_activation_work_is_not_journaled():
+    """Work racing the transaction open (slot claimed, _active not yet
+    set) is pre-region and must not be rolled back later."""
+    inner = InMemoryBackend()
+    fs = CannyFS(inner, echo_errors=False)
+    txn = Transaction(fs)
+    fs._txn = txn                  # slot claimed, not yet activated
+    fs.write_file("pre_region", b"1")
+    fs._txn = None
+    fs.drain()
+    assert txn._created == {}, "racing pre-region create was journaled"
+    assert inner.snapshot()["files"]["pre_region"] == b"1"
+    fs.close()
+
+
+def test_rollback_keeps_pre_existing_file_opened_for_write():
+    """Rewriting a pre-transaction file inside the region must not delete
+    it on rollback — the journal records namespace creations only."""
+    inner = InMemoryBackend()
+    inner.mkdir("keep")
+    inner.create("keep/data.bin")
+    inner.write_at("keep/data.bin", 0, b"old")
+    fs = CannyFS(inner, echo_errors=False)
+    txn = Transaction(fs)
+    try:
+        with txn:
+            fs.write_file("keep/data.bin", b"new")   # open('wb') truncates
+            raise RuntimeError("job failed")
+    except RuntimeError:
+        pass
+    snap = inner.snapshot()
+    assert "keep/data.bin" in snap["files"], \
+        "pre-existing file must survive rollback (content not restored)"
+    assert txn.rollback_leftovers == []
+    fs.close()
+
+
+def test_transaction_open_does_not_stall_on_background_io():
+    """Opening a transaction must not act as a global I/O barrier."""
+    import time
+    be = InMemoryBackend()
+    lat = LatencyBackend(be, LatencyModel(meta_ms=300.0, data_ms=300.0,
+                                          jitter_sigma=0.0))
+    fs = CannyFS(lat, echo_errors=False)
+    fs.write_file("bg", b"x")        # ~0.6s of real background latency
+    t0 = time.monotonic()
+    with Transaction(fs):
+        dt = time.monotonic() - t0
+    assert dt < 0.2, f"transaction open stalled {dt:.2f}s on background I/O"
+    fs.close()
+
+
+def test_interleaved_region_rollback_does_not_wipe_other_region():
+    """Region tags, not serial ranges: transaction A's late rollback (after
+    B already opened) must clear only A's entries — B's deferred error
+    still fails B's commit."""
+    _, plan, _, fs = chaos_fs([FaultRule(error="EIO", ops=("write",))])
+    a = Transaction(fs)
+    with pytest.raises(TransactionFailedError):
+        with a:
+            fs.write_file("a_out", b"1")
+    assert not a.rolled_back          # commit failed; rollback still pending
+    b = Transaction(fs)               # opens while A is un-rolled-back
+    with pytest.raises(TransactionFailedError) as ei:
+        with b:
+            fs.write_file("b_out", b"2")
+            fs.drain()
+            a.rollback()              # A's scoped clear runs mid-region-B
+            assert [e.paths for e in b.errors()] == [("b_out",)]
+    assert [e.paths for e in ei.value.entries] == [("b_out",)]
+    b.rollback()
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_leftovers_surface_even_when_retry_succeeds():
+    """A leak from a failed attempt must not vanish behind a later success:
+    it lands in the ledger as a RollbackLeakError for teardown reporting."""
+    from repro.core import RollbackLeakError
+    inner, plan, _, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("write",), path_glob="tmp_a",
+                   max_failures=1),
+         FaultRule(error="EACCES", ops=("unlink",), path_glob="tmp_a")])
+    run_transaction(fs, lambda f: f.write_file("tmp_a", b"v"), retries=2)
+    leaks = [e for e in fs.ledger.entries()
+             if isinstance(e.error, RollbackLeakError)]
+    assert len(leaks) == 1 and leaks[0].paths == ("tmp_a",)
+    assert inner.snapshot()["files"]["tmp_a"] == b"v"   # job did succeed
+    fs.close()
+
+
+def test_rollback_verification_reports_leftovers():
+    """A path whose unlink keeps failing is reported, not silently leaked."""
+    _, plan, _, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("write",), path_glob="*f01*",
+                   max_failures=1),
+         FaultRule(error="EACCES", ops=("unlink",), path_glob="*f00*")])
+    txn = Transaction(fs)
+    with pytest.raises(TransactionFailedError):
+        with txn:
+            extract(fs, n=4)
+    txn.rollback()
+    # the stuck file plus its (hence non-empty) ancestor directories
+    assert txn.rollback_leftovers == ["out/deep/f00", "out/deep", "out"]
+    assert fs.stats.rollback_leftovers == 3
+    fs.close()
+
+
+def test_run_transaction_attaches_leftovers_to_raised_error():
+    """Verified on-backend leakage must survive run_transaction — callers
+    only ever see the raised exception."""
+    _, plan, _, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("write",), path_glob="*f01*"),
+         FaultRule(error="EACCES", ops=("unlink",), path_glob="*f00*")])
+    with pytest.raises(TransactionFailedError) as ei:
+        run_transaction(fs, lambda f: extract(f, n=4), retries=1)
+    # attempt 1's verified leakage is accumulated onto the final error even
+    # though attempt 2 (which didn't re-create the stuck file) saw none
+    assert ei.value.rollback_leftovers == ["out/deep/f00", "out/deep", "out"]
+    assert fs.stats.rollback_leftovers == 3       # all from attempt 1
+    fs.close()
+
+
+def test_rollback_through_full_decorator_stack():
+    """Latency (virtual clock) + quota + faults, all at once — and the
+    retry converges with an intact namespace."""
+    inner, plan, clock, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("write", "create"), probability=0.2,
+                   max_failures=4)],
+        latency=True, quota=4096, workers=8, seed=3)
+    run_transaction(fs, lambda f: extract(f, n=16), retries=6)
+    fs.drain()
+    assert len(inner.snapshot()["files"]) == 16
+    assert clock.now() > 0.0          # latency was simulated, not slept
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_poison_from_untagged_op_cannot_let_commit_succeed():
+    """An untagged eager op failing mid-region poisons the engine and
+    cancels the region's queued ops; the cancellations are ledgered under
+    the region, so commit cannot claim durability."""
+    fs = CannyFS(InMemoryBackend(), abort_on_error=True, workers=1,
+                 echo_errors=False)
+    txn = Transaction(fs)
+
+    def boom():
+        raise PermissionError("background job")
+
+    with pytest.raises((TransactionFailedError, EnginePoisonedError)):
+        with txn:
+            # a background op outside any transaction (region=None)
+            fs.engine.submit("chmod", ("x",), boom, eager=True)
+            for i in range(20):
+                fs.write_file(f"out{i}", b"y")
+    assert not txn.committed
+    fs.engine.reset_poison()
+    fs.close()
+
+
+def test_checkpoint_failed_step_can_be_resaved():
+    """A save that failed once must not poison every future save of the
+    same step with its stale ledger entries."""
+    np = pytest.importorskip("numpy")
+    from repro.checkpoint import COMMIT_FILE, TransactionalCheckpointManager
+    inner = InMemoryBackend()
+    plan = FaultPlan([FaultRule(error="EIO", ops=("write",),
+                                path_glob="*w.bin", max_failures=1)])
+    fs = CannyFS(FaultInjectingBackend(inner, plan), echo_errors=False)
+    mgr = TransactionalCheckpointManager(fs, "ck")
+    state = {"w": np.ones(8, np.float32)}
+    res1 = mgr.save(3, state, block=True)
+    assert not res1.ok
+    res2 = mgr.save(3, state, block=True)   # fault expired: must succeed
+    assert res2.ok, res2.error
+    assert any(COMMIT_FILE in p for p in inner.snapshot()["files"])
+    fs.close()
+
+
+def test_checkpoint_io_is_detached_from_user_transaction():
+    """Checkpoint files have their own commit protocol: a failed save under
+    an open user transaction must not fail that transaction's commit, be
+    rolled back by it, or poison future saves of the step."""
+    np = pytest.importorskip("numpy")
+    from repro.checkpoint import COMMIT_FILE, TransactionalCheckpointManager
+    inner = InMemoryBackend()
+    plan = FaultPlan([FaultRule(error="EIO", ops=("write",),
+                                path_glob="*w.bin", max_failures=1)])
+    fs = CannyFS(FaultInjectingBackend(inner, plan), echo_errors=False)
+    mgr = TransactionalCheckpointManager(fs, "ck")
+    state = {"w": np.ones(8, np.float32)}
+    with Transaction(fs) as txn:
+        fs.write_file("user_out", b"u")
+        res1 = mgr.save(3, state, block=True)   # fails: injected EIO
+    assert txn.committed, "user txn must not inherit checkpoint errors"
+    assert not res1.ok
+    res2 = mgr.save(3, state, block=True)       # fault expired
+    assert res2.ok, res2.error
+    assert any(COMMIT_FILE in p for p in inner.snapshot()["files"])
+    assert inner.snapshot()["files"]["user_out"] == b"u"
+    fs.close()
+
+
+def test_prefetch_stat_fault_does_not_fail_transaction():
+    """readdir prefetch is advisory cache warm-up: its failures must not
+    land in the ledger and condemn an otherwise-successful region."""
+    inner = InMemoryBackend()
+    inner.mkdir("pre")
+    inner.create("pre/a")
+    inner.create("pre/b")
+    plan = FaultPlan([FaultRule(error="EIO", ops=("stat",),
+                                path_glob="pre/*")])
+    fs = CannyFS(FaultInjectingBackend(inner, plan), echo_errors=False)
+    with Transaction(fs) as txn:
+        assert fs.readdir("pre") == ["a", "b"]   # prefetch stats fault
+        fs.write_file("out", b"x")
+    assert txn.committed
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_save_on_poisoned_engine_reports_failure_not_raise():
+    """A poisoned mount must fail the save via SaveResult (and recover),
+    not raise EnginePoisonedError into the train loop."""
+    np = pytest.importorskip("numpy")
+    from repro.checkpoint import TransactionalCheckpointManager
+
+    class Bad(InMemoryBackend):
+        def chmod(self, p, m):
+            raise PermissionError(p)
+
+    fs = CannyFS(Bad(), abort_on_error=True, workers=2, echo_errors=False)
+    mgr = TransactionalCheckpointManager(fs, "ck")
+    fs.create("x")
+    fs.drain()
+    fs.chmod("x", 0o600)
+    fs.drain()
+    assert fs.poisoned
+    res = mgr.save(1, {"w": np.ones(4, np.float32)}, block=True)
+    assert not res.ok and "Poisoned" in res.error
+    res2 = mgr.save(2, {"w": np.ones(4, np.float32)}, block=True)
+    assert res2.ok                       # abort_save un-poisoned the mount
+    fs.close()
+
+
+def test_checkpoint_survives_poison_cancelling_its_writes():
+    """Poison from an unrelated op cancels the checkpoint's queued writes:
+    no COMMIT may be written, the failure must be reported (not crash the
+    finalizer thread), and the result must still be recorded."""
+    np = pytest.importorskip("numpy")
+    from repro.checkpoint import COMMIT_FILE, TransactionalCheckpointManager
+
+    class Gate(InMemoryBackend):
+        def __init__(self):
+            super().__init__()
+            self.ev = threading.Event()
+
+        def chmod(self, p, m):
+            self.ev.wait()
+            raise PermissionError(p)
+
+    be = Gate()
+    fs = CannyFS(be, abort_on_error=True, workers=1, echo_errors=False)
+    mgr = TransactionalCheckpointManager(fs, "ck")
+    fs.write_file("unrelated", b"1")
+    fs.drain()
+    fs.chmod("unrelated", 0o600)      # wedge the worker, then poison
+    res = mgr.save(1, {"w": np.ones(8, np.float32)})
+    be.ev.set()
+    mgr.wait_for_save()
+    assert not res.ok and res.error
+    assert not any(COMMIT_FILE in p for p in be.snapshot()["files"])
+    assert len(mgr.results) == 1      # finalizer reported despite poison
+    fs.engine.reset_poison()
+    fs.close()
+
+
+def test_checkpoint_commit_write_failure_is_not_reported_ok():
+    """A fault on the COMMIT marker write must fail the save: a durable-
+    looking checkpoint that restore() will never see is the worst outcome."""
+    np = pytest.importorskip("numpy")
+    from repro.checkpoint import COMMIT_FILE, TransactionalCheckpointManager
+    inner = InMemoryBackend()
+    plan = FaultPlan([FaultRule(error="ENOSPC", ops=("write",),
+                                path_glob=f"*{COMMIT_FILE}")])
+    fs = CannyFS(FaultInjectingBackend(inner, plan), echo_errors=False)
+    mgr = TransactionalCheckpointManager(fs, "ck")
+    res = mgr.save(1, {"w": np.ones(8, np.float32)}, block=True)
+    assert not res.ok
+    assert "ENOSPC" in res.error or "injected" in res.error
+    assert not any(COMMIT_FILE in p for p in inner.snapshot()["files"])
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# determinism: same seed -> same ledger, three runs in a row
+# ---------------------------------------------------------------------------
+
+def chaos_run(seed):
+    """Probabilistic chaos with a per-file drain: execution order equals
+    submission order, so the seeded fault schedule — and thus the ledger —
+    replays exactly, independent of worker scheduling."""
+    inner, plan, _, fs = chaos_fs(
+        [FaultRule(error="EIO", ops=("write", "chmod"), probability=0.15)],
+        seed=seed, workers=4)
+    fs.makedirs("out/deep")
+    for i in range(30):
+        fs.write_file(f"out/deep/f{i:02d}", bytes([i]) * 32)
+        fs.chmod(f"out/deep/f{i:02d}", 0o644)
+        fs.drain()
+    sig = ledger_signature(fs)
+    stats = (fs.stats.deferred_errors, fs.stats.injected_faults,
+             plan.injected)
+    fs.close()
+    return sig, stats
+
+
+def test_same_seed_same_ledger_three_runs():
+    runs = [chaos_run(seed=42) for _ in range(3)]
+    assert runs[0][0], "schedule should inject at least one fault"
+    assert runs[0] == runs[1] == runs[2]
+
+
+def test_different_seed_different_schedule():
+    assert chaos_run(seed=1)[0] != chaos_run(seed=2)[0]

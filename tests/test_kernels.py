@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 from numpy.testing import assert_allclose
 
+pytestmark = pytest.mark.slow  # jax kernel sweeps: opt-in (see pytest.ini)
+
 
 def tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \

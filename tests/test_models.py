@@ -11,6 +11,8 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models import (cross_entropy, decode_step, forward_train,
                           init_cache, init_params, prefill)
 
+pytestmark = pytest.mark.slow  # jax model smoke tests: opt-in (see pytest.ini)
+
 RNG = jax.random.PRNGKey(0)
 B, S = 2, 32
 

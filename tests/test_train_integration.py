@@ -14,6 +14,8 @@ from repro.launch.mesh import make_debug_mesh
 from repro.train.loop import LoopConfig, Trainer, run_with_restarts
 from repro.train.steps import TrainConfig
 
+pytestmark = pytest.mark.slow  # jax train integration: opt-in (see pytest.ini)
+
 
 def make_trainer(fs, cfg, total=30, ckpt_every=10):
     mesh = make_debug_mesh(1)
