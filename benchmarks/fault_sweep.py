@@ -43,8 +43,15 @@ CHAOS_OPS = ("mkdir", "create", "write", "unlink", "rmdir", "chmod", "utimens")
 
 def build_stack(*, fault_rate: float, seed: int, quota_bytes: int | None,
                 load: float = 1.0, max_failures: int = 3,
-                virtual: bool = True):
-    """-> (top backend, inner InMemoryBackend, plan, clock)."""
+                virtual: bool = True, short_rate: float = 0.0,
+                spike_rate: float = 0.0, spike_ms: float = 50.0):
+    """-> (top backend, inner InMemoryBackend, plan, clock).
+
+    ``short_rate`` adds torn-op faults (writes land a short count instead
+    of raising); ``spike_rate``/``spike_ms`` add per-rule latency spikes
+    (slow ops, not failed ops — the straggler/backpressure stressor).
+    Spikes sleep on the same clock as the latency layer, so virtual runs
+    replay them without real stalls."""
     inner = InMemoryBackend()
     clock = VirtualClock() if virtual else RealClock()
     remote = LatencyBackend(
@@ -60,14 +67,24 @@ def build_stack(*, fault_rate: float, seed: int, quota_bytes: int | None,
         rules.append(FaultRule(error="EIO", ops=CHAOS_OPS,
                                probability=fault_rate,
                                max_failures=max_failures))
+    if short_rate > 0:
+        rules.append(FaultRule(outcome="short", ops=("write",),
+                               probability=short_rate,
+                               max_failures=max_failures))
+    if spike_rate > 0:
+        rules.append(FaultRule(outcome="delay", ops=CHAOS_OPS,
+                               probability=spike_rate,
+                               delay_s=spike_ms / 1e3))
     plan = FaultPlan(rules, seed=seed)
-    return FaultInjectingBackend(stack, plan), inner, plan, clock
+    return FaultInjectingBackend(stack, plan, clock=clock), inner, plan, clock
 
 
 def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
                      quota_frac: float | None = None,
                      spec: TreeSpec | None = None,
-                     retries: int = 6, virtual: bool = True) -> dict:
+                     retries: int = 6, virtual: bool = True,
+                     short_rate: float = 0.0, spike_rate: float = 0.0,
+                     spike_ms: float = 50.0) -> dict:
     """One sweep cell: extract then rmtree, each as a resubmittable
     transaction; returns the measured row.  ``virtual=False`` pays real
     sleeps, making ``wall_s`` the paper-comparable end-to-end time."""
@@ -78,7 +95,8 @@ def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
                    if quota_frac is not None else None)
     backend, inner, plan, clock = build_stack(
         fault_rate=fault_rate, seed=seed, quota_bytes=quota_bytes,
-        virtual=virtual)
+        virtual=virtual, short_rate=short_rate, spike_rate=spike_rate,
+        spike_ms=spike_ms)
     flags = EagerFlags() if eager else EagerFlags.all_off()
     fs = CannyFS(backend, flags=flags, max_inflight=4000,
                  workers=32 if eager else 2,
@@ -127,6 +145,10 @@ def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
         "ledger_final": len(fs.ledger),
         "deferred_errors": st.deferred_errors,
         "injected_faults": plan.injected,
+        "latency_spikes": plan.delayed,
+        "spike_stall_s": round(plan.delay_s_total, 3),
+        "fused_writes": st.fused_writes,
+        "elided_ops": st.elided_ops,
         "ops_submitted": st.submitted,
         "committed": committed,
         "rolled_back_then_succeeded": committed and st.rollbacks > 0,
@@ -138,12 +160,16 @@ def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
 
 
 def sweep(*, seed: int, fault_rates, eager_modes=(True, False),
-          quota_frac: float | None = None) -> list[dict]:
+          quota_frac: float | None = None, short_rate: float = 0.0,
+          spike_rate: float = 0.0, spike_ms: float = 50.0) -> list[dict]:
     rows = []
     for rate in fault_rates:
         for eager in eager_modes:
             rows.append(run_chaos_config(fault_rate=rate, eager=eager,
-                                         seed=seed, quota_frac=quota_frac))
+                                         seed=seed, quota_frac=quota_frac,
+                                         short_rate=short_rate,
+                                         spike_rate=spike_rate,
+                                         spike_ms=spike_ms))
     return rows
 
 
@@ -155,10 +181,17 @@ def main() -> None:
     ap.add_argument("--quota-frac", type=float, default=None,
                     help="byte budget as a fraction of the tree size "
                          "(e.g. 1.25); omit for no quota")
+    ap.add_argument("--short-rate", type=float, default=0.0,
+                    help="probability a write lands torn (short count)")
+    ap.add_argument("--spike-rate", type=float, default=0.0,
+                    help="probability an op takes a latency spike")
+    ap.add_argument("--spike-ms", type=float, default=50.0,
+                    help="latency spike length (virtual ms)")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args()
     rows = sweep(seed=args.seed, fault_rates=args.fault_rates,
-                 quota_frac=args.quota_frac)
+                 quota_frac=args.quota_frac, short_rate=args.short_rate,
+                 spike_rate=args.spike_rate, spike_ms=args.spike_ms)
     doc = {"seed": args.seed, "rows": rows}
     text = json.dumps(doc, indent=2)
     if args.out:  # persist before stdout: a closed pipe must not lose the file

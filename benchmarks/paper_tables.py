@@ -11,8 +11,10 @@ import numpy as np
 
 from repro.core import CannyFS, EagerFlags, InMemoryBackend
 
-from .workloads import (TreeSpec, bench_scale, make_remote_backend,
-                        run_extraction, run_removal, synth_tree, extract_tree)
+from .workloads import (TreeSpec, bench_scale, extract_tree,
+                        extract_tree_chunked, fusion_stats,
+                        make_remote_backend, remove_tree_manifest,
+                        run_extraction, run_removal, synth_tree)
 
 
 def _summary(name: str, times: list[float], baseline: float | None = None):
@@ -156,6 +158,58 @@ def rw_switch() -> list:
         t = time.monotonic() - t0
         rows.append((f"rw_switch/{mode}", f"{t / n * 1e6:.0f}",
                      f"total={t:.2f}s;n={n}"))
+    return rows
+
+
+def fusion_table() -> list:
+    """Op-fusion ablation: cannyfs vs cannyfs-nofusion vs direct.
+
+    Two workloads:
+    * ``extract`` — chunked (unzip-style) extraction; the coalescer turns
+      per-chunk writes into one write_vec per file (fused_writes > 0,
+      fewer backend ops, less virtual service time);
+    * ``extract_rm`` — extraction and manifest-driven removal in the same
+      unobserved window; create+write chains are elided outright
+      (elided_ops/bytes_elided > 0) — the transactional rewrite at full
+      strength.
+
+    Latency is real (slept, small — scale with REPRO_BENCH_SCALE) so the
+    remote queue genuinely backs up: that pending backlog is exactly what
+    elision rewrites; a virtual clock would drain the queue before the
+    removal phase could reach it.  ``service_s`` is the backend's accrued
+    service time (``busy_s``: the latency model's virtualized cost of
+    every remote call — lower means fewer/cheaper backend ops),
+    ``backend_ops`` the number of remote calls, ``wall_s`` real time."""
+    import time
+    from repro.core import LatencyBackend, LatencyModel
+    spec = TreeSpec(n_files=200, n_dirs=16, mean_kb=24.0).scaled()
+    dirs, files = synth_tree(spec)
+    modes = (("cannyfs", EagerFlags(), True, 8),
+             ("cannyfs-nofusion", EagerFlags(), False, 8),
+             ("direct", EagerFlags.all_off(), False, 2))
+    workloads = {
+        "extract": lambda fs: extract_tree_chunked(fs, dirs, files),
+        "extract_rm": lambda fs: (extract_tree_chunked(fs, dirs, files),
+                                  remove_tree_manifest(fs, dirs, files)),
+    }
+    rows = []
+    for wname, body in workloads.items():
+        for mode, flags, fusion, workers in modes:
+            remote = LatencyBackend(
+                InMemoryBackend(),
+                LatencyModel(meta_ms=3.0, data_ms=3.0, jitter_sigma=0.0,
+                             server_slots=8, seed=9))
+            t0 = time.monotonic()
+            fs = CannyFS(remote, flags=flags, fusion=fusion,
+                         max_inflight=4000, workers=workers)
+            body(fs)
+            fs.close()
+            wall = time.monotonic() - t0
+            fstats = ";".join(f"{k}={v}" for k, v in fusion_stats(fs).items())
+            rows.append((f"fusion/{wname}/{mode}",
+                         f"{remote.busy_s * 1e6:.0f}",
+                         f"service={remote.busy_s:.2f}s;wall={wall:.2f}s;"
+                         f"backend_ops={remote.op_count};{fstats}"))
     return rows
 
 

@@ -25,6 +25,7 @@ def _tables():
         "budget_sweep": paper_tables.budget_sweep,
         "executor_modes": paper_tables.executor_modes,
         "rw_switch": paper_tables.rw_switch,
+        "fusion": paper_tables.fusion_table,
         "fault_recovery": paper_tables.fault_recovery,
         # beyond-paper: the engine inside the training framework
         "checkpoint_stall": io_training.checkpoint_stall,

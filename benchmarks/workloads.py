@@ -89,6 +89,40 @@ def extract_tree(fs: CannyFS, dirs, files) -> None:
         fs.chmod(path, 0o644)
 
 
+def extract_tree_chunked(fs: CannyFS, dirs, files, chunk: int = 8192) -> None:
+    """The same replay with unzip's actual write pattern: each file is
+    streamed through a bounded buffer, one write() per chunk.  Without the
+    optimizer every chunk is a separate backend roundtrip; with it the
+    chunks coalesce into one vectored write_vec per file."""
+    for d in dirs:
+        fs.makedirs(d)
+    now = time.time()
+    for path, data in files:
+        with fs.open(path, "wb") as f:
+            for lo in range(0, len(data), chunk):
+                f.write(data[lo:lo + chunk])
+        fs.utimens(path, now, now)
+        fs.chmod(path, 0o644)
+
+
+def remove_tree_manifest(fs: CannyFS, dirs, files) -> None:
+    """rm -rf driven by the extractor's own manifest (no readdir): the
+    removal shares the extract's unobserved window, so pending create+write
+    chains are elided instead of ever reaching the backend — the paper's
+    extract-then-delete workload at its transactional best."""
+    for path, _ in files:
+        fs.unlink(path)
+    for d in sorted(dirs, key=lambda p: -p.count("/")):
+        fs.rmdir(d)
+
+
+def fusion_stats(fs: CannyFS) -> dict:
+    """The optimizer's counters for one run, ready for a derived column."""
+    st = fs.stats
+    return {"fused_writes": st.fused_writes, "folded_meta": st.folded_meta,
+            "elided_ops": st.elided_ops, "bytes_elided": st.bytes_elided}
+
+
 def run_extraction(mode: str, dirs, files, *, load: float = 1.0,
                    seed: int = 0, max_inflight: int = 4000,
                    workers: int = 64, executor: str = "pool") -> float:

@@ -41,6 +41,12 @@ from .serialization import (flatten_for_save, manifest_bytes, parse_manifest,
 COMMIT_FILE = "COMMIT"
 MANIFEST_FILE = "manifest.json"
 
+# leaf payloads stream through CannyFile in bounded chunks: consecutive
+# chunks coalesce in the engine's optimizer into one vectored write_vec
+# backend call, so large shards pay one remote roundtrip without the
+# manager ever materializing more than the source array
+_WRITE_CHUNK = 4 << 20
+
 
 @dataclass
 class SaveResult:
@@ -75,6 +81,41 @@ class TransactionalCheckpointManager:
 
     def _step_dir(self, step: int) -> str:
         return f"{self.dir}/step_{step:010d}"
+
+    def _under_dir(self, d: str):
+        """Predicate over ledger entries: this manager's own (detached,
+        untagged) write failures under ``d`` — a user transaction's entries
+        under the step dir belong to its commit, and a failed or cancelled
+        readdir-prefetch stat must not condemn a save."""
+        def pred(e):
+            return (e.region is None and e.kind not in _READ_KINDS
+                    and any(is_under(p, d) for p in e.paths))
+        return pred
+
+    def _discard_step_dir(self, d: str, *, strict: bool = False) -> list:
+        """The single step-dir rollback path (consolidates what used to be
+        three copies: the ack-phase abort, the finalizer's error branch and
+        startup recovery): un-poison the mount so cleanup I/O can run,
+        remove the partial dir, then drop the manager's own deferred
+        errors under it so a re-save of the same step starts from a clean
+        ledger.  Returns the dropped cleanup entries (already echoed at
+        record time) for error reporting.
+
+        Save-path callers run best-effort (``strict=False``: a removal
+        failure is absorbed — startup recovery is their backstop).
+        Startup recovery itself runs ``strict=True``: it IS the backstop,
+        so a dir it cannot remove must propagate, not be reported as
+        rolled back with its errors cleared."""
+        try:
+            self.fs.engine.reset_poison()
+            with self.fs.detached():
+                if self.fs.exists(d):
+                    self.fs.rmtree(d)
+                    self.fs.drain()
+        except (OSError, CannyError):
+            if strict:
+                raise
+        return self.fs.ledger.clear_where(self._under_dir(d))
 
     def _is_committed(self, step: int) -> bool:
         """A COMMIT marker is only trusted if its content names the step —
@@ -114,25 +155,11 @@ class TransactionalCheckpointManager:
         """Startup recovery: delete any checkpoint without a COMMIT marker
         (the paper's 'roll back the failed transaction')."""
         rolled = []
-        removed_dirs = []
         committed = set(self.list_steps(committed_only=True))
-        with self.fs.detached():
-            for step in self.list_steps(committed_only=False):
-                if step not in committed:
-                    d = self._step_dir(step)
-                    self.fs.rmtree(d)
-                    rolled.append(step)
-                    removed_dirs.append(d)
-            if rolled:
-                self.fs.drain()
-                # drop the removals' own deferred errors (already echoed at
-                # record time) — stale entries under a step dir would fail
-                # the first re-save of that step's path-scoped commit check
-                self.fs.ledger.clear_where(
-                    lambda e: e.region is None and any(
-                        any(is_under(p, d) for p in e.paths)
-                        for d in removed_dirs))
-                self.fs.engine.reset_poison()
+        for step in self.list_steps(committed_only=False):
+            if step not in committed:
+                self._discard_step_dir(self._step_dir(step), strict=True)
+                rolled.append(step)
         return rolled
 
     # ------------------------------------------------------------------
@@ -146,12 +173,7 @@ class TransactionalCheckpointManager:
         d = self._step_dir(step)
         res = SaveResult(step=step, directory=d)
         manifest, leaves = flatten_for_save(state)
-
-        def under_d(e):
-            # untagged only: the manager's own (detached) I/O — a user
-            # transaction's entries under the step dir belong to its commit
-            return (e.region is None and e.kind not in _READ_KINDS
-                    and any(is_under(p, d) for p in e.paths))
+        under_d = self._under_dir(d)
 
         def abort_save(e: BaseException) -> SaveResult:
             """Ack-phase failure (e.g. poisoned engine rejecting a queued
@@ -160,15 +182,7 @@ class TransactionalCheckpointManager:
             res.ok = False
             res.error = repr(e)
             res.ack_s = time.monotonic() - t0   # loop was blocked this long
-            try:
-                self.fs.engine.reset_poison()
-                with self.fs.detached():
-                    if self.fs.exists(d):
-                        self.fs.rmtree(d)
-                        self.fs.drain()
-                self.fs.ledger.clear_where(under_d)
-            except (OSError, CannyError):
-                pass  # startup rollback_uncommitted() is the backstop
+            self._discard_step_dir(d)
             res.commit_s = time.monotonic() - t0
             with self._lock:
                 self._results.append(res)
@@ -185,7 +199,12 @@ class TransactionalCheckpointManager:
                                    manifest_bytes(manifest))
                 for key, arr in leaves:
                     fname = key.replace("/", "__") + ".bin"
-                    self.fs.write_file(f"{d}/{fname}", arr.tobytes())
+                    # chunked stream: the optimizer coalesces these into
+                    # one vectored write_vec per shard file
+                    blob = arr.tobytes()
+                    with self.fs.open(f"{d}/{fname}", "wb") as f:
+                        for lo in range(0, len(blob), _WRITE_CHUNK):
+                            f.write(blob[lo:lo + _WRITE_CHUNK])
                     total += arr.nbytes
         except (OSError, CannyError) as e:
             return abort_save(e)
@@ -199,19 +218,12 @@ class TransactionalCheckpointManager:
             except (OSError, CannyError) as e:
                 # e.g. poisoned engine rejecting the COMMIT write, or a
                 # sync-mode mount surfacing the fault directly — the
-                # checkpoint is not durable, and the caller must hear it
+                # checkpoint is not durable, and the caller must hear it;
+                # roll the partial dir back (a partial COMMIT marker would
+                # otherwise make the step look durable)
                 res.ok = False
                 res.error = res.error or repr(e)
-                try:  # best-effort rollback (a partial COMMIT marker would
-                      # otherwise make the step look durable)
-                    self.fs.engine.reset_poison()  # or cleanup can't run
-                    with self.fs.detached():
-                        if self.fs.exists(d):
-                            self.fs.rmtree(d)
-                            self.fs.drain()
-                    self.fs.ledger.clear_where(under_d)
-                except (OSError, CannyError):
-                    pass  # startup rollback_uncommitted() is the backstop
+                self._discard_step_dir(d)
             finally:
                 res.commit_s = time.monotonic() - t0
                 with self._lock:
@@ -237,20 +249,13 @@ class TransactionalCheckpointManager:
                 self.fs.ledger.clear_where(lambda e: id(e) in handled)
                 res.ok = False
                 res.error = "; ".join(str(e) for e in errs[:4])
-                # un-poison *before* the rmtree (its sync readdir would
-                # fail fast on a poisoned engine and leak the partial step
-                # dir) — the failure is handled, and the promised retry at
-                # the next save interval needs a working mount anyway
-                self.fs.engine.reset_poison()
-                try:
-                    self.fs.rmtree(d)
-                    self.fs.drain()
-                except (OSError, CannyError):
-                    pass
-                # the rollback itself may defer errors under the step dir;
-                # report them alongside the originals, then clear them too
-                # (stale entries would fail every future save of this step)
-                cleanup = self.fs.ledger.clear_where(under_d)
+                # _discard_step_dir un-poisons *before* the rmtree (its
+                # sync readdir would fail fast on a poisoned engine and
+                # leak the partial step dir); the rollback's own deferred
+                # errors under the step dir are cleared (stale entries
+                # would fail every future save of this step) and reported
+                # alongside the originals
+                cleanup = self._discard_step_dir(d)
                 if cleanup:
                     res.error += "; " + "; ".join(
                         str(e) for e in cleanup[:2])

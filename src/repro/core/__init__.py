@@ -37,6 +37,17 @@ Injected failures flow through the normal deferred-error machinery: the
 ErrorLedger records them, ``abort_on_error`` poisons the engine, and
 ``run_transaction`` rolls back (restoring namespace *and* quota) and
 resubmits — the paper's transactional story, now exercisable end to end.
+
+Engine layers (see ``core/engine.py`` for the diagram)
+------------------------------------------------------
+
+The engine itself is scheduler (``core/scheduler.py``: path-hash-sharded
+per-path FIFO + DAG) / optimizer (``core/fusion.py``: the transactional
+op-fusion pass — coalesce writes into ``write_vec``, fold metadata
+last-wins, elide chains unlinked in-window; control via
+``CannyFS(fusion=FusionPolicy(...))`` or ``fusion=False``) / executor
+(``core/executor.py``: pool | thread_per_op).  Fault rules fire per
+*fused* backend call, and torn writes surface as ``ShortWriteError``.
 """
 from .backend import (Clock, InMemoryBackend, LatencyBackend, LatencyModel,
                       LocalBackend, RealClock, StatResult, StorageBackend,
@@ -44,20 +55,22 @@ from .backend import (Clock, InMemoryBackend, LatencyBackend, LatencyModel,
 from .engine import EagerIOEngine, EngineStats
 from .errors import (CannyError, EnginePoisonedError, ErrorLedger,
                      LedgerEntry, OpCancelledError, RollbackLeakError,
-                     TransactionFailedError)
+                     ShortWriteError, TransactionFailedError)
 from .faults import (FaultInjectingBackend, FaultPlan, FaultRule,
                      QuotaBackend, make_fault)
 from .flags import EagerFlags, N_FLAGS
 from .fs import CannyFS, CannyFile
+from .fusion import FusionPolicy
 from .transaction import Transaction, run_transaction
 
 __all__ = [
     "CannyError", "CannyFS", "CannyFile", "Clock", "EagerFlags",
     "EagerIOEngine", "EngineStats", "EnginePoisonedError", "ErrorLedger",
-    "FaultInjectingBackend", "FaultPlan", "FaultRule", "InMemoryBackend",
+    "FaultInjectingBackend", "FaultPlan", "FaultRule", "FusionPolicy",
+    "InMemoryBackend",
     "LatencyBackend", "LatencyModel", "LedgerEntry", "LocalBackend", "N_FLAGS",
     "OpCancelledError", "QuotaBackend", "RealClock", "RollbackLeakError",
-    "StatResult",
+    "ShortWriteError", "StatResult",
     "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
     "is_under", "make_fault", "norm_path", "parent_of", "run_transaction",
 ]

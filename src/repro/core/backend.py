@@ -66,6 +66,22 @@ class StorageBackend:
     def readlink(self, path: str) -> str: raise NotImplementedError
     # --- data ---
     def write_at(self, path: str, offset: int, data: bytes) -> int: raise NotImplementedError
+
+    def write_vec(self, path: str, segments: list[tuple[int, bytes]]) -> int:
+        """Vectored write: apply (offset, data) segments in order; returns
+        total bytes written.  The default is a loop over ``write_at`` so
+        every backend (and every test double overriding ``write_at``)
+        composes; a short segment write stops the vector and returns the
+        partial total — callers treat that as a torn op.  Decorator
+        backends override this to pay their cost once per *fused* call."""
+        total = 0
+        for off, data in segments:
+            n = self.write_at(path, off, data)
+            total += n
+            if n < len(data):
+                break
+        return total
+
     def read_at(self, path: str, offset: int, size: int) -> bytes: raise NotImplementedError
     def truncate(self, path: str, size: int) -> None: raise NotImplementedError
     def fallocate(self, path: str, size: int) -> None: raise NotImplementedError
@@ -119,6 +135,21 @@ class LocalBackend(StorageBackend):
             return os.write(fd, data)
         finally:
             os.close(fd)
+
+    def write_vec(self, path, segments):
+        # one open per fused batch instead of one per write — the local
+        # analogue of the single-roundtrip win on remote backends
+        fd = os.open(self._abs(path), os.O_CREAT | os.O_WRONLY, 0o644)
+        total = 0
+        try:
+            for off, data in segments:
+                n = os.pwrite(fd, data, off)
+                total += n
+                if n < len(data):
+                    break
+        finally:
+            os.close(fd)
+        return total
 
     def read_at(self, path, offset, size):
         fd = os.open(self._abs(path), os.O_RDONLY)
@@ -522,6 +553,11 @@ class LatencyBackend(StorageBackend):
     def readlink(self, p): self._delay("readlink"); return self.inner.readlink(p)
     def write_at(self, p, o, data):
         self._delay("write", len(data)); return self.inner.write_at(p, o, data)
+    def write_vec(self, p, segments):
+        # one roundtrip for the whole fused vector: per-op latency is paid
+        # once, bandwidth for the total payload — this is the coalescing win
+        self._delay("write", sum(len(d) for _, d in segments))
+        return self.inner.write_vec(p, segments)
     def read_at(self, p, o, size):
         out = self.inner.read_at(p, o, size)
         self._delay("read", len(out)); return out

@@ -1,73 +1,63 @@
-"""The CannyFS eager-I/O engine.
+"""The CannyFS eager-I/O engine: scheduler / optimizer / executor.
+
+Architecture (one op's life, left to right)::
+
+            submit / try_fuse / prepare_unlink
+                        |
+        +---------------v-----------------------------------------+
+        |  OpScheduler (core/scheduler.py)                        |
+        |  per-path FIFO + cross-path DAG edges; submission state |
+        |  sharded by path hash; in-flight budget; ready queue    |
+        +---------------+-----------------------------------------+
+                        | pending tip / chain, under shard+op locks
+        +---------------v-----------------------------------------+
+        |  Fuser (core/fusion.py)                                 |
+        |  peephole pass over each path's pending chain:          |
+        |    coalesce write_at -> one vectored write_vec          |
+        |    fold chmod/utimens/truncate to last-wins             |
+        |    elide create+write chains unlinked in-window         |
+        +---------------+-----------------------------------------+
+                        | ready ops
+        +---------------v-----------------------------------------+
+        |  PoolExecutor | ThreadPerOpExecutor (core/executor.py)  |
+        |  runs op.fn against the backend; completion releases    |
+        |  dependents via the scheduler                           |
+        +---------------------------------------------------------+
 
 Semantics (paper §2–§3):
 
-* Every operation is routed through per-path FIFO order: two ops touching the
-  same path execute in submission order; ops on disjoint paths run
-  concurrently on a worker pool.
-* *Eager* ops (per-flag) are acknowledged immediately — the caller continues
-  while the op waits in the DAG.  Non-eager ops and all data reads block the
-  caller until the op (and transitively everything it depends on) has really
-  executed — this is the read barrier ("when a read takes place, all writes
-  to the same object first have to be flushed").
-* Cross-path dependencies that per-path order cannot see (create under a
-  pending mkdir, readdir racing child creation, rename spanning two paths)
-  are expressed as explicit DAG edges.  This goes slightly beyond the
-  paper, which serializes per path only and documents imperfect cross-path
-  serialization; edges make the engine safe for the checkpoint/data layers.
-* Failures of background ops land in the ErrorLedger (reported immediately +
-  at teardown); optional abort_on_error poisons the engine: queued ops are
-  cancelled and new submissions fail fast.
-* ``max_inflight`` bounds queued ops (paper default 300; benchmark 4000) —
-  submission *blocks* at the bound, which is the backpressure/straggler
-  story for the training integration.
-* Two executor models: ``pool`` (recycled workers — the paper's stated
-  future work) and ``thread_per_op`` (the paper's actual implementation,
-  kept for faithful overhead comparisons).
+* Every operation is routed through per-path FIFO order; ops on disjoint
+  paths run concurrently.  *Eager* ops are acknowledged immediately;
+  non-eager ops and all data reads block the caller (the read barrier).
+* Reads, barriers and transaction commit are the only observation points.
+  Between them the pending stream is *rewritable*: the optimizer may
+  coalesce, fold and delete ops as long as commit-visible state is
+  unchanged.  Observation points *seal* the ops they wait on, which
+  freezes them against further rewriting — so fused results are exactly
+  what a synchronous execution would have produced at every read.
+* Fusion is controlled by ``FusionPolicy`` (``fusion=`` argument: a
+  policy, True/None for defaults, False to disable).  ``EngineStats``
+  reports ``fused_writes`` (writes absorbed into a pending vectored op),
+  ``folded_meta`` (last-wins metadata folds), ``elided_ops`` and
+  ``bytes_elided`` (ops/bytes deleted by unlink elision).
+* Failures of background ops land in the ErrorLedger; optional
+  abort_on_error poisons the engine.  ``max_inflight`` bounds queued ops
+  (fused absorptions don't consume new slots — coalescing is also
+  backpressure relief, bounded by ``FusionPolicy.max_bytes``).
 """
 from __future__ import annotations
 
 import threading
 import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
-from .backend import StorageBackend, StatResult, norm_path, parent_of
-from .errors import (EnginePoisonedError, ErrorLedger, OpCancelledError)
+from .backend import StorageBackend, StatResult, norm_path
+from .errors import ErrorLedger, OpCancelledError
+from .executor import make_executor
 from .flags import EagerFlags
-
-# ops that change the namespace under their parent directory — a readdir /
-# rmdir / rename of the parent must wait for *all* of these (siblings do not
-# chain with each other, so per-path order alone cannot express this).
-STRUCTURAL = {"mkdir", "rmdir", "create", "unlink", "rename", "symlink", "link"}
-# ops that must observe a complete namespace under their own path
-NEEDS_CHILDREN = {"rmdir", "readdir", "rename"}
-
-
-class _Op:
-    __slots__ = ("seq", "kind", "paths", "fn", "done", "error", "result",
-                 "remaining_deps", "dependents", "cancelled", "submitted_at",
-                 "started_at", "finished_at", "eager", "region")
-
-    def __init__(self, seq: int, kind: str, paths: tuple[str, ...],
-                 fn: Callable[[], Any], eager: bool = True,
-                 region: object = None):
-        self.seq = seq
-        self.kind = kind
-        self.paths = paths
-        self.fn = fn
-        self.eager = eager
-        self.region = region  # active Transaction at submission, if any
-        self.done = threading.Event()
-        self.error: BaseException | None = None
-        self.result: Any = None
-        self.remaining_deps = 0
-        self.dependents: list[_Op] = []
-        self.cancelled = False
-        self.submitted_at = time.monotonic()
-        self.started_at = 0.0
-        self.finished_at = 0.0
+from .fusion import Fuser, FusionPolicy, MetaPayload, WritePayload
+from .scheduler import NEEDS_CHILDREN, STRUCTURAL, OpScheduler, _Op
 
 
 @dataclass
@@ -83,6 +73,11 @@ class EngineStats:
     max_queue_depth: int = 0
     ack_latency_s: float = 0.0   # total caller-visible latency of eager ops
     exec_latency_s: float = 0.0  # total background execution time
+    # -- fusion / optimizer counters --------------------------------------
+    fused_writes: int = 0        # write_at calls absorbed into a pending op
+    folded_meta: int = 0         # chmod/utimens/truncate last-wins folds
+    elided_ops: int = 0          # pending ops deleted by unlink elision
+    bytes_elided: int = 0        # write payload bytes that never hit storage
     # -- fault / trace counters (chaos + error-path observability) --------
     deferred_errors: int = 0     # background failures recorded in the ledger
     injected_faults: int = 0     # of those, carried an `.injected` tag
@@ -166,9 +161,8 @@ class EagerIOEngine:
                  workers: int = 32,
                  executor: str = "pool",          # "pool" | "thread_per_op"
                  abort_on_error: bool = False,
-                 ledger: ErrorLedger | None = None):
-        if executor not in ("pool", "thread_per_op"):
-            raise ValueError(f"unknown executor: {executor!r}")
+                 ledger: ErrorLedger | None = None,
+                 fusion: FusionPolicy | bool | None = None):
         self.backend = backend
         self.flags = flags or EagerFlags()
         self.max_inflight = int(max_inflight)
@@ -178,32 +172,18 @@ class EagerIOEngine:
         self.ledger = ledger if ledger is not None else ErrorLedger()
         self.stats = EngineStats()
         self.stat_cache = _StatCache()
-
-        self._lock = threading.Lock()
-        self._ready_cv = threading.Condition(self._lock)
-        self._idle_cv = threading.Condition(self._lock)
-        self._budget_cv = threading.Condition(self._lock)
-        self._ready: deque[_Op] = deque()
-        self._last_op: dict[str, _Op] = {}        # last pending op per path
-        # every pending structural op, grouped by parent dir (seq -> op)
-        self._pending_children: dict[str, dict[int, _Op]] = {}
-        self._inflight = 0                        # submitted, not finished
-        self._seq = 0
-        self._poisoned = False
+        if fusion is None or fusion is True:
+            self.fusion = FusionPolicy()
+        elif fusion is False:
+            self.fusion = FusionPolicy.off()
+        else:
+            self.fusion = fusion
+        self._sched = OpScheduler(self.stats, max_inflight=self.max_inflight)
+        self._fuser = Fuser(self.fusion, self.stats)
         self._closed = False
         self._executor = executor
-        self._threads: list[threading.Thread] = []
-        if executor == "pool":
-            for i in range(workers):
-                t = threading.Thread(target=self._worker_loop,
-                                     name=f"cannyfs-w{i}", daemon=True)
-                t.start()
-                self._threads.append(t)
-        else:
-            t = threading.Thread(target=self._dispatcher_loop,
-                                 name="cannyfs-dispatch", daemon=True)
-            t.start()
-            self._threads.append(t)
+        self._exec = make_executor(executor, self._sched, self._execute,
+                                   workers)
 
     # ------------------------------------------------------------------
     # submission
@@ -212,60 +192,20 @@ class EagerIOEngine:
     def submit(self, kind: str, paths: tuple[str, ...],
                fn: Callable[[], Any], *, eager: bool,
                cache_kw: dict | None = None,
-               region: object = None) -> Any:
+               region: object = None,
+               payload: object = None) -> Any:
         """Route one op through the DAG.  Eager → returns None immediately;
         sync → waits and returns the op's result (re-raising its error)."""
         t0 = time.monotonic()
         paths = tuple(norm_path(p) for p in paths)
-        with self._lock:
-            if self._poisoned:
-                raise EnginePoisonedError(
-                    "cannyfs engine poisoned by an earlier deferred error")
-            if self._closed:
-                raise RuntimeError("engine is closed")
-            # budget: block the *caller* — this is the paper's in-flight cap
-            while self._inflight >= self.max_inflight:
-                self._budget_cv.wait()
-            self._seq += 1
-            op = _Op(self._seq, kind, paths, fn, eager=eager, region=region)
-            deps: list[_Op] = []
-            seen: set[int] = set()
-
-            def add_dep(d: Optional[_Op]):
-                if d is not None and not d.done.is_set() and id(d) not in seen:
-                    seen.add(id(d))
-                    deps.append(d)
-
-            for p in paths:
-                add_dep(self._last_op.get(p))
-                # an op under a directory whose creation/rename is pending
-                # must wait for it
-                add_dep(self._last_op.get(parent_of(p)))
-            if kind in NEEDS_CHILDREN:
-                for p in paths:
-                    for d in list(self._pending_children.get(p, {}).values()):
-                        add_dep(d)
-            op.remaining_deps = len(deps)
-            for d in deps:
-                d.dependents.append(op)
-            for p in paths:
-                self._last_op[p] = op
-            if kind in STRUCTURAL:
-                for p in paths:
-                    self._pending_children.setdefault(parent_of(p), {})[op.seq] = op
-            self._inflight += 1
-            self.stats.submitted += 1
-            self.stats.op_counts[kind] = self.stats.op_counts.get(kind, 0) + 1
-            self.stats.max_queue_depth = max(self.stats.max_queue_depth,
-                                             self._inflight)
-            # write-through cache updates before the op can possibly run:
-            # a fast-failing op's error-path invalidation must win over
-            # this ACK-time mocked entry, so order them under the lock
-            if cache_kw is not None:
-                self.stat_cache.on_op(kind, paths, **cache_kw)
-            if op.remaining_deps == 0:
-                self._ready.append(op)
-                self._ready_cv.notify()
+        # write-through cache updates ride on_admit — after the budget
+        # admits the op but before the DAG publishes it, so a fast-failing
+        # op's error-path invalidation (at completion, strictly later)
+        # always wins over the ACK-time mocked entry
+        on_admit = (None if cache_kw is None else
+                    lambda: self.stat_cache.on_op(kind, paths, **cache_kw))
+        op = self._sched.submit(kind, paths, fn, eager=eager, region=region,
+                                payload=payload, on_admit=on_admit)
         if eager:
             self.stats.eager_acks += 1
             self.stats.ack_latency_s += time.monotonic() - t0
@@ -278,23 +218,61 @@ class EagerIOEngine:
         return op.result
 
     # ------------------------------------------------------------------
+    # optimizer entry points (called by the fs layer before submitting)
+    # ------------------------------------------------------------------
+
+    def try_fuse_write(self, path: str, offset: int, data: bytes, *,
+                       region: object = None,
+                       cache_kw: dict | None = None) -> bool:
+        """Absorb one write into the path's pending vectored write op.
+        True → the write is ACKed (no new op); caller must not submit."""
+        if self._sched.poisoned:
+            return False   # fall through to submit's fail-fast raise
+        path = norm_path(path)
+        on_absorb = (None if cache_kw is None else
+                     lambda: self.stat_cache.on_op("write", (path,),
+                                                   **cache_kw))
+        return self._fuser.absorb_write(self._sched, path, offset, data,
+                                        region, on_absorb)
+
+    def try_fuse_meta(self, kind: str, path: str, args: tuple, *,
+                      region: object = None,
+                      cache_kw: dict | None = None) -> bool:
+        """Fold a chmod/utimens/truncate into the path's pending same-kind
+        op (last-wins).  True → folded; caller must not submit."""
+        if self._sched.poisoned:
+            return False   # fall through to submit's fail-fast raise
+        path = norm_path(path)
+        on_absorb = (None if cache_kw is None else
+                     lambda: self.stat_cache.on_op(kind, (path,),
+                                                   **cache_kw))
+        return self._fuser.absorb_meta(self._sched, kind, path, args, region,
+                                       on_absorb)
+
+    def prepare_unlink(self, path: str, *, region: object = None) -> bool:
+        """Elide the path's pending create/write/metadata chain ahead of an
+        unlink.  Returns True iff anything was elided — the unlink must
+        then tolerate the file's absence (its creating ops are gone)."""
+        if self._sched.poisoned:
+            return False   # the unlink submit will fail fast instead
+        return self._fuser.elide_for_unlink(self._sched, norm_path(path),
+                                            region)
+
+    # ------------------------------------------------------------------
     # barriers
     # ------------------------------------------------------------------
 
     def barrier(self, path: str) -> None:
-        """Wait until every op submitted so far on ``path`` has executed."""
-        path = norm_path(path)
-        with self._lock:
-            op = self._last_op.get(path)
+        """Wait until every op submitted so far on ``path`` has executed.
+        An observation point: the waited-on op is sealed against fusion."""
+        op = self._sched.seal_path(norm_path(path))
         if op is not None:
             self.stats.barrier_waits += 1
             op.done.wait()
 
     def drain(self) -> None:
         """Global barrier: wait for the whole DAG to execute."""
-        with self._idle_cv:
-            while self._inflight > 0:
-                self._idle_cv.wait()
+        self._sched.drain()
 
     # ------------------------------------------------------------------
     # error / lifecycle
@@ -302,20 +280,12 @@ class EagerIOEngine:
 
     @property
     def poisoned(self) -> bool:
-        return self._poisoned
+        return self._sched.poisoned
 
     def reset_poison(self) -> None:
         """Clear the poisoned state after a transaction rollback handled the
         failure (the retry path of run_transaction)."""
-        with self._lock:
-            self._poisoned = False
-
-    def _poison(self) -> None:
-        with self._lock:
-            self._poisoned = True
-            # cancel everything not yet started; their dependents cascade
-            for op in list(self._ready):
-                op.cancelled = True
+        self._sched.reset_poison()
 
     def close(self) -> None:
         """Orderly teardown: drain, then report the ledger (paper's global
@@ -323,9 +293,8 @@ class EagerIOEngine:
         if self._closed:
             return
         self.drain()
-        with self._lock:
-            self._closed = True
-            self._ready_cv.notify_all()
+        self._closed = True
+        self._sched.close()
         self.ledger.report()
 
     def __enter__(self):
@@ -334,39 +303,34 @@ class EagerIOEngine:
     def __exit__(self, *exc):
         self.close()
 
-    # ------------------------------------------------------------------
-    # execution
-    # ------------------------------------------------------------------
+    # -- introspection (chaos tests assert the engine ends quiescent) ----
 
-    def _worker_loop(self) -> None:
-        while True:
-            with self._lock:
-                while not self._ready and not self._closed:
-                    self._ready_cv.wait()
-                if self._closed and not self._ready:
-                    return
-                op = self._ready.popleft()
-            self._execute(op)
+    @property
+    def _inflight(self) -> int:
+        return self._sched.inflight
 
-    def _dispatcher_loop(self) -> None:
-        """thread_per_op mode: the paper's 'high number of threads created
-        and scrapped' model — one fresh thread per ready op."""
-        while True:
-            with self._lock:
-                while not self._ready and not self._closed:
-                    self._ready_cv.wait()
-                if self._closed and not self._ready:
-                    return
-                op = self._ready.popleft()
-            t = threading.Thread(target=self._execute, args=(op,), daemon=True)
-            t.start()
+    @property
+    def _last_op(self) -> dict:
+        return self._sched.merged_last_op()
+
+    @property
+    def _pending_children(self) -> dict:
+        return self._sched.merged_pending_children()
+
+    # ------------------------------------------------------------------
+    # execution (called from executor worker threads)
+    # ------------------------------------------------------------------
 
     def _execute(self, op: _Op) -> None:
         op.started_at = time.monotonic()
-        if op.cancelled or (self._poisoned and self.abort_on_error):
+        with op.flock:
+            # claiming freezes the op: the optimizer can no longer absorb
+            # new work into its payload or elide it from the stream
+            op.claimed = True
+            elided = op.elided
+        if op.cancelled or (self._sched.poisoned and self.abort_on_error):
             op.error = OpCancelledError(f"{op.kind}{op.paths}")
             op.cancelled = True
-            self.stats.cancelled += 1
             # a cancelled eager op was ACKed but never executed — without a
             # ledger entry a transaction commit (region-tagged) or the
             # checkpoint manager's path scan (untagged) would conclude the
@@ -374,6 +338,8 @@ class EagerIOEngine:
             if op.eager:
                 self.ledger.record(op.seq, op.kind, op.paths, op.error,
                                    region=op.region)
+        elif elided:
+            pass  # proven invisible at every observation point: no backend
         else:
             try:
                 op.result = op.fn()
@@ -385,40 +351,27 @@ class EagerIOEngine:
                     self.ledger.record(op.seq, op.kind, op.paths, e,
                                        region=op.region)
                     if self.abort_on_error:
-                        self._poison()
+                        self._sched.poison()
         op.finished_at = time.monotonic()
-        self.stats.exec_latency_s += op.finished_at - op.started_at
-        self.stats.executed += 1
         if op.error is not None:
             # the write-through cache recorded this op's effect at ACK time;
             # it never materialized (failed or cancelled), so the mocked
             # entry is wrong — drop it and let the backend answer again
             for p in op.paths:
                 self.stat_cache.invalidate(p)
-        with self._lock:
-            if op.error is not None and op.eager and not op.cancelled:
+        with self._sched._ctl:   # exact counters (see scheduler lock note)
+            self.stats.exec_latency_s += op.finished_at - op.started_at
+            self.stats.executed += 1
+            if op.cancelled:
+                self.stats.cancelled += 1
+            elif op.error is not None and op.eager:
                 self.stats.deferred_errors += 1
                 self.stats.error_counts[op.kind] = \
                     self.stats.error_counts.get(op.kind, 0) + 1
                 if getattr(op.error, "injected", False):
                     self.stats.injected_faults += 1
-            for d in op.dependents:
-                d.remaining_deps -= 1
-                if d.remaining_deps == 0:
-                    self._ready.append(d)
-                    self._ready_cv.notify()
-            for p in op.paths:
-                if self._last_op.get(p) is op:
-                    del self._last_op[p]
-            if op.kind in STRUCTURAL:
-                for p in op.paths:
-                    kids = self._pending_children.get(parent_of(p))
-                    if kids is not None:
-                        kids.pop(op.seq, None)
-                        if not kids:
-                            del self._pending_children[parent_of(p)]
-            self._inflight -= 1
-            self._budget_cv.notify()
-            if self._inflight == 0:
-                self._idle_cv.notify_all()
-        op.done.set()
+        self._sched.on_complete(op)
+
+
+__all__ = ["EagerIOEngine", "EngineStats", "FusionPolicy", "MetaPayload",
+           "WritePayload", "NEEDS_CHILDREN", "STRUCTURAL"]

@@ -31,6 +31,20 @@ class RollbackLeakError(CannyError):
     succeeds anyway, so teardown reporting still surfaces the leak."""
 
 
+class ShortWriteError(OSError, CannyError):
+    """A (possibly fused/vectored) write landed fewer bytes than submitted
+    — a torn op.  Carries errno EIO so the transactional retry loop treats
+    it as transient: the torn file is journaled (rollback removes it) and
+    the resubmitted job rewrites it whole."""
+
+    def __init__(self, path: str, expected: int, written: int):
+        import errno as _errno
+        super().__init__(_errno.EIO,
+                         f"short write: {written}/{expected} bytes", path)
+        self.expected = expected
+        self.written = written
+
+
 class TransactionFailedError(CannyError):
     """Commit found deferred errors in the ledger."""
 

@@ -1,0 +1,66 @@
+"""Executor layer: worker models that drain the scheduler's ready queue.
+
+Two models, unchanged semantics from the seed engine:
+
+* ``pool``          — N recycled workers (the paper's stated future work);
+* ``thread_per_op`` — one fresh thread per ready op (the paper's actual
+  implementation: "high number of threads created and scrapped", kept for
+  faithful overhead comparisons).
+
+An executor knows nothing about paths, dependencies or fusion: it pulls
+ready ops and hands them to the engine's ``run`` callback, which executes
+the op and reports completion back to the scheduler.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+from .scheduler import OpScheduler, _Op
+
+EXECUTOR_MODES = ("pool", "thread_per_op")
+
+
+class PoolExecutor:
+    def __init__(self, sched: OpScheduler, run: Callable[[_Op], None],
+                 workers: int = 32):
+        self._threads = []
+        for i in range(max(1, int(workers))):
+            t = threading.Thread(target=self._worker_loop, args=(sched, run),
+                                 name=f"cannyfs-w{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    @staticmethod
+    def _worker_loop(sched: OpScheduler, run: Callable[[_Op], None]) -> None:
+        while True:
+            op = sched.next_ready()
+            if op is None:
+                return
+            run(op)
+
+
+class ThreadPerOpExecutor:
+    def __init__(self, sched: OpScheduler, run: Callable[[_Op], None],
+                 workers: int = 0):   # workers ignored: one thread per op
+        t = threading.Thread(target=self._dispatcher_loop, args=(sched, run),
+                             name="cannyfs-dispatch", daemon=True)
+        t.start()
+        self._threads = [t]
+
+    @staticmethod
+    def _dispatcher_loop(sched: OpScheduler, run: Callable[[_Op], None]) -> None:
+        while True:
+            op = sched.next_ready()
+            if op is None:
+                return
+            threading.Thread(target=run, args=(op,), daemon=True).start()
+
+
+def make_executor(mode: str, sched: OpScheduler,
+                  run: Callable[[_Op], None], workers: int):
+    if mode == "pool":
+        return PoolExecutor(sched, run, workers)
+    if mode == "thread_per_op":
+        return ThreadPerOpExecutor(sched, run)
+    raise ValueError(f"unknown executor: {mode!r}")

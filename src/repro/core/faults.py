@@ -6,7 +6,13 @@ if the stack can *produce* failures on demand.  This module provides:
 
 * ``FaultRule``  — one failure clause: match by op kind, path glob, call
   window and/or probability; raise a chosen errno (``EACCES``/``ENOSPC``/
-  ``EDQUOT``/``EIO``) or a connection loss.
+  ``EDQUOT``/``EIO``) or a connection loss.  Besides raising, a rule can
+  fire as a *torn op* (``outcome="short"``: ``write_at``/``write_vec``
+  return a short byte count instead of raising — the engine surfaces the
+  tear as a deferred ``ShortWriteError``) or a *latency spike*
+  (``outcome="delay"``: the op sleeps ``delay_s`` on the backend's clock
+  and then succeeds — slow ops, not failed ops, for the straggler/
+  backpressure path).
 * ``FaultPlan``  — a seeded, thread-safe collection of rules.  The same
   seed always yields the same fault schedule, so ledger contents and
   rollback behaviour replay bit-identically in tests.
@@ -28,7 +34,7 @@ import random
 import threading
 from dataclasses import dataclass, field
 
-from .backend import StorageBackend, is_under, norm_path
+from .backend import Clock, RealClock, StorageBackend, is_under, norm_path
 
 # errno spellings accepted by FaultRule.error (connection loss raises a
 # ConnectionResetError, which the engine defers like any other OSError).
@@ -41,8 +47,17 @@ ERRNOS = {
 }
 
 
-def make_fault(error: str, path: str) -> OSError:
-    """Build the OSError for one injected failure, tagged ``.injected``."""
+OUTCOMES = ("raise", "short", "delay")
+
+
+def make_fault(error: str, path: str, *, outcome: str = "raise",
+               short_fraction: float = 0.5, delay_s: float = 0.0) -> OSError:
+    """Build the fault token for one injected failure, tagged ``.injected``.
+
+    The token is always an OSError (the ``raise`` outcome raises it
+    verbatim); for ``short``/``delay`` outcomes it carries the outcome
+    parameters and ``FaultInjectingBackend`` interprets it instead of
+    raising."""
     if error not in ERRNOS:
         raise ValueError(f"unknown fault error {error!r}; one of {sorted(ERRNOS)}")
     if error == "ECONNRESET":
@@ -51,6 +66,9 @@ def make_fault(error: str, path: str) -> OSError:
     else:
         exc = OSError(ERRNOS[error], f"injected {error}", path)
     exc.injected = True  # lets tests/ledgers distinguish chaos from real bugs
+    exc.outcome = outcome
+    exc.short_fraction = short_fraction
+    exc.delay_s = delay_s
     return exc
 
 
@@ -59,7 +77,16 @@ class FaultRule:
     """One failure clause.  A rule *matches* an op when every constraint
     holds; whether a matching call actually *fires* is then decided by the
     call-count window, ``probability`` (seeded plan RNG) and the remaining
-    ``max_failures`` budget."""
+    ``max_failures`` budget.
+
+    ``outcome`` selects what firing does: ``"raise"`` (default) raises the
+    errno, ``"short"`` makes a write land only ``short_fraction`` of its
+    bytes and return the short count (torn op; matches write ops only),
+    ``"delay"`` stalls the op ``delay_s`` seconds on the backend's clock
+    and then lets it succeed (latency spike).  Fault matching is per
+    *backend call*: N engine writes coalesced into one ``write_vec`` are a
+    single matching call, and a short outcome tears the fused vector as a
+    unit."""
 
     error: str = "EIO"
     ops: tuple[str, ...] | None = None   # op kinds to match; None = all
@@ -67,8 +94,18 @@ class FaultRule:
     probability: float = 1.0             # chance a matching call fires
     after_count: int = 0                 # skip the first N matching calls
     max_failures: int | None = None      # stop firing after N failures
+    outcome: str = "raise"               # "raise" | "short" | "delay"
+    short_fraction: float = 0.5          # of the payload, for "short"
+    delay_s: float = 0.25                # stall length, for "delay"
+
+    def __post_init__(self):
+        if self.outcome not in OUTCOMES:
+            raise ValueError(
+                f"unknown outcome {self.outcome!r}; one of {OUTCOMES}")
 
     def matches(self, kind: str, path: str) -> bool:
+        if self.outcome == "short" and kind != "write":
+            return False  # only data writes can tear
         if self.ops is not None and kind not in self.ops:
             return False
         if self.path_glob is not None and not fnmatch.fnmatchcase(
@@ -96,8 +133,10 @@ class FaultPlan:
         self._active = True
         self.match_counts = [0] * len(self.rules)
         self.fire_counts = [0] * len(self.rules)
-        self.injected = 0                      # total faults raised
+        self.injected = 0                      # faults raised or torn
         self.injected_by_kind: dict[str, int] = {}
+        self.delayed = 0                       # latency spikes fired
+        self.delay_s_total = 0.0               # total injected stall time
         self.op_counts: dict[str, int] = {}    # trace: every op seen
 
     # -- schedule control -------------------------------------------------
@@ -116,6 +155,8 @@ class FaultPlan:
             self.fire_counts = [0] * len(self.rules)
             self.injected = 0
             self.injected_by_kind = {}
+            self.delayed = 0
+            self.delay_s_total = 0.0
             self.op_counts = {}
 
     # -- the hot path -----------------------------------------------------
@@ -142,10 +183,17 @@ class FaultPlan:
                     if draw >= rule.probability:
                         continue
                 self.fire_counts[i] += 1
-                self.injected += 1
-                self.injected_by_kind[kind] = \
-                    self.injected_by_kind.get(kind, 0) + 1
-                return make_fault(rule.error, path)
+                if rule.outcome == "delay":
+                    # a spike is a slow success, not a fault: counted apart
+                    self.delayed += 1
+                    self.delay_s_total += rule.delay_s
+                else:
+                    self.injected += 1
+                    self.injected_by_kind[kind] = \
+                        self.injected_by_kind.get(kind, 0) + 1
+                return make_fault(rule.error, path, outcome=rule.outcome,
+                                  short_fraction=rule.short_fraction,
+                                  delay_s=rule.delay_s)
         return None
 
     def stats(self) -> dict:
@@ -153,6 +201,8 @@ class FaultPlan:
             return {
                 "injected": self.injected,
                 "injected_by_kind": dict(self.injected_by_kind),
+                "delayed": self.delayed,
+                "delay_s_total": self.delay_s_total,
                 "match_counts": list(self.match_counts),
                 "fire_counts": list(self.fire_counts),
                 "ops_seen": dict(self.op_counts),
@@ -167,19 +217,51 @@ class FaultInjectingBackend(StorageBackend):
 
     Sits anywhere in the decorator stack; putting it outermost means the
     fault is charged *before* latency/quota are paid (a client-visible
-    refusal), innermost means the op travelled to the 'server' first."""
+    refusal), innermost means the op travelled to the 'server' first.
 
-    def __init__(self, inner: StorageBackend, plan: FaultPlan):
+    ``clock`` serves the ``delay`` outcome (latency spikes): pass the same
+    ``VirtualClock`` as the latency layer so spike schedules replay without
+    real sleeps.  Defaults to real time."""
+
+    def __init__(self, inner: StorageBackend, plan: FaultPlan,
+                 clock: Clock | None = None):
         self.inner = inner
         self.plan = plan
+        self._fault_clock = clock or RealClock()
 
     def __getattr__(self, name):  # delegate non-op attrs (snapshot, model…)
         return getattr(self.inner, name)
 
-    def _gate(self, kind: str, path: str) -> None:
+    def _gate(self, kind: str, path: str) -> OSError | None:
+        """Consult the plan.  Raise-outcome faults raise here; a delay
+        outcome sleeps and clears; a short outcome is returned as a token
+        for the write paths to interpret (torn op)."""
         err = self.plan.check(kind, path)
-        if err is not None:
-            raise err
+        if err is None:
+            return None
+        outcome = getattr(err, "outcome", "raise")
+        if outcome == "delay":
+            self._fault_clock.sleep(err.delay_s)
+            return None
+        if outcome == "short":
+            return err
+        raise err
+
+    @staticmethod
+    def _tear(segments: list[tuple[int, bytes]],
+              fraction: float) -> list[tuple[int, bytes]]:
+        """Keep only the leading ``fraction`` of the vector's bytes —
+        the torn prefix that 'reached the disk'."""
+        budget = int(sum(len(d) for _, d in segments) * fraction)
+        out: list[tuple[int, bytes]] = []
+        for off, data in segments:
+            take = min(len(data), budget)
+            if take > 0:
+                out.append((off, data[:take]))
+            budget -= take
+            if budget <= 0:
+                break
+        return out
 
     # namespace
     def mkdir(self, path): self._gate("mkdir", path); self.inner.mkdir(path)
@@ -195,9 +277,23 @@ class FaultInjectingBackend(StorageBackend):
     def symlink(self, t, p): self._gate("symlink", p); self.inner.symlink(t, p)
     def link(self, s, d): self._gate("link", d); self.inner.link(s, d)
     def readlink(self, p): self._gate("readlink", p); return self.inner.readlink(p)
-    # data
+    # data — faults fire per backend call: one fused write_vec of N
+    # coalesced writes is a single matching call for the plan
     def write_at(self, p, o, data):
-        self._gate("write", p); return self.inner.write_at(p, o, data)
+        tok = self._gate("write", p)
+        if tok is not None:   # torn op: land a prefix, return the short count
+            torn = self._tear([(o, data)], tok.short_fraction)
+            if torn:
+                return self.inner.write_at(p, torn[0][0], torn[0][1])
+            return 0
+        return self.inner.write_at(p, o, data)
+
+    def write_vec(self, p, segments):
+        tok = self._gate("write", p)
+        if tok is not None:
+            torn = self._tear(segments, tok.short_fraction)
+            return self.inner.write_vec(p, torn) if torn else 0
+        return self.inner.write_vec(p, segments)
     def read_at(self, p, o, size):
         self._gate("read", p); return self.inner.read_at(p, o, size)
     def truncate(self, p, s): self._gate("truncate", p); self.inner.truncate(p, s)
@@ -332,10 +428,42 @@ class QuotaBackend(StorageBackend):
     def write_at(self, path, offset, data):
         growth = self._grow(path, offset + len(data))
         try:
-            return self.inner.write_at(path, offset, data)
+            n = self.inner.write_at(path, offset, data)
         except BaseException:
             self._uncharge(path, growth)
             raise
+        if n < len(data):
+            # torn op: bytes past the achieved high-water mark never landed
+            self._uncharge(path, min(growth, offset + len(data) - (offset + n)))
+        return n
+
+    def write_vec(self, path, segments):
+        """Vectored write: the whole fused batch is charged (to its highest
+        end offset) before one delegated call — EDQUOT decides per fused
+        op, matching the fault-injection semantics."""
+        if not segments:
+            return 0
+        end = max(off + len(data) for off, data in segments)
+        total = sum(len(data) for _, data in segments)
+        growth = self._grow(path, end)
+        try:
+            n = self.inner.write_vec(path, segments)
+        except BaseException:
+            self._uncharge(path, growth)
+            raise
+        if n < total:
+            # back out the charge beyond the high-water offset the torn
+            # vector actually reached (segments land in order)
+            achieved, rem = 0, n
+            for off, data in segments:
+                take = min(len(data), rem)
+                if take > 0:
+                    achieved = max(achieved, off + take)
+                rem -= take
+                if rem <= 0:
+                    break
+            self._uncharge(path, min(growth, end - achieved))
+        return n
 
     def read_at(self, p, o, size): return self.inner.read_at(p, o, size)
 

@@ -15,8 +15,9 @@ from typing import Iterable, Optional
 
 from .backend import StorageBackend, StatResult, norm_path, parent_of
 from .engine import EagerIOEngine
-from .errors import ErrorLedger
+from .errors import ErrorLedger, ShortWriteError
 from .flags import EagerFlags
+from .fusion import FusionPolicy, MetaPayload, WritePayload
 
 
 class CannyFile:
@@ -96,12 +97,13 @@ class CannyFS:
                  workers: int = 32,
                  executor: str = "pool",
                  abort_on_error: bool = False,
-                 echo_errors: bool = True):
+                 echo_errors: bool = True,
+                 fusion: FusionPolicy | bool | None = None):
         self.flags = flags or EagerFlags()
         self.engine = EagerIOEngine(
             backend, flags=self.flags, max_inflight=max_inflight,
             workers=workers, executor=executor, abort_on_error=abort_on_error,
-            ledger=ErrorLedger(echo=echo_errors))
+            ledger=ErrorLedger(echo=echo_errors), fusion=fusion)
         self.backend = backend
         self._txn_lock = threading.Lock()
         self._txn = None  # active Transaction (set by Transaction.__enter__)
@@ -114,7 +116,8 @@ class CannyFS:
     _REGION_UNSET = object()
 
     def _submit(self, kind: str, paths: tuple[str, ...], fn, *,
-                cache_kw: dict | None = None, region=_REGION_UNSET):
+                cache_kw: dict | None = None, region=_REGION_UNSET,
+                payload=None):
         eager = self.flags.is_eager(kind)
         # tag the op with the active transaction so its deferred error is
         # attributed (and later scope-cleared) exactly, even when another
@@ -123,7 +126,8 @@ class CannyFS:
         if region is CannyFS._REGION_UNSET:
             region = self._active_txn()
         return self.engine.submit(kind, paths, fn, eager=eager,
-                                  cache_kw=cache_kw, region=region)
+                                  cache_kw=cache_kw, region=region,
+                                  payload=payload)
 
     def _active_txn(self):
         """The transaction to journal into, captured at submission time.
@@ -222,8 +226,23 @@ class CannyFS:
         self._submit("create", (p,), fn, cache_kw={}, region=txn)
 
     def unlink(self, path: str) -> None:
-        b = self.backend
-        self._submit("unlink", (path,), lambda: b.unlink(path), cache_kw={})
+        b, p, txn = self.backend, norm_path(path), self._active_txn()
+        # optimizer: a pending create/write chain on this path is invisible
+        # at every observation point once the path is unlinked in the same
+        # window — elide it.  The unlink must then tolerate absence: the op
+        # that would have created the file (create, or an implicit-create
+        # write) no longer executes.
+        tolerant = (self.flags.is_eager("unlink")
+                    and self.engine.prepare_unlink(p, region=txn))
+
+        def fn():
+            try:
+                b.unlink(p)
+            except FileNotFoundError:
+                if not tolerant:
+                    raise
+
+        self._submit("unlink", (p,), fn, cache_kw={}, region=txn)
 
     def rename(self, src: str, dst: str) -> None:
         b = self.backend
@@ -255,9 +274,17 @@ class CannyFS:
 
     def _write_at(self, path: str, offset: int, data: bytes) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
+        cache_kw = {"offset": offset, "nbytes": len(data)}
+        # feed the coalescer: if the path's pending tip is an unclaimed,
+        # unsealed write in the same region, this write is absorbed into
+        # its vector and ACKed without a new engine op
+        if self.flags.is_eager("write") and self.engine.try_fuse_write(
+                p, offset, data, region=txn, cache_kw=cache_kw):
+            return
+        payload = WritePayload(offset, data)
 
         def fn():
-            # write_at creates a missing file implicitly; if its create op
+            # write_vec creates a missing file implicitly; if its create op
             # faulted earlier, the file would otherwise be an unjournaled
             # orphan that rollback cannot remove.  The existence probe is
             # skipped on the hot paths (path already journaled, or already
@@ -265,17 +292,21 @@ class CannyFS:
             probe = (txn is not None and not txn._has_created(p)
                      and not txn._is_preexisting(p))
             existed = b.stat(p).exists if probe else True
-            out = b.write_at(p, offset, data)
+            expected = payload.nbytes   # frozen once the op is claimed
+            out = b.write_vec(p, payload.segments())
             if probe:
                 if existed:
                     txn._mark_preexisting(p)
                 else:
                     txn._record_create(p, False)
+            if out < expected:
+                # torn op: journal ran first so rollback removes the torn
+                # file; EIO-class error makes run_transaction resubmit
+                raise ShortWriteError(p, expected, out)
             return out
 
-        self._submit("write", (p,), fn,
-                     cache_kw={"offset": offset, "nbytes": len(data)},
-                     region=txn)
+        self._submit("write", (p,), fn, cache_kw=cache_kw, region=txn,
+                     payload=payload)
 
     def write_file(self, path: str, data: bytes) -> None:
         """create + write + close — the common whole-file put."""
@@ -295,10 +326,22 @@ class CannyFS:
     def open(self, path: str, mode: str = "rb") -> CannyFile:
         return CannyFile(self, path, mode)
 
+    def _submit_foldable(self, kind: str, path: str, args: tuple, apply_fn,
+                         cache_kw: dict | None) -> None:
+        """Submit a last-wins metadata op (chmod/utimens/truncate) through
+        the optimizer: an adjacent pending same-kind op absorbs the new
+        arguments instead of a second backend roundtrip."""
+        p, txn = norm_path(path), self._active_txn()
+        if self.flags.is_eager(kind) and self.engine.try_fuse_meta(
+                kind, p, args, region=txn, cache_kw=cache_kw):
+            return
+        payload = MetaPayload(args)
+        self._submit(kind, (p,), lambda: apply_fn(p, *payload.args),
+                     cache_kw=cache_kw, region=txn, payload=payload)
+
     def truncate(self, path: str, size: int) -> None:
-        b = self.backend
-        self._submit("truncate", (path,), lambda: b.truncate(path, size),
-                     cache_kw={"size": size})
+        self._submit_foldable("truncate", path, (size,),
+                              self.backend.truncate, {"size": size})
 
     def fallocate(self, path: str, size: int) -> None:
         b = self.backend
@@ -326,17 +369,16 @@ class CannyFS:
     # ------------------------------------------------------------------
 
     def chmod(self, path: str, mode: int) -> None:
-        b = self.backend
-        self._submit("chmod", (path,), lambda: b.chmod(path, mode),
-                     cache_kw={"mode": mode})
+        self._submit_foldable("chmod", path, (mode,),
+                              self.backend.chmod, {"mode": mode})
 
     def chown(self, path: str, uid: int, gid: int) -> None:
         b = self.backend
         self._submit("chown", (path,), lambda: b.chown(path, uid, gid))
 
     def utimens(self, path: str, atime: float, mtime: float) -> None:
-        b = self.backend
-        self._submit("utimens", (path,), lambda: b.utimens(path, atime, mtime))
+        self._submit_foldable("utimens", path, (atime, mtime),
+                              self.backend.utimens, None)
 
     def setxattr(self, path: str, key: str, value: bytes) -> None:
         b = self.backend
@@ -435,8 +477,9 @@ class CannyFS:
 
     @property
     def stats(self):
-        """Engine counters, including the per-op fault/trace counters
-        (deferred_errors, injected_faults, rollbacks, retries)."""
+        """Engine counters: per-op fault/trace counters (deferred_errors,
+        injected_faults, rollbacks, retries) and the optimizer's fusion
+        counters (fused_writes, folded_meta, elided_ops, bytes_elided)."""
         return self.engine.stats
 
     @property

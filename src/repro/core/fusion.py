@@ -1,0 +1,190 @@
+"""Optimizer layer: the transactional op-fusion pass.
+
+The paper's thesis is that batch I/O is a transaction whose only
+observation points are reads, barriers and commit.  Between observation
+points the pending op stream is therefore not just deferrable — it is
+*rewritable*: the engine may coalesce, fold and delete pending ops as long
+as commit-visible state is unchanged.  This module implements that pass as
+peephole rules over each path's pending chain:
+
+* **coalesce** — adjacent ``write_at`` ops on one path merge into a single
+  vectored ``write_vec`` backend call (contiguous segments concatenate
+  without copying until execution);
+* **fold** — adjacent same-kind ``chmod``/``utimens``/``truncate`` ops
+  collapse to last-wins (only the final value is observable at commit);
+* **elide** — a ``create``+``write``(+metadata) chain whose path is
+  unlinked inside the same unobserved window never touches the backend at
+  all (the extract-then-rmtree workload); the trailing unlink becomes
+  tolerant of the file's absence so the stream stays error-free.
+
+Safety comes from the scheduler's per-op flags: fusion only ever mutates
+the pending *tip* op of a path while it is unclaimed (no executor owns
+it), unsealed (no observation point waits on it) and in the same
+transaction region (so a fused failure is attributed to exactly one
+region's ledger scope).  Fault semantics are defined per *fused* backend
+call: one ``write_vec`` of N coalesced writes is a single match for a
+``FaultRule``, and a short (torn) outcome tears the fused op as a unit —
+see ``faults.FaultInjectingBackend.write_vec``.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+# op kinds whose effects on a path are invisible at commit once the path
+# is unlinked in the same unobserved window
+ELIDABLE_KINDS = frozenset({
+    "create", "write", "chmod", "utimens", "truncate", "fallocate",
+    "setxattr",
+})
+
+
+@dataclass(frozen=True)
+class FusionPolicy:
+    """Which peephole rules run, and the coalescing bounds.
+
+    ``max_segments``/``max_bytes`` cap one fused op's payload so a writer
+    streaming into a single file still rotates ops (and re-enters the
+    engine's in-flight budget) instead of growing one op without bound."""
+
+    enabled: bool = True
+    coalesce_writes: bool = True
+    fold_metadata: bool = True
+    elide_unlinked: bool = True
+    max_segments: int = 128
+    max_bytes: int = 32 << 20
+
+    @classmethod
+    def off(cls) -> "FusionPolicy":
+        return cls(enabled=False)
+
+
+class WritePayload:
+    """Segments of one (possibly fused) write op.
+
+    Contiguous appends extend the previous segment as a chunk list —
+    concatenation is deferred to ``segments()`` at execution time, so the
+    hot ACK path never copies payload bytes.  Mutated only under the
+    owning op's ``flock`` (scheduler guarantee); frozen once claimed."""
+
+    __slots__ = ("_segs", "nbytes")
+
+    def __init__(self, offset: int, data: bytes):
+        self._segs: list[list] = [[offset, [data], len(data)]]
+        self.nbytes = len(data)
+
+    def add(self, offset: int, data: bytes) -> None:
+        last = self._segs[-1]
+        if offset == last[0] + last[2]:
+            last[1].append(data)
+            last[2] += len(data)
+        else:
+            self._segs.append([offset, [data], len(data)])
+        self.nbytes += len(data)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._segs)
+
+    def segments(self) -> list[tuple[int, bytes]]:
+        return [(off, chunks[0] if len(chunks) == 1 else b"".join(chunks))
+                for off, chunks, _ in self._segs]
+
+
+class MetaPayload:
+    """Arguments of one foldable metadata op (chmod/utimens/truncate);
+    last-wins replacement under the owning op's flock."""
+
+    __slots__ = ("args",)
+
+    def __init__(self, args: tuple):
+        self.args = args
+
+
+class Fuser:
+    """The peephole pass.  Stateless apart from its counters; the
+    scheduler provides the locking context (``fuse_tip``/``elide_chain``)."""
+
+    def __init__(self, policy: FusionPolicy, stats):
+        self.policy = policy
+        self.stats = stats
+        self._slock = threading.Lock()   # exact counters across shards
+
+    # -- rule 1: write coalescing --------------------------------------
+
+    def absorb_write(self, sched, path: str, offset: int, data: bytes,
+                     region: object, on_absorb=None) -> bool:
+        """``on_absorb`` runs under the op's lock on success — the engine
+        updates its write-through stat cache there, so a fast-failing
+        fused op's error-path invalidation (at completion, strictly after
+        the lock is released) always wins over the mocked entry."""
+        pol = self.policy
+        if not (pol.enabled and pol.coalesce_writes):
+            return False
+
+        def attempt(op) -> bool:
+            pl = op.payload
+            if (op.kind != "write" or not isinstance(pl, WritePayload)
+                    or op.region is not region):
+                return False
+            if (pl.n_segments >= pol.max_segments
+                    or pl.nbytes + len(data) > pol.max_bytes):
+                return False
+            pl.add(offset, data)
+            with self._slock:
+                self.stats.fused_writes += 1
+            if on_absorb is not None:
+                on_absorb()
+            return True
+
+        return sched.fuse_tip(path, attempt)
+
+    # -- rule 2: metadata folding --------------------------------------
+
+    def absorb_meta(self, sched, kind: str, path: str, args: tuple,
+                    region: object, on_absorb=None) -> bool:
+        if not (self.policy.enabled and self.policy.fold_metadata):
+            return False
+
+        def attempt(op) -> bool:
+            pl = op.payload
+            if (op.kind != kind or not isinstance(pl, MetaPayload)
+                    or op.region is not region):
+                return False
+            # truncate is only last-wins when it keeps shrinking: a shrink
+            # followed by a grow zero-pads the cut region, which the grow
+            # alone would not (chmod/utimens are pure last-wins)
+            if kind == "truncate" and args[0] > pl.args[0]:
+                return False
+            pl.args = args
+            with self._slock:
+                self.stats.folded_meta += 1
+            if on_absorb is not None:
+                on_absorb()
+            return True
+
+        return sched.fuse_tip(path, attempt)
+
+    # -- rule 3: unlink elision ----------------------------------------
+
+    def elide_for_unlink(self, sched, path: str, region: object) -> bool:
+        """Remove the pending create/write/metadata chain on ``path`` from
+        the op stream ahead of its unlink.  Returns True iff anything was
+        elided — the caller must then make the unlink tolerant of the
+        file's absence (the create that would have produced it is gone,
+        and an implicit-create write may be gone too)."""
+        if not (self.policy.enabled and self.policy.elide_unlinked):
+            return False
+
+        def eligible(op) -> bool:
+            return op.kind in ELIDABLE_KINDS and op.region is region
+
+        elided = sched.elide_chain(path, eligible)
+        if not elided:
+            return False
+        dropped = sum(op.payload.nbytes for op in elided
+                      if isinstance(op.payload, WritePayload))
+        with self._slock:
+            self.stats.elided_ops += len(elided)
+            self.stats.bytes_elided += dropped
+        return True

@@ -1,0 +1,405 @@
+"""Scheduler layer: per-path FIFO + cross-path DAG edges, sharded by path.
+
+This is the bottom third of the engine split (scheduler / optimizer /
+executor).  It owns *which op may run when* and nothing else:
+
+* per-path FIFO order via a ``last_op`` map (two ops touching the same path
+  execute in submission order);
+* cross-path edges for the cases per-path order cannot see (create under a
+  pending mkdir, readdir racing child creation, rename spanning two paths);
+* the in-flight budget (submission blocks at ``max_inflight``), the ready
+  queue the executor drains, and the poison/close lifecycle.
+
+Lock architecture
+-----------------
+
+The seed engine serialized *all* submit/complete traffic under one global
+lock.  Here submission state is sharded by path hash: each shard's lock
+protects only that shard's ``last_op`` and ``pending_children`` maps, so
+disjoint-path submissions and completions proceed in parallel.  A small
+control lock remains for the ready queue, the in-flight budget and
+lifecycle flags; it is held only for queue pushes/pops and counter
+updates, never while wiring dependencies.
+
+Lock order (never acquired in reverse): shard locks (ascending index)
+-> per-op ``flock`` -> control lock.  Leaf locks (stat cache, ledger,
+fusion stats) nest under any of these.
+
+Per-op flags (``claimed``/``sealed``/``elided``/``completed``) live under
+the op's own ``flock`` so the optimizer can mutate a pending op's payload
+race-free against the executor claiming it:
+
+* ``claimed``  — an executor owns the op; its payload is frozen.
+* ``sealed``   — an observation point (read / barrier / any sync op) has
+  scheduled a wait on this op; it must execute exactly as submitted.
+* ``elided``   — the optimizer proved the op's effects are invisible at
+  every observation point (e.g. writes to a path unlinked in the same
+  window); the executor completes it without touching the backend.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+from .backend import norm_path, parent_of
+from .errors import EnginePoisonedError
+
+# ops that change the namespace under their parent directory — a readdir /
+# rmdir / rename of the parent must wait for *all* of these (siblings do not
+# chain with each other, so per-path order alone cannot express this).
+STRUCTURAL = {"mkdir", "rmdir", "create", "unlink", "rename", "symlink", "link"}
+# ops that must observe a complete namespace under their own path
+NEEDS_CHILDREN = {"rmdir", "readdir", "rename"}
+
+DEFAULT_SHARDS = 16
+
+
+class _Op:
+    __slots__ = ("seq", "kind", "paths", "fn", "done", "error", "result",
+                 "remaining_deps", "dependents", "cancelled", "submitted_at",
+                 "started_at", "finished_at", "eager", "region",
+                 "flock", "completed", "claimed", "sealed", "elided",
+                 "payload", "prev_same_path")
+
+    def __init__(self, seq: int, kind: str, paths: tuple[str, ...],
+                 fn: Callable[[], Any], eager: bool = True,
+                 region: object = None, payload: object = None):
+        self.seq = seq
+        self.kind = kind
+        self.paths = paths
+        self.fn = fn
+        self.eager = eager
+        self.region = region  # active Transaction at submission, if any
+        self.done = threading.Event()
+        self.error: BaseException | None = None
+        self.result: Any = None
+        self.remaining_deps = 0
+        self.dependents: list[_Op] = []
+        self.cancelled = False
+        self.submitted_at = time.monotonic()
+        self.started_at = 0.0
+        self.finished_at = 0.0
+        # -- optimizer state (guarded by flock) --
+        self.flock = threading.Lock()
+        self.completed = False        # dependents released; op is history
+        self.claimed = False          # an executor owns it; payload frozen
+        self.sealed = False           # an observation point pinned it
+        self.elided = False           # optimizer removed it from the stream
+        self.payload = payload        # fusable payload (fusion.py), or None
+        self.prev_same_path: Optional[_Op] = None  # chain link for peepholes
+
+
+class _Shard:
+    __slots__ = ("lock", "last_op", "pending_children")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.last_op: dict[str, _Op] = {}       # last pending op per path
+        # every pending structural op, grouped by parent dir (seq -> op)
+        self.pending_children: dict[str, dict[int, _Op]] = {}
+
+
+class OpScheduler:
+    """Sharded DAG scheduler.  ``stats`` is the engine's EngineStats — the
+    scheduler updates submitted/executed/queue-depth counters under its
+    control lock so they stay exact under concurrency."""
+
+    def __init__(self, stats, *, max_inflight: int = 300,
+                 shards: int = DEFAULT_SHARDS):
+        self.stats = stats
+        self.max_inflight = int(max_inflight)
+        self._shards = [_Shard() for _ in range(max(1, int(shards)))]
+        self._nshards = len(self._shards)
+        self._seq = itertools.count(1)
+        # control lock: ready queue + budget + lifecycle (held briefly)
+        self._ctl = threading.Lock()
+        self._ready_cv = threading.Condition(self._ctl)
+        self._idle_cv = threading.Condition(self._ctl)
+        self._budget_cv = threading.Condition(self._ctl)
+        self._ready: deque[_Op] = deque()
+        self._inflight = 0
+        self._poisoned = False
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # sharding helpers
+    # ------------------------------------------------------------------
+
+    def _shard_of(self, path: str) -> _Shard:
+        return self._shards[hash(path) % self._nshards]
+
+    def _lock_shards(self, paths) -> list[_Shard]:
+        """Acquire the shards covering ``paths`` in ascending index order
+        (deadlock-free for multi-path ops like rename)."""
+        idx = sorted({hash(p) % self._nshards for p in paths})
+        shards = [self._shards[i] for i in idx]
+        for s in shards:
+            s.lock.acquire()
+        return shards
+
+    @staticmethod
+    def _unlock_shards(shards) -> None:
+        for s in reversed(shards):
+            s.lock.release()
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+
+    def submit(self, kind: str, paths: tuple[str, ...],
+               fn: Callable[[], Any], *, eager: bool,
+               region: object = None, payload: object = None,
+               on_admit: Callable[[], None] | None = None) -> _Op:
+        """Admit one op: budget gate, dependency wiring, ready enqueue.
+        Paths must already be normalized.  ``on_admit`` runs after the
+        budget admits the op but before it is published to the DAG — i.e.
+        strictly before the op can possibly execute (the engine updates
+        its write-through stat cache there, so a fast-failing op's
+        error-path invalidation, which happens at completion, always wins
+        over the ACK-time mocked entry)."""
+        with self._ctl:
+            if self._poisoned:
+                raise EnginePoisonedError(
+                    "cannyfs engine poisoned by an earlier deferred error")
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            # budget: block the *caller* — this is the paper's in-flight cap
+            while self._inflight >= self.max_inflight:
+                self._budget_cv.wait()
+            seq = next(self._seq)
+            self._inflight += 1
+            self.stats.submitted += 1
+            self.stats.op_counts[kind] = self.stats.op_counts.get(kind, 0) + 1
+            self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                             self._inflight)
+        op = _Op(seq, kind, paths, fn, eager=eager, region=region,
+                 payload=payload)
+        if on_admit is not None:
+            on_admit()
+
+        relevant = set(paths)
+        for p in paths:
+            relevant.add(parent_of(p))
+        shards = self._lock_shards(relevant)
+        try:
+            deps: list[_Op] = []
+            seen: set[int] = set()
+
+            def add_dep(d: Optional[_Op]) -> None:
+                if d is None or id(d) in seen:
+                    return
+                seen.add(id(d))
+                with d.flock:
+                    if d.completed:
+                        return
+                    d.dependents.append(op)
+                    # observation point: a sync op waiting on d pins it —
+                    # the optimizer may no longer rewrite or remove it
+                    if not eager:
+                        d.sealed = True
+                deps.append(d)
+
+            for p in paths:
+                shard = self._shard_of(p)
+                prev = shard.last_op.get(p)
+                if prev is not None and len(paths) == 1:
+                    op.prev_same_path = prev   # peephole chain link
+                add_dep(prev)
+                # an op under a directory whose creation/rename is pending
+                # must wait for it
+                add_dep(self._shard_of(parent_of(p)).last_op.get(parent_of(p)))
+            if kind in NEEDS_CHILDREN:
+                for p in paths:
+                    kids = self._shard_of(p).pending_children.get(p, {})
+                    for d in list(kids.values()):
+                        add_dep(d)
+            for p in paths:
+                self._shard_of(p).last_op[p] = op
+            if kind in STRUCTURAL:
+                for p in paths:
+                    par = parent_of(p)
+                    self._shard_of(par).pending_children.setdefault(
+                        par, {})[op.seq] = op
+            # publish the dep count last: deps completing mid-wiring have
+            # already decremented remaining_deps below zero, so the sum
+            # lands on the true outstanding count exactly once
+            with op.flock:
+                op.remaining_deps += len(deps)
+                ready_now = op.remaining_deps == 0
+        finally:
+            self._unlock_shards(shards)
+        if ready_now:
+            self._push_ready(op)
+        return op
+
+    def _push_ready(self, op: _Op) -> None:
+        with self._ctl:
+            self._ready.append(op)
+            self._ready_cv.notify()
+
+    # ------------------------------------------------------------------
+    # optimizer hooks
+    # ------------------------------------------------------------------
+
+    def fuse_tip(self, path: str, attempt: Callable[[_Op], bool]) -> bool:
+        """Offer the pending tip op on ``path`` to the optimizer.
+
+        ``attempt(op)`` runs under the shard lock *and* the op's flock with
+        the op guaranteed unclaimed/unsealed/uncompleted — it may mutate the
+        op's payload and must return True iff it absorbed the new work."""
+        shard = self._shard_of(path)
+        with shard.lock:
+            tip = shard.last_op.get(path)
+            if tip is None:
+                return False
+            with tip.flock:
+                if (tip.completed or tip.claimed or tip.sealed
+                        or tip.cancelled or tip.elided):
+                    return False
+                return attempt(tip)
+
+    def elide_chain(self, path: str, eligible: Callable[[_Op], bool]) -> list[_Op]:
+        """Walk the pending same-path chain backwards from the tip, marking
+        every op ``eligible`` accepts as elided (stops at the first claimed,
+        sealed, completed, cancelled or rejected op).  Returns the ops
+        elided, newest first.  Elided ops still flow through the DAG — the
+        executor completes them without running their fn."""
+        shard = self._shard_of(path)
+        out: list[_Op] = []
+        with shard.lock:
+            cur = shard.last_op.get(path)
+            while cur is not None and cur.paths == (path,):
+                with cur.flock:
+                    if (cur.completed or cur.claimed or cur.sealed
+                            or cur.cancelled or cur.elided):
+                        break
+                    if not eligible(cur):
+                        break
+                    cur.elided = True
+                    nxt = cur.prev_same_path
+                out.append(cur)
+                cur = nxt
+        return out
+
+    def seal_path(self, path: str) -> Optional[_Op]:
+        """Pin the pending tip on ``path`` (an observation point is about
+        to wait on it) and return it, or None if the path is quiescent."""
+        shard = self._shard_of(path)
+        with shard.lock:
+            op = shard.last_op.get(path)
+            if op is not None:
+                with op.flock:
+                    op.sealed = True
+        return op
+
+    # ------------------------------------------------------------------
+    # executor interface
+    # ------------------------------------------------------------------
+
+    def next_ready(self) -> Optional[_Op]:
+        """Blocking pop; None once the scheduler is closed and drained."""
+        with self._ctl:
+            while not self._ready and not self._closed:
+                self._ready_cv.wait()
+            if not self._ready:
+                return None
+            return self._ready.popleft()
+
+    def on_complete(self, op: _Op) -> None:
+        """Release dependents, clean the shard maps, retire the budget
+        slot.  Called by the engine after the op ran (or was skipped)."""
+        with op.flock:
+            op.completed = True
+            dependents = op.dependents
+            op.dependents = []
+            op.prev_same_path = None   # don't anchor the whole chain
+        newly_ready: list[_Op] = []
+        for d in dependents:
+            with d.flock:
+                d.remaining_deps -= 1
+                if d.remaining_deps == 0:
+                    newly_ready.append(d)
+        shards = self._lock_shards(
+            set(op.paths) | {parent_of(p) for p in op.paths})
+        try:
+            for p in op.paths:
+                shard = self._shard_of(p)
+                if shard.last_op.get(p) is op:
+                    del shard.last_op[p]
+            if op.kind in STRUCTURAL:
+                for p in op.paths:
+                    par = parent_of(p)
+                    kids = self._shard_of(par).pending_children.get(par)
+                    if kids is not None:
+                        kids.pop(op.seq, None)
+                        if not kids:
+                            del self._shard_of(par).pending_children[par]
+        finally:
+            self._unlock_shards(shards)
+        with self._ctl:
+            for d in newly_ready:
+                self._ready.append(d)
+                self._ready_cv.notify()
+            self._inflight -= 1
+            self._budget_cv.notify()
+            if self._inflight == 0:
+                self._idle_cv.notify_all()
+        op.done.set()
+
+    # ------------------------------------------------------------------
+    # barriers / lifecycle
+    # ------------------------------------------------------------------
+
+    def pending_tip(self, path: str) -> Optional[_Op]:
+        shard = self._shard_of(path)
+        with shard.lock:
+            return shard.last_op.get(path)
+
+    def drain(self) -> None:
+        with self._idle_cv:
+            while self._inflight > 0:
+                self._idle_cv.wait()
+
+    @property
+    def poisoned(self) -> bool:
+        return self._poisoned
+
+    def poison(self) -> None:
+        with self._ctl:
+            self._poisoned = True
+            # cancel everything not yet started; their dependents cascade
+            queued = list(self._ready)
+        for op in queued:
+            op.cancelled = True
+
+    def reset_poison(self) -> None:
+        with self._ctl:
+            self._poisoned = False
+
+    def close(self) -> None:
+        with self._ctl:
+            self._closed = True
+            self._ready_cv.notify_all()
+
+    @property
+    def inflight(self) -> int:
+        return self._inflight
+
+    # -- merged debugging/introspection views (tests assert on these) ----
+
+    def merged_last_op(self) -> dict[str, _Op]:
+        out: dict[str, _Op] = {}
+        for s in self._shards:
+            with s.lock:
+                out.update(s.last_op)
+        return out
+
+    def merged_pending_children(self) -> dict[str, dict[int, _Op]]:
+        out: dict[str, dict[int, _Op]] = {}
+        for s in self._shards:
+            with s.lock:
+                out.update(s.pending_children)
+        return out

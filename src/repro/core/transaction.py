@@ -8,6 +8,24 @@ A Transaction brackets a region of work against a CannyFS mount:
 * ``rollback()`` removes everything the region created (files first, then
   directories deepest-first), restoring the pre-transaction namespace;
 * ``run_transaction`` is the paper's "roll back and resubmit" loop.
+
+Transactions are also the *optimization-window* boundaries for the
+engine's op-fusion pass: between observation points (reads, barriers and
+this module's commit/rollback drains) the region's pending op stream may
+be coalesced, folded or elided, because only commit-visible state is
+promised.  The boundaries compose mechanically: the fusion pass only
+rewrites ops in the *same* region (so a fused failure lands in exactly one
+region's ledger scope and an elided create skips exactly that region's
+journal), every sync op and barrier seals the ops it waits on, and
+commit/rollback drain — after which nothing is pending to rewrite.  An op
+elided inside a region therefore commits trivially (its effects were
+proven invisible) and has nothing to roll back (it journaled nothing and
+created nothing).
+
+Torn ops ride the same loop: a fused write that lands short surfaces as a
+deferred ``ShortWriteError`` (errno EIO, transient), the torn file *was*
+journaled before the tear was detected, so rollback removes it and the
+resubmission rewrites it whole.
 """
 from __future__ import annotations
 

@@ -1,0 +1,582 @@
+"""Op-fusion tests: the optimizer layer's peephole rules, the
+fused-vs-unfused oracle property, and fusion x faults interaction.
+
+Determinism technique: a ``GateBackend`` wedges the engine's single worker
+on a sentinel op, so every subsequently submitted op is *pending* (and
+therefore rewritable) until the gate opens — peephole decisions become
+exact, not race-dependent."""
+import errno
+import threading
+import time
+
+import pytest
+
+from repro.core import (CannyFS, EagerFlags, EnginePoisonedError,
+                        FaultInjectingBackend, FaultPlan, FaultRule,
+                        FusionPolicy, InMemoryBackend, LatencyBackend,
+                        LatencyModel, QuotaBackend, ShortWriteError,
+                        Transaction, TransactionFailedError, VirtualClock,
+                        run_transaction)
+
+GATE = "gate_sentinel"
+
+
+class GateBackend(InMemoryBackend):
+    """Records data/metadata calls; fsync(GATE) blocks until released.
+    write_vec is inherited from the base loop, so ``write_at`` records one
+    entry per executed segment and ``vec_calls`` one per fused batch."""
+
+    def __init__(self):
+        super().__init__()
+        self.gate = threading.Event()
+        self.calls: list[tuple] = []
+        self.vec_calls: list[tuple] = []
+
+    def fsync(self, path):
+        if path == GATE:
+            self.gate.wait()
+
+    def write_at(self, p, o, data):
+        self.calls.append(("write_at", p, o, bytes(data)))
+        return super().write_at(p, o, data)
+
+    def write_vec(self, p, segments):
+        self.vec_calls.append((p, [(o, len(d)) for o, d in segments]))
+        return super().write_vec(p, segments)
+
+    def create(self, p):
+        self.calls.append(("create", p))
+        super().create(p)
+
+    def unlink(self, p):
+        self.calls.append(("unlink", p))
+        super().unlink(p)
+
+    def chmod(self, p, m):
+        self.calls.append(("chmod", p, m))
+        super().chmod(p, m)
+
+    def utimens(self, p, a, m):
+        self.calls.append(("utimens", p, a, m))
+        super().utimens(p, a, m)
+
+    def truncate(self, p, s):
+        self.calls.append(("truncate", p, s))
+        super().truncate(p, s)
+
+    def kinds(self, kind):
+        return [c for c in self.calls if c[0] == kind]
+
+
+def gated_fs(**kw):
+    be = GateBackend()
+    fs = CannyFS(be, workers=1, echo_errors=False, **kw)
+    fs.create(GATE)
+    fs.drain()
+    fs.fsync(GATE)        # wedges the single worker until be.gate.set()
+    return be, fs
+
+
+def release(be, fs):
+    be.gate.set()
+    fs.drain()
+
+
+# ---------------------------------------------------------------------------
+# rule 1: write coalescing -> one vectored backend call
+# ---------------------------------------------------------------------------
+
+def test_streamed_writes_coalesce_into_one_write_vec():
+    be, fs = gated_fs()
+    with fs.open("f", "wb") as h:
+        for i in range(10):
+            h.write(bytes([i]) * 4)
+    release(be, fs)
+    assert fs.read_file("f") == b"".join(bytes([i]) * 4 for i in range(10))
+    assert len(be.vec_calls) == 1
+    # contiguous chunks merged into a single segment
+    assert be.vec_calls[0][1] == [(0, 40)]
+    assert fs.stats.fused_writes == 9
+    assert fs.stats.executed == fs.stats.submitted
+    fs.close()
+
+
+def test_non_contiguous_and_overlapping_segments_apply_in_order():
+    be, fs = gated_fs()
+    fs._write_at("f", 0, b"aaaaaaaa")
+    fs._write_at("f", 16, b"bbbb")      # gap -> second segment
+    fs._write_at("f", 2, b"XX")         # overlap -> applied last
+    release(be, fs)
+    got = fs.read_file("f")
+    assert got == b"aaXXaaaa" + b"\0" * 8 + b"bbbb"
+    assert len(be.vec_calls) == 1 and len(be.vec_calls[0][1]) == 3
+    fs.close()
+
+
+def test_fusion_policy_bounds_rotate_ops():
+    be, fs = gated_fs(fusion=FusionPolicy(max_segments=128, max_bytes=64))
+    with fs.open("f", "wb") as h:
+        for i in range(10):
+            h.write(b"x" * 16)          # 64-byte cap -> new op every 4
+    release(be, fs)
+    assert fs.read_file("f") == b"x" * 160
+    assert len(be.vec_calls) == 3       # 64+64+32
+    fs.close()
+
+
+def test_fusion_off_one_backend_call_per_write():
+    be, fs = gated_fs(fusion=False)
+    with fs.open("f", "wb") as h:
+        for i in range(5):
+            h.write(bytes([i]))
+    release(be, fs)
+    assert fs.read_file("f") == bytes(range(5))
+    assert len(be.vec_calls) == 5
+    assert fs.stats.fused_writes == 0
+    fs.close()
+
+
+def test_writes_do_not_fuse_across_regions():
+    """A fused failure must land in exactly one region's ledger scope, so
+    ops from different transaction regions never share a backend call."""
+    be, fs = gated_fs()
+    fs._write_at("f", 0, b"pre")        # region None
+    with Transaction(fs) as txn:
+        fs._write_at("f", 3, b"txn")    # contiguous, but region differs
+        release(be, fs)
+    assert txn.committed
+    assert len(be.vec_calls) == 2
+    assert fs.read_file("f") == b"pretxn"
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# rule 2: metadata folding (last-wins)
+# ---------------------------------------------------------------------------
+
+def test_adjacent_chmod_folds_to_last_value():
+    be, fs = gated_fs()
+    fs.write_file("f", b"d")
+    fs.chmod("f", 0o600)
+    fs.chmod("f", 0o640)
+    fs.chmod("f", 0o644)
+    release(be, fs)
+    assert be.kinds("chmod") == [("chmod", "f", 0o644)]
+    assert fs.stats.folded_meta == 2
+    assert fs.stat("f").mode == 0o644
+    fs.close()
+
+
+def test_utimens_and_truncate_fold():
+    be, fs = gated_fs()
+    fs.write_file("f", b"dddddddd")
+    fs.utimens("f", 1.0, 1.0)
+    fs.utimens("f", 2.0, 2.0)
+    fs.truncate("f", 6)
+    fs.truncate("f", 2)
+    release(be, fs)
+    assert be.kinds("utimens") == [("utimens", "f", 2.0, 2.0)]
+    assert be.kinds("truncate") == [("truncate", "f", 2)]
+    assert fs.read_file("f") == b"dd"
+    assert fs.stats.folded_meta == 2
+    fs.close()
+
+
+def test_truncate_grow_after_shrink_does_not_fold():
+    """t(4);t(9) zero-pads the cut region — folding to t(9) alone would
+    leave the original bytes.  Only shrink-further folds are last-wins."""
+    be, fs = gated_fs()
+    fs.write_file("f", b"x" * 12)
+    fs.truncate("f", 4)
+    fs.truncate("f", 9)     # grow: must stay a separate backend op
+    release(be, fs)
+    assert be.kinds("truncate") == [("truncate", "f", 4),
+                                    ("truncate", "f", 9)]
+    assert fs.read_file("f") == b"x" * 4 + b"\0" * 5
+    fs.close()
+
+
+def test_different_kinds_do_not_fold():
+    be, fs = gated_fs()
+    fs.write_file("f", b"d")
+    fs.chmod("f", 0o600)
+    fs.utimens("f", 1.0, 1.0)
+    fs.chmod("f", 0o644)    # tip is utimens -> no fold (order matters)
+    release(be, fs)
+    assert len(be.kinds("chmod")) == 2
+    assert fs.stats.folded_meta == 0
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# rule 3: unlink elision
+# ---------------------------------------------------------------------------
+
+def test_create_write_chain_unlinked_in_window_never_hits_backend():
+    be, fs = gated_fs()
+    fs.write_file("tmp", b"x" * 100)    # create + write
+    fs.chmod("tmp", 0o600)
+    fs.unlink("tmp")
+    release(be, fs)
+    assert be.kinds("create") == [("create", GATE)]  # only the sentinel
+    assert be.vec_calls == []
+    assert be.kinds("chmod") == []
+    # the tolerant unlink ran (and swallowed the file's absence)
+    assert be.kinds("unlink") == [("unlink", "tmp")]
+    assert fs.stats.elided_ops == 3
+    assert fs.stats.bytes_elided == 100
+    assert len(fs.ledger) == 0
+    assert not fs.exists("tmp")
+    assert fs.stats.executed == fs.stats.submitted
+    fs.close()
+
+
+def test_unlink_of_preexisting_file_still_removes_it():
+    """Elision drops the pending O_TRUNC create+write, but the unlink must
+    still remove the file that existed before the window."""
+    be, fs = gated_fs()
+    release(be, fs)                     # let setup run for real
+    fs.write_file("keep", b"old")
+    fs.drain()
+    be.calls.clear()
+    be.vec_calls.clear()
+    be.gate.clear()
+    fs.fsync(GATE)                      # wedge again
+    fs.write_file("keep", b"new")       # pending rewrite chain
+    fs.unlink("keep")
+    release(be, fs)
+    assert be.vec_calls == []           # rewrite elided
+    assert not fs.exists("keep")
+    assert "keep" not in be.snapshot()["files"]
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_elided_create_in_transaction_commits_and_rolls_back_clean():
+    """An elided op's region must still commit/roll back correctly: the
+    elided create journals nothing, so rollback has nothing to remove and
+    the backend is untouched either way."""
+    be, fs = gated_fs()
+    with Transaction(fs) as txn:
+        fs.write_file("t/f", b"z" * 32)   # under pending mkdir
+        fs.mkdir("t") if False else None
+        fs.unlink("t/f")
+        release(be, fs)
+    assert txn.committed
+    assert txn._created == {}            # nothing journaled
+    assert "t/f" not in be.snapshot()["files"]
+    fs.close()
+
+
+def test_elision_stops_at_sealed_op():
+    """A barrier is an observation point: ops it waits on are sealed and
+    must execute even if the path is later unlinked."""
+    be, fs = gated_fs()
+    fs.write_file("f", b"observed")
+    waiter = threading.Thread(target=fs.engine.barrier, args=("f",))
+    waiter.start()
+    for _ in range(200):
+        if fs.stats.barrier_waits:
+            break
+        time.sleep(0.005)
+    assert fs.stats.barrier_waits == 1
+    fs.unlink("f")                       # chain is sealed: no elision
+    release(be, fs)
+    waiter.join()
+    assert fs.stats.elided_ops == 0
+    assert len(be.vec_calls) == 1        # the observed write really ran
+    assert be.kinds("unlink") == [("unlink", "f")]
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_barrier_seal_prevents_fusing_more_into_waited_op():
+    be, fs = gated_fs()
+    fs._write_at("f", 0, b"aaaa")
+    waiter = threading.Thread(target=fs.engine.barrier, args=("f",))
+    waiter.start()
+    for _ in range(200):
+        if fs.stats.barrier_waits:
+            break
+        time.sleep(0.005)
+    fs._write_at("f", 4, b"bbbb")        # sealed tip -> separate op
+    release(be, fs)
+    waiter.join()
+    assert fs.stats.fused_writes == 0
+    assert len(be.vec_calls) == 2
+    assert fs.read_file("f") == b"aaaabbbb"
+    fs.close()
+
+
+def test_poisoned_engine_fails_fast_even_with_fusable_tip():
+    """Fusion must not ACK writes into a poisoned engine: a dep-blocked
+    (hence uncancelled) pending tip is absorbable, but the submit path's
+    fail-fast guarantee has to win."""
+    be, fs = gated_fs(abort_on_error=True)
+    with fs.open("f", "wb") as h:
+        h.write(b"a")               # create (ready) + write (dep-blocked)
+    fs.engine._sched.poison()
+    with pytest.raises(EnginePoisonedError):
+        fs._write_at("f", 1, b"b")  # would fuse; must fail fast instead
+    with pytest.raises(EnginePoisonedError):
+        fs.chmod("f", 0o600)
+    with pytest.raises(EnginePoisonedError):
+        fs.unlink("f")
+    fs.engine.reset_poison()
+    release(be, fs)
+    fs.close()
+
+
+def test_sync_unlink_mode_stays_strict():
+    fs = CannyFS(InMemoryBackend(), flags=EagerFlags.all_off(), workers=2,
+                 echo_errors=False)
+    with pytest.raises(FileNotFoundError):
+        fs.unlink("missing")
+    fs.close()
+
+
+def test_unlink_without_pending_chain_still_reports_enoent():
+    be, fs = gated_fs()
+    fs.unlink("never_existed")           # no chain -> strict unlink
+    release(be, fs)
+    sig = [(e.kind, e.paths) for e in fs.ledger.entries()]
+    assert sig == [("unlink", ("never_existed",))]
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# fusion x faults: semantics are per fused backend call
+# ---------------------------------------------------------------------------
+
+def test_fault_rule_fires_per_fused_op_not_per_original_write():
+    plan = FaultPlan([FaultRule(error="EIO", ops=("write",))])
+    be = GateBackend()
+    fs = CannyFS(FaultInjectingBackend(be, plan), workers=1,
+                 echo_errors=False)
+    fs.create(GATE)
+    fs.drain()
+    fs.fsync(GATE)
+    for i in range(6):
+        fs._write_at("f", i, bytes([i]))   # one fused op
+    release(be, fs)
+    # six submitted writes, ONE matching backend call, ONE ledger entry
+    assert plan.stats()["ops_seen"].get("write", 0) == 1
+    assert plan.injected == 1
+    sig = [(e.kind, e.paths, e.error.errno) for e in fs.ledger.entries()]
+    assert sig == [("write", ("f",), errno.EIO)]
+    assert fs.stats.injected_faults == 1
+    fs.close()
+
+
+def test_short_write_fault_tears_fused_vector_and_ledgers():
+    plan = FaultPlan([FaultRule(outcome="short", short_fraction=0.5,
+                                ops=("write",), max_failures=1)])
+    be = GateBackend()
+    fs = CannyFS(FaultInjectingBackend(be, plan), workers=1,
+                 echo_errors=False)
+    fs.create(GATE)
+    fs.drain()
+    fs.fsync(GATE)
+    with fs.open("torn", "wb") as h:
+        h.write(b"a" * 32)
+        h.write(b"b" * 32)
+    release(be, fs)
+    # half the fused 64 bytes landed; the tear surfaced as a deferred error
+    assert be.snapshot()["files"]["torn"] == b"a" * 32
+    entries = fs.ledger.entries()
+    assert len(entries) == 1 and isinstance(entries[0].error, ShortWriteError)
+    assert entries[0].error.errno == errno.EIO
+    assert entries[0].error.written == 32
+    assert entries[0].error.expected == 64
+    fs.close()
+
+
+def test_short_write_fails_transaction_then_retry_converges():
+    plan = FaultPlan([FaultRule(outcome="short", short_fraction=0.25,
+                                ops=("write",), max_failures=1)])
+    inner = InMemoryBackend()
+    fs = CannyFS(FaultInjectingBackend(inner, plan), echo_errors=False)
+
+    def body(fs):
+        fs.makedirs("out")
+        with fs.open("out/data", "wb") as h:
+            h.write(b"q" * 64)
+
+    run_transaction(fs, body, retries=3)
+    fs.drain()
+    # attempt 1 tore, was rolled back (torn file journaled+removed);
+    # attempt 2 wrote the whole payload
+    assert inner.snapshot()["files"]["out/data"] == b"q" * 64
+    assert fs.stats.retries == 1 and fs.stats.rollbacks == 1
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_short_write_in_sync_mode_raises_directly():
+    plan = FaultPlan([FaultRule(outcome="short", short_fraction=0.0,
+                                ops=("write",), max_failures=1)])
+    fs = CannyFS(FaultInjectingBackend(InMemoryBackend(), plan),
+                 flags=EagerFlags.all_off(), workers=2, echo_errors=False)
+    fs.makedirs("d")
+    with pytest.raises(ShortWriteError):
+        fs._write_at("d/f", 0, b"xyz")
+    fs.close()
+
+
+def test_latency_spike_slows_op_without_failing_it():
+    clock = VirtualClock()
+    plan = FaultPlan([FaultRule(outcome="delay", delay_s=0.5,
+                                ops=("write",), max_failures=2)])
+    fs = CannyFS(FaultInjectingBackend(InMemoryBackend(), plan, clock=clock),
+                 echo_errors=False)
+    fs.write_file("slow", b"v")
+    fs.drain()
+    assert clock.now() >= 0.5            # the spike was paid (virtually)
+    assert plan.delayed == 1
+    assert plan.injected == 0            # a spike is not a fault
+    assert len(fs.ledger) == 0
+    assert fs.read_file("slow") == b"v"
+    fs.close()
+
+
+def test_short_rule_does_not_match_non_write_ops():
+    plan = FaultPlan([FaultRule(outcome="short")])   # ops=None: all kinds
+    assert plan.check("mkdir", "d") is None
+    assert plan.check("unlink", "f") is None
+    tok = plan.check("write", "f")
+    assert tok is not None and tok.outcome == "short"
+
+
+# ---------------------------------------------------------------------------
+# write_vec composition through the decorator stack
+# ---------------------------------------------------------------------------
+
+def test_write_vec_through_quota_charges_per_fused_op():
+    q = QuotaBackend(InMemoryBackend(), 100)
+    q.mkdir("d")
+    assert q.write_vec("d/f", [(0, b"x" * 40), (40, b"y" * 40)]) == 80
+    assert q.used == 80
+    with pytest.raises(OSError) as ei:
+        q.write_vec("d/g", [(0, b"z" * 30)])
+    assert ei.value.errno == errno.EDQUOT
+    assert q.used == 80                  # failed vector charged nothing
+    q.unlink("d/f")
+    assert q.used == 0
+
+
+def test_write_vec_quota_uncharges_torn_tail():
+    plan = FaultPlan([FaultRule(outcome="short", short_fraction=0.5,
+                                ops=("write",), max_failures=1)])
+    inner = InMemoryBackend()
+    stack = QuotaBackend(FaultInjectingBackend(inner, plan), 1000)
+    stack.mkdir("d")
+    n = stack.write_vec("d/f", [(0, b"x" * 64)])
+    assert n == 32
+    # only the landed prefix stays charged
+    assert stack.used == 32
+    assert inner.snapshot()["files"]["d/f"] == b"x" * 32
+
+
+def test_write_vec_through_latency_is_one_roundtrip():
+    inner = InMemoryBackend()
+    clock = VirtualClock()
+    lat = LatencyBackend(inner, LatencyModel(meta_ms=2.0, data_ms=2.0,
+                                             jitter_sigma=0.0), clock=clock)
+    lat.write_vec("f", [(0, b"a" * 10), (10, b"b" * 10)])
+    assert lat.op_count == 1
+    assert inner.snapshot()["files"]["f"] == b"a" * 10 + b"b" * 10
+
+
+def test_base_write_vec_loop_respects_overridden_write_at():
+    """Test doubles that override write_at must still see every segment —
+    InMemoryBackend deliberately inherits the loop fallback."""
+    seen = []
+
+    class Spy(InMemoryBackend):
+        def write_at(self, p, o, d):
+            seen.append((p, o, len(d)))
+            return super().write_at(p, o, d)
+
+    s = Spy()
+    assert s.write_vec("f", [(0, b"ab"), (2, b"cd")]) == 4
+    assert seen == [("f", 0, 2), ("f", 2, 2)]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the acceptance workload, deterministically
+# ---------------------------------------------------------------------------
+
+def _window_workload(fusion):
+    """Chunked extract + manifest removal entirely inside one unobserved
+    window (worker gated), mirroring benchmarks.fusion_table."""
+    be = GateBackend()
+    fs = CannyFS(be, workers=1, fusion=fusion, echo_errors=False)
+    fs.create(GATE)
+    fs.drain()
+    base_calls = len(be.calls)
+    fs.fsync(GATE)
+    files = [(f"t/f{i}", bytes([i]) * 64) for i in range(8)]
+    fs.makedirs("t")
+    for path, data in files:
+        with fs.open(path, "wb") as h:
+            for lo in range(0, len(data), 16):
+                h.write(data[lo:lo + 16])
+        fs.chmod(path, 0o644)
+    for path, _ in files:
+        fs.unlink(path)
+    fs.rmdir("t")
+    release(be, fs)
+    snap = be.snapshot()
+    stats = fs.stats
+    data_calls = len(be.calls) - base_calls + len(be.vec_calls)
+    fs.close()
+    return snap, stats, data_calls
+
+
+def test_fusion_beats_nofusion_on_extract_rm_window():
+    snap_f, st_f, ops_f = _window_workload(True)
+    snap_n, st_n, ops_n = _window_workload(False)
+    # identical final state: tree fully gone either way
+    for snap in (snap_f, snap_n):
+        assert all(not p.startswith("t") for p in snap["files"])
+        assert "t" not in snap["dirs"]
+    assert snap_f == snap_n
+    # the acceptance criterion: fewer backend ops, with fusion evidence
+    assert ops_f < ops_n
+    assert st_f.fused_writes > 0
+    assert st_f.elided_ops > 0
+    assert st_f.bytes_elided > 0
+    assert st_n.fused_writes == 0 and st_n.elided_ops == 0
+
+
+def test_engine_quiescent_after_heavy_fusion():
+    be, fs = gated_fs()
+    for i in range(20):
+        with fs.open(f"d{i}", "wb") as h:
+            for j in range(5):
+                h.write(bytes([j]))
+        fs.chmod(f"d{i}", 0o600)
+        fs.chmod(f"d{i}", 0o644)
+    for i in range(0, 20, 2):
+        fs.unlink(f"d{i}")
+    release(be, fs)
+    st = fs.stats
+    assert st.executed == st.submitted
+    assert fs.engine._inflight == 0
+    assert len(fs.engine._last_op) == 0
+    assert len(fs.engine._pending_children) == 0
+    assert len(be.snapshot()["files"]) == 10 + 1   # evens gone + sentinel
+    fs.close()
+
+
+def test_thread_per_op_executor_with_fusion():
+    be = InMemoryBackend()
+    fs = CannyFS(be, executor="thread_per_op", workers=1, echo_errors=False)
+    with fs.open("f", "wb") as h:
+        for i in range(30):
+            h.write(bytes([i]))
+    fs.unlink("f")
+    fs.write_file("g", b"done")
+    fs.close()
+    snap = be.snapshot()
+    assert "f" not in snap["files"] and snap["files"]["g"] == b"done"

@@ -1,0 +1,106 @@
+"""Fused-vs-unfused oracle property tests (hypothesis): for any op
+stream and any seed, fusion on/off leaves the InMemory backend in the
+identical final state with identical read results and ledger outcomes."""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (see requirements-dev.txt)")
+import hypothesis.strategies as stx
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import (CannyFS, FaultInjectingBackend, FaultPlan, FaultRule,
+                        InMemoryBackend)
+
+
+DIRS = ["a", "b"]
+FILES = [f"{d}/f{i}" for d in DIRS for i in range(3)]
+
+
+def fusion_op_strategy():
+    """Chain-heavy streams: chunked writes, metadata bursts, unlinks that
+    land inside the pending window, reads as observation points."""
+    chunks = stx.tuples(stx.just("chunks"), stx.sampled_from(FILES),
+                        stx.lists(stx.binary(min_size=1, max_size=12),
+                                  min_size=1, max_size=6))
+    meta = stx.tuples(stx.just("chmod"), stx.sampled_from(FILES),
+                      stx.sampled_from([0o600, 0o640, 0o644]))
+    trunc = stx.tuples(stx.just("truncate"), stx.sampled_from(FILES),
+                       stx.integers(min_value=0, max_value=30))
+    unlink = stx.tuples(stx.just("unlink"), stx.sampled_from(FILES),
+                        stx.none())
+    read = stx.tuples(stx.just("read"), stx.sampled_from(FILES), stx.none())
+    return stx.lists(stx.one_of(chunks, meta, trunc, unlink, read),
+                     min_size=1, max_size=30)
+
+
+def _drive(fs, ops):
+    reads = []
+    live = set()
+    for op, path, arg in ops:
+        if op == "chunks":
+            with fs.open(path, "wb") as h:
+                for c in arg:
+                    h.write(c)
+            live.add(path)
+        elif op in ("chmod", "truncate") and path in live:
+            (fs.chmod if op == "chmod" else fs.truncate)(path, arg)
+        elif op == "unlink" and path in live:
+            fs.unlink(path)
+            live.discard(path)
+        elif op == "read" and path in live:
+            reads.append(fs.read_file(path))
+    return reads
+
+
+@settings(max_examples=50, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=fusion_op_strategy(), workers=stx.sampled_from([1, 4]))
+def test_fused_and_unfused_execution_identical(ops, workers):
+    """The satellite property: for any op stream, fusion on/off leaves the
+    InMemory oracle in the identical final state with identical reads and
+    identical (empty) ledgers."""
+    results = []
+    for fusion in (True, False):
+        be = InMemoryBackend()
+        fs = CannyFS(be, workers=workers, fusion=fusion, echo_errors=False)
+        for d in DIRS:
+            fs.makedirs(d)
+        reads = _drive(fs, ops)
+        fs.drain()
+        sig = sorted((e.kind, e.paths,
+                      getattr(e.error, "errno", None))
+                     for e in fs.ledger.entries())
+        results.append((be.snapshot(), reads, sig))
+        fs.close()
+    assert results[0] == results[1]
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=fusion_op_strategy(), seed=stx.integers(0, 3))
+def test_fused_and_unfused_ledger_outcomes_match_under_faults(ops, seed):
+    """With a seeded fault plan the two modes may fail *different* backend
+    calls (fault matching is per fused call, by design) — but a clean run
+    (no injected faults in either mode) must produce identical state, and
+    every injected fault must surface in its run's ledger."""
+    outcome = []
+    for fusion in (True, False):
+        plan = FaultPlan([FaultRule(error="EIO", ops=("write",),
+                                    probability=0.25, max_failures=2)],
+                         seed=seed)
+        be = InMemoryBackend()
+        fs = CannyFS(FaultInjectingBackend(be, plan), workers=2,
+                     fusion=fusion, echo_errors=False)
+        for d in DIRS:
+            fs.makedirs(d)
+        _drive(fs, ops)
+        fs.drain()
+        n_write_errs = sum(e.kind == "write" for e in fs.ledger.entries())
+        outcome.append((plan.injected, n_write_errs, be.snapshot()))
+        fs.close()
+    for injected, write_errs, _ in outcome:
+        assert write_errs == injected   # every fault is ledgered, none lost
+    if outcome[0][0] == 0 and outcome[1][0] == 0:
+        assert outcome[0][2] == outcome[1][2]
+
+
