@@ -35,10 +35,13 @@ from repro.core import (CannyFS, EagerFlags, FaultInjectingBackend, FaultPlan,
 from .workloads import TreeSpec, synth_tree
 
 # ops the chaos plan may fail.  Reads/readdir/stat are excluded so the
-# workload's control flow stays valid; unlink/rmdir are included to hit the
-# removal phase (and occasionally rollback itself, which the verification
-# pass absorbs).
-CHAOS_OPS = ("mkdir", "create", "write", "unlink", "rmdir", "chmod", "utimens")
+# workload's control flow stays valid; unlink/rmdir/remove_tree are included
+# to hit the removal phase — with the namespace overlay the rmtree usually
+# collapses into fused remove_tree calls, so that is the op a removal-phase
+# fault actually lands on — (and occasionally rollback itself, which the
+# verification pass absorbs).
+CHAOS_OPS = ("mkdir", "create", "write", "unlink", "rmdir", "remove_tree",
+             "chmod", "utimens")
 
 
 def build_stack(*, fault_rate: float, seed: int, quota_bytes: int | None,

@@ -1,0 +1,64 @@
+"""CI regression guard for the namespace overlay + bulk-remove pass.
+
+Runs the ``rmtree_readdir`` workload (readdir-driven removal of a
+pre-existing tree — the engine's pre-overlay worst case) with the overlay
+enabled and FAILS (exit 1) if the optimization regressed:
+
+* ``bulk_removes == 0`` — the cross-path pass never fired, or
+* ``backend_ops >= entries`` — the removal degenerated back to one
+  backend op per entry.
+
+Scale with REPRO_BENCH_SCALE as usual (CI runs 0.1).
+
+    PYTHONPATH=src REPRO_BENCH_SCALE=0.1 python -m benchmarks.overlay_guard
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import CannyFS, InMemoryBackend, LatencyBackend, LatencyModel, VirtualClock
+
+from .workloads import TreeSpec, populate_tree, rmtree_readdir, synth_tree
+
+
+def main() -> int:
+    spec = TreeSpec(n_files=200, n_dirs=16).scaled()
+    dirs, files = synth_tree(spec)
+    inner = InMemoryBackend()
+    entries = populate_tree(inner, dirs, files)
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0,
+                            seed=3),
+        clock=VirtualClock())   # deterministic, no real sleeps in CI
+    fs = CannyFS(remote, max_inflight=4000, workers=16)
+    rmtree_readdir(fs, "src")
+    fs.close()
+    st = fs.stats
+    leftover = [p for pool in ("files", "dirs")
+                for p in inner.snapshot()[pool] if str(p).startswith("src")]
+    print(f"rmtree_readdir: entries={entries} backend_ops={remote.op_count} "
+          f"bulk_removes={st.bulk_removes} "
+          f"overlay_readdirs={st.overlay_readdirs} "
+          f"elided_ops={st.elided_ops} ledger={len(fs.ledger)}")
+    ok = True
+    if st.bulk_removes == 0:
+        print("FAIL: bulk_removes == 0 — the cross-path bulk-remove pass "
+              "did not fire on the overlay-enabled run", file=sys.stderr)
+        ok = False
+    if remote.op_count >= entries:
+        print(f"FAIL: {remote.op_count} backend ops for {entries} entries — "
+              "readdir-driven rmtree left the optimization window",
+              file=sys.stderr)
+        ok = False
+    if leftover:
+        print(f"FAIL: {len(leftover)} entries survived the removal",
+              file=sys.stderr)
+        ok = False
+    if len(fs.ledger):
+        print("FAIL: deferred errors during a clean removal", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -162,16 +162,25 @@ def rw_switch() -> list:
 
 
 def fusion_table() -> list:
-    """Op-fusion ablation: cannyfs vs cannyfs-nofusion vs direct.
+    """Op-fusion ablation: cannyfs vs cannyfs-nooverlay vs cannyfs-nofusion
+    vs direct.
 
-    Two workloads:
+    Three workloads:
     * ``extract`` — chunked (unzip-style) extraction; the coalescer turns
       per-chunk writes into one write_vec per file (fused_writes > 0,
       fewer backend ops, less virtual service time);
     * ``extract_rm`` — extraction and manifest-driven removal in the same
       unobserved window; create+write chains are elided outright
       (elided_ops/bytes_elided > 0) — the transactional rewrite at full
-      strength.
+      strength;
+    * ``rmtree_readdir`` — readdir-driven removal of a *pre-existing*
+      tree (the paper's actual removal benchmark).  Pre-overlay this was
+      the engine's worst case: every readdir sealed the chains beneath
+      it.  With the overlay on, listings are fused readdir_plus calls,
+      stats hit the warmed cache, and the bulk-remove pass collapses the
+      unlinks+rmdirs into remove_tree calls (bulk_removes > 0, far fewer
+      backend ops than entries); the ``cannyfs-nooverlay`` column is the
+      ablation showing exactly what the overlay buys.
 
     Latency is real (slept, small — scale with REPRO_BENCH_SCALE) so the
     remote queue genuinely backs up: that pending backlog is exactly what
@@ -182,25 +191,36 @@ def fusion_table() -> list:
     ``backend_ops`` the number of remote calls, ``wall_s`` real time."""
     import time
     from repro.core import LatencyBackend, LatencyModel
+
+    from .workloads import populate_tree, rmtree_readdir
     spec = TreeSpec(n_files=200, n_dirs=16, mean_kb=24.0).scaled()
     dirs, files = synth_tree(spec)
-    modes = (("cannyfs", EagerFlags(), True, 8),
-             ("cannyfs-nofusion", EagerFlags(), False, 8),
-             ("direct", EagerFlags.all_off(), False, 2))
+    # (name, flags, fusion, overlay, workers)
+    modes = (("cannyfs", EagerFlags(), True, None, 8),
+             ("cannyfs-nooverlay", EagerFlags(), True, False, 8),
+             ("cannyfs-nofusion", EagerFlags(), False, None, 8),
+             ("direct", EagerFlags.all_off(), False, None, 2))
     workloads = {
-        "extract": lambda fs: extract_tree_chunked(fs, dirs, files),
-        "extract_rm": lambda fs: (extract_tree_chunked(fs, dirs, files),
-                                  remove_tree_manifest(fs, dirs, files)),
+        "extract": (None,
+                    lambda fs: extract_tree_chunked(fs, dirs, files)),
+        "extract_rm": (None,
+                       lambda fs: (extract_tree_chunked(fs, dirs, files),
+                                   remove_tree_manifest(fs, dirs, files))),
+        "rmtree_readdir": (lambda be: populate_tree(be, dirs, files),
+                           lambda fs: rmtree_readdir(fs, "src")),
     }
     rows = []
-    for wname, body in workloads.items():
-        for mode, flags, fusion, workers in modes:
+    for wname, (prepare, body) in workloads.items():
+        for mode, flags, fusion, overlay, workers in modes:
+            inner = InMemoryBackend()
+            if prepare is not None:
+                prepare(inner)   # pre-existing state, bypassing latency
             remote = LatencyBackend(
-                InMemoryBackend(),
+                inner,
                 LatencyModel(meta_ms=3.0, data_ms=3.0, jitter_sigma=0.0,
                              server_slots=8, seed=9))
             t0 = time.monotonic()
-            fs = CannyFS(remote, flags=flags, fusion=fusion,
+            fs = CannyFS(remote, flags=flags, fusion=fusion, overlay=overlay,
                          max_inflight=4000, workers=workers)
             body(fs)
             fs.close()

@@ -116,11 +116,42 @@ def remove_tree_manifest(fs: CannyFS, dirs, files) -> None:
         fs.rmdir(d)
 
 
+def populate_tree(backend, dirs, files, payload_bytes: int = 64) -> int:
+    """Materialize the tree directly on a backend (no engine, no latency):
+    the pre-existing state a readdir-driven removal must discover.
+    Returns the number of entries (dirs + files) created."""
+    n = 0
+    for d in dirs:
+        try:
+            backend.mkdir(d)
+            n += 1
+        except FileExistsError:
+            pass
+    for path, data in files:
+        backend.create(path)
+        backend.write_at(path, 0, data[:payload_bytes])
+        n += 1
+    return n
+
+
+def rmtree_readdir(fs: CannyFS, root: str = "src") -> None:
+    """rm -rf driven by readdir (the paper's actual removal benchmark and,
+    pre-overlay, the engine's worst case: every readdir sealed the chains
+    beneath it).  With the namespace overlay the listings come from
+    cached/pending state, per-entry stats hit the warmed cache, and the
+    bulk-remove pass collapses the unlinks+rmdirs into one remove_tree
+    backend call per fused subtree."""
+    fs.rmtree(root)
+
+
 def fusion_stats(fs: CannyFS) -> dict:
     """The optimizer's counters for one run, ready for a derived column."""
     st = fs.stats
     return {"fused_writes": st.fused_writes, "folded_meta": st.folded_meta,
-            "elided_ops": st.elided_ops, "bytes_elided": st.bytes_elided}
+            "elided_ops": st.elided_ops, "bytes_elided": st.bytes_elided,
+            "overlay_readdirs": st.overlay_readdirs,
+            "overlay_seals_avoided": st.overlay_seals_avoided,
+            "bulk_removes": st.bulk_removes}
 
 
 def run_extraction(mode: str, dirs, files, *, load: float = 1.0,

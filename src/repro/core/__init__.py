@@ -44,10 +44,15 @@ Engine layers (see ``core/engine.py`` for the diagram)
 The engine itself is scheduler (``core/scheduler.py``: path-hash-sharded
 per-path FIFO + DAG) / optimizer (``core/fusion.py``: the transactional
 op-fusion pass — coalesce writes into ``write_vec``, fold metadata
-last-wins, elide chains unlinked in-window; control via
-``CannyFS(fusion=FusionPolicy(...))`` or ``fusion=False``) / executor
+last-wins, elide chains unlinked in-window, collapse cross-path removals
+into one ``remove_tree``; control via ``CannyFS(fusion=FusionPolicy(...))``
+or ``fusion=False``) / namespace overlay (``core/namespace.py``: the
+write-back directory-tree delta that answers ``readdir``/``stat``/
+``exists`` from pending state without sealing chains; control via
+``CannyFS(overlay=OverlayPolicy(...))`` or ``overlay=False``) / executor
 (``core/executor.py``: pool | thread_per_op).  Fault rules fire per
-*fused* backend call, and torn writes surface as ``ShortWriteError``.
+*fused* backend call (one ``write_vec`` or ``remove_tree`` of N engine
+ops is a single match), and torn writes surface as ``ShortWriteError``.
 """
 from .backend import (Clock, InMemoryBackend, LatencyBackend, LatencyModel,
                       LocalBackend, RealClock, StatResult, StorageBackend,
@@ -61,6 +66,7 @@ from .faults import (FaultInjectingBackend, FaultPlan, FaultRule,
 from .flags import EagerFlags, N_FLAGS
 from .fs import CannyFS, CannyFile
 from .fusion import FusionPolicy
+from .namespace import NamespaceOverlay, OverlayPolicy
 from .transaction import Transaction, run_transaction
 
 __all__ = [
@@ -69,7 +75,8 @@ __all__ = [
     "FaultInjectingBackend", "FaultPlan", "FaultRule", "FusionPolicy",
     "InMemoryBackend",
     "LatencyBackend", "LatencyModel", "LedgerEntry", "LocalBackend", "N_FLAGS",
-    "OpCancelledError", "QuotaBackend", "RealClock", "RollbackLeakError",
+    "NamespaceOverlay", "OpCancelledError", "OverlayPolicy", "QuotaBackend",
+    "RealClock", "RollbackLeakError",
     "ShortWriteError", "StatResult",
     "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
     "is_under", "make_fault", "norm_path", "parent_of", "run_transaction",

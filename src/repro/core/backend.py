@@ -18,7 +18,7 @@ import random
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Iterable
+from typing import Iterable, Optional
 
 
 def norm_path(path: str) -> str:
@@ -82,6 +82,43 @@ class StorageBackend:
                 break
         return total
 
+    def remove_tree(self, path: str) -> int:
+        """Vectored subtree removal: delete everything at/under ``path``
+        and return the number of entries removed.  Absence-tolerant by
+        contract (``rm -rf`` semantics): a missing root or entries that
+        vanished (e.g. their creating ops were elided) are not errors —
+        the cross-path bulk-remove pass relies on this.  The default is a
+        walk over the primitive ops so every backend (and every test
+        double overriding ``unlink``/``rmdir``) composes; decorator
+        backends override it to pay their cost once per *fused* call."""
+        path = norm_path(path)
+        try:
+            st = self.stat(path)
+        except OSError:
+            return 0
+        if not st.exists:
+            return 0
+        removed = 0
+        if st.is_dir and not st.is_symlink:
+            try:
+                names = self.readdir(path)
+            except FileNotFoundError:
+                return 0
+            for name in names:
+                removed += self.remove_tree(f"{path}/{name}" if path else name)
+            try:
+                self.rmdir(path)
+                removed += 1
+            except FileNotFoundError:
+                pass
+        else:
+            try:
+                self.unlink(path)
+                removed += 1
+            except FileNotFoundError:
+                pass
+        return removed
+
     def read_at(self, path: str, offset: int, size: int) -> bytes: raise NotImplementedError
     def truncate(self, path: str, size: int) -> None: raise NotImplementedError
     def fallocate(self, path: str, size: int) -> None: raise NotImplementedError
@@ -94,6 +131,23 @@ class StorageBackend:
     def removexattr(self, path: str, key: str) -> None: raise NotImplementedError
     def stat(self, path: str) -> StatResult: raise NotImplementedError
     def readdir(self, path: str) -> list[str]: raise NotImplementedError
+
+    def readdir_plus(self, path: str) -> list[tuple[str, Optional[StatResult]]]:
+        """Listing with attributes — the NFS READDIRPLUS analogue the
+        overlay uses to warm membership *and* the stat cache in one
+        backend call.  Per-entry stat failures are advisory (the entry is
+        returned with ``None`` attrs); a failing ``readdir`` still
+        raises.  Decorator backends override this to pay one roundtrip
+        for the whole listing."""
+        path = norm_path(path)
+        out: list[tuple[str, Optional[StatResult]]] = []
+        for name in self.readdir(path):
+            child = f"{path}/{name}" if path else name
+            try:
+                out.append((name, self.stat(child)))
+            except OSError:
+                out.append((name, None))
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +273,63 @@ class LocalBackend(StorageBackend):
 
     def readdir(self, path):
         return sorted(os.listdir(self._abs(path)))
+
+    def readdir_plus(self, path):
+        # one scandir pass: names + attrs without a stat syscall per entry
+        import stat as stat_mod
+        out = []
+        with os.scandir(self._abs(path)) as it:
+            for de in it:
+                try:
+                    st = de.stat(follow_symlinks=False)
+                    out.append((de.name, StatResult(
+                        exists=True,
+                        is_dir=stat_mod.S_ISDIR(st.st_mode),
+                        is_symlink=stat_mod.S_ISLNK(st.st_mode),
+                        size=st.st_size,
+                        mtime=st.st_mtime,
+                        mode=stat_mod.S_IMODE(st.st_mode),
+                    )))
+                except OSError:
+                    out.append((de.name, None))
+        return sorted(out)
+
+    def remove_tree(self, path):
+        # one bottom-up walk instead of one syscall chain per engine op —
+        # the local analogue of the single-roundtrip win on remote media
+        root = self._abs(path)
+        if os.path.islink(root) or os.path.isfile(root):
+            try:
+                os.unlink(root)
+                return 1
+            except FileNotFoundError:
+                return 0
+        if not os.path.isdir(root):
+            return 0
+        removed = 0
+        for cur, dirs, files in os.walk(root, topdown=False):
+            for name in files + [d for d in dirs
+                                 if os.path.islink(os.path.join(cur, d))]:
+                try:
+                    os.unlink(os.path.join(cur, name))
+                    removed += 1
+                except FileNotFoundError:
+                    pass
+            for name in dirs:
+                p = os.path.join(cur, name)
+                if os.path.islink(p):
+                    continue
+                try:
+                    os.rmdir(p)
+                    removed += 1
+                except FileNotFoundError:
+                    pass
+        try:
+            os.rmdir(root)
+            removed += 1
+        except FileNotFoundError:
+            pass
+        return removed
 
 
 # ---------------------------------------------------------------------------
@@ -443,7 +554,7 @@ class InMemoryBackend(StorageBackend):
 METADATA_OPS = {
     "mkdir", "rmdir", "create", "unlink", "rename", "symlink", "link",
     "readlink", "truncate", "fallocate", "chmod", "chown", "utimens",
-    "setxattr", "removexattr", "stat", "readdir", "fsync",
+    "setxattr", "removexattr", "stat", "readdir", "fsync", "remove_tree",
 }
 
 
@@ -571,3 +682,13 @@ class LatencyBackend(StorageBackend):
     def removexattr(self, p, k): self._delay("removexattr"); self.inner.removexattr(p, k)
     def stat(self, p): self._delay("stat"); return self.inner.stat(p)
     def readdir(self, p): self._delay("readdir"); return self.inner.readdir(p)
+    def readdir_plus(self, p):
+        # READDIRPLUS: one roundtrip returns names *and* attributes —
+        # the overlay's whole-directory warm-up costs one op, not 1+N
+        self._delay("readdir")
+        return self.inner.readdir_plus(p)
+    def remove_tree(self, p):
+        # one roundtrip for the whole fused subtree removal — this is the
+        # cross-path bulk-remove win (cf. write_vec for coalesced writes)
+        self._delay("remove_tree")
+        return self.inner.remove_tree(p)

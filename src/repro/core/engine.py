@@ -1,8 +1,9 @@
-"""The CannyFS eager-I/O engine: scheduler / optimizer / executor.
+"""The CannyFS eager-I/O engine: scheduler / optimizer / namespace
+overlay / executor.
 
 Architecture (one op's life, left to right)::
 
-            submit / try_fuse / prepare_unlink
+        submit / try_fuse / prepare_unlink / prepare_rmtree
                         |
         +---------------v-----------------------------------------+
         |  OpScheduler (core/scheduler.py)                        |
@@ -12,34 +13,49 @@ Architecture (one op's life, left to right)::
                         | pending tip / chain, under shard+op locks
         +---------------v-----------------------------------------+
         |  Fuser (core/fusion.py)                                 |
-        |  peephole pass over each path's pending chain:          |
+        |  peephole pass over the pending stream:                 |
         |    coalesce write_at -> one vectored write_vec          |
         |    fold chmod/utimens/truncate to last-wins             |
         |    elide create+write chains unlinked in-window         |
-        +---------------+-----------------------------------------+
-                        | ready ops
-        +---------------v-----------------------------------------+
-        |  PoolExecutor | ThreadPerOpExecutor (core/executor.py)  |
-        |  runs op.fn against the backend; completion releases    |
-        |  dependents via the scheduler                           |
-        +---------------------------------------------------------+
+        |    collapse cross-path unlink/rmdir -> one remove_tree  |
+        +------+--------+-----------------------------------------+
+               |        | ready ops
+        +------v------+ |   +-------------------------------------+
+        | Namespace   | +--->  PoolExecutor | ThreadPerOp         |
+        | Overlay     |     |  (core/executor.py)                 |
+        | (namespace  |     |  runs op.fn against the backend;    |
+        |  .py)       |     |  completion releases dependents     |
+        +-------------+     +-------------------------------------+
+          mirrors every admitted op as a directory-tree delta;
+          readdir/stat/exists answered here never seal a chain
 
 Semantics (paper §2–§3):
 
 * Every operation is routed through per-path FIFO order; ops on disjoint
   paths run concurrently.  *Eager* ops are acknowledged immediately;
   non-eager ops and all data reads block the caller (the read barrier).
-* Reads, barriers and transaction commit are the only observation points.
+* Reads, barriers and transaction commit are the observation points.
   Between them the pending stream is *rewritable*: the optimizer may
   coalesce, fold and delete ops as long as commit-visible state is
-  unchanged.  Observation points *seal* the ops they wait on, which
-  freezes them against further rewriting — so fused results are exactly
-  what a synchronous execution would have produced at every read.
+  unchanged.  Observation classification is per-*answer*: a namespace
+  read (readdir/stat/exists) whose answer is fully determined by the
+  transaction's own writes is served by the **namespace overlay**
+  (``core/namespace.py``) and seals nothing; only an overlay miss takes
+  the sync path, which *seals* the ops it waits on — freezing them
+  against further rewriting — so results are exactly what a synchronous
+  execution would have produced at every read.  The overlay is populated
+  at submission, invalidated per-path when a background op fails,
+  cleared by transaction rollback and dropped at commit.
 * Fusion is controlled by ``FusionPolicy`` (``fusion=`` argument: a
-  policy, True/None for defaults, False to disable).  ``EngineStats``
-  reports ``fused_writes`` (writes absorbed into a pending vectored op),
-  ``folded_meta`` (last-wins metadata folds), ``elided_ops`` and
-  ``bytes_elided`` (ops/bytes deleted by unlink elision).
+  policy, True/None for defaults, False to disable); the overlay by
+  ``OverlayPolicy`` (``overlay=`` argument, default derived from the
+  legacy mock_stat/readdir_prefetch/negative_stat_cache flags).
+  ``EngineStats`` reports ``fused_writes`` (writes absorbed into a
+  pending vectored op), ``folded_meta`` (last-wins metadata folds),
+  ``elided_ops``/``bytes_elided`` (ops/bytes deleted by elision),
+  ``overlay_readdirs``/``overlay_seals_avoided`` (namespace reads that
+  never reached the backend / that left pending chains rewritable) and
+  ``bulk_removes`` (cross-path removal collapses).
 * Failures of background ops land in the ErrorLedger; optional
   abort_on_error poisons the engine.  ``max_inflight`` bounds queued ops
   (fused absorptions don't consume new slots — coalescing is also
@@ -57,6 +73,7 @@ from .errors import ErrorLedger, OpCancelledError
 from .executor import make_executor
 from .flags import EagerFlags
 from .fusion import Fuser, FusionPolicy, MetaPayload, WritePayload
+from .namespace import NamespaceOverlay, OverlayPolicy
 from .scheduler import NEEDS_CHILDREN, STRUCTURAL, OpScheduler, _Op
 
 
@@ -76,8 +93,12 @@ class EngineStats:
     # -- fusion / optimizer counters --------------------------------------
     fused_writes: int = 0        # write_at calls absorbed into a pending op
     folded_meta: int = 0         # chmod/utimens/truncate last-wins folds
-    elided_ops: int = 0          # pending ops deleted by unlink elision
+    elided_ops: int = 0          # pending ops deleted by unlink/bulk elision
     bytes_elided: int = 0        # write payload bytes that never hit storage
+    # -- namespace overlay counters ---------------------------------------
+    overlay_readdirs: int = 0    # readdirs answered from the overlay
+    overlay_seals_avoided: int = 0  # of those, with pending ops underneath
+    bulk_removes: int = 0        # cross-path removals fused to remove_tree
     # -- fault / trace counters (chaos + error-path observability) --------
     deferred_errors: int = 0     # background failures recorded in the ledger
     injected_faults: int = 0     # of those, carried an `.injected` tag
@@ -144,6 +165,10 @@ class _StatCache:
                         True, is_dir=prev.is_dir, is_symlink=prev.is_symlink,
                         size=prev.size, mtime=prev.mtime,
                         mode=kw.get("mode", prev.mode), mocked=True)
+            elif kind == "remove_tree":
+                # one fused removal covers every listed path
+                for p in paths:
+                    self._entries[p] = StatResult(False, mocked=True)
 
     def invalidate(self, path: str) -> None:
         with self._lock:
@@ -162,7 +187,8 @@ class EagerIOEngine:
                  executor: str = "pool",          # "pool" | "thread_per_op"
                  abort_on_error: bool = False,
                  ledger: ErrorLedger | None = None,
-                 fusion: FusionPolicy | bool | None = None):
+                 fusion: FusionPolicy | bool | None = None,
+                 overlay: OverlayPolicy | bool | None = None):
         self.backend = backend
         self.flags = flags or EagerFlags()
         self.max_inflight = int(max_inflight)
@@ -178,6 +204,18 @@ class EagerIOEngine:
             self.fusion = FusionPolicy.off()
         else:
             self.fusion = fusion
+        # the write-back namespace overlay; None when disabled (then all
+        # namespace reads hit the backend, as before PR 3)
+        if overlay is None:
+            ov_policy = OverlayPolicy.from_flags(self.flags)
+        elif overlay is True:
+            ov_policy = OverlayPolicy()
+        elif overlay is False:
+            ov_policy = OverlayPolicy.off()
+        else:
+            ov_policy = overlay
+        self.overlay: NamespaceOverlay | None = (
+            NamespaceOverlay(ov_policy) if ov_policy.enabled else None)
         self._sched = OpScheduler(self.stats, max_inflight=self.max_inflight)
         self._fuser = Fuser(self.fusion, self.stats)
         self._closed = False
@@ -198,12 +236,17 @@ class EagerIOEngine:
         sync → waits and returns the op's result (re-raising its error)."""
         t0 = time.monotonic()
         paths = tuple(norm_path(p) for p in paths)
-        # write-through cache updates ride on_admit — after the budget
-        # admits the op but before the DAG publishes it, so a fast-failing
-        # op's error-path invalidation (at completion, strictly later)
-        # always wins over the ACK-time mocked entry
-        on_admit = (None if cache_kw is None else
-                    lambda: self.stat_cache.on_op(kind, paths, **cache_kw))
+        # write-through cache + namespace-overlay updates ride on_admit —
+        # after the budget admits the op but before the DAG publishes it,
+        # so a fast-failing op's error-path invalidation (at completion,
+        # strictly later) always wins over the ACK-time mocked entry
+        if cache_kw is None:
+            on_admit = None
+        else:
+            def on_admit():
+                self.stat_cache.on_op(kind, paths, **cache_kw)
+                if self.overlay is not None:
+                    self.overlay.on_op(kind, paths, **cache_kw)
         op = self._sched.submit(kind, paths, fn, eager=eager, region=region,
                                 payload=payload, on_admit=on_admit)
         if eager:
@@ -257,6 +300,17 @@ class EagerIOEngine:
             return False   # the unlink submit will fail fast instead
         return self._fuser.elide_for_unlink(self._sched, norm_path(path),
                                             region)
+
+    def prepare_rmtree(self, path: str, *, region: object = None):
+        """Cross-path bulk-remove peephole: collapse the pending removals
+        under ``path`` into one vectored ``remove_tree`` call.  Returns
+        the covered paths (the fused op's co-paths: dependency edges and
+        error-invalidation scope) when the overlay proves the subtree, or
+        None when the caller must submit a plain rmdir."""
+        if self._sched.poisoned or self.overlay is None:
+            return None
+        return self._fuser.prepare_bulk_remove(self._sched, self.overlay,
+                                               norm_path(path), region)
 
     # ------------------------------------------------------------------
     # barriers
@@ -354,11 +408,14 @@ class EagerIOEngine:
                         self._sched.poison()
         op.finished_at = time.monotonic()
         if op.error is not None:
-            # the write-through cache recorded this op's effect at ACK time;
-            # it never materialized (failed or cancelled), so the mocked
-            # entry is wrong — drop it and let the backend answer again
+            # the write-through cache and the namespace overlay recorded
+            # this op's effect at ACK time; it never materialized (failed
+            # or cancelled), so every claim is wrong — drop them and let
+            # the backend answer again
             for p in op.paths:
                 self.stat_cache.invalidate(p)
+                if self.overlay is not None:
+                    self.overlay.invalidate(p)
         with self._sched._ctl:   # exact counters (see scheduler lock note)
             self.stats.exec_latency_s += op.finished_at - op.started_at
             self.stats.executed += 1
@@ -374,4 +431,5 @@ class EagerIOEngine:
 
 
 __all__ = ["EagerIOEngine", "EngineStats", "FusionPolicy", "MetaPayload",
-           "WritePayload", "NEEDS_CHILDREN", "STRUCTURAL"]
+           "NamespaceOverlay", "OverlayPolicy", "WritePayload",
+           "NEEDS_CHILDREN", "STRUCTURAL"]

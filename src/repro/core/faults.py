@@ -21,10 +21,12 @@ if the stack can *produce* failures on demand.  This module provides:
 
       FaultInjectingBackend(QuotaBackend(LatencyBackend(InMemoryBackend())))
 
-* ``QuotaBackend`` — enforces a byte budget so disk-quota exhaustion (a
-  headline error class in the paper) emerges organically mid-write instead
-  of being scripted; rollback's unlinks release the charged bytes, which is
-  exactly why the paper's roll-back-and-resubmit loop converges.
+* ``QuotaBackend`` — enforces a byte budget (and, with ``max_inodes``, an
+  inode budget) so disk-quota exhaustion (a headline error class in the
+  paper) emerges organically mid-write/mid-create instead of being
+  scripted; rollback's unlinks/rmdirs — and a fused ``remove_tree`` —
+  release the charges, which is exactly why the paper's
+  roll-back-and-resubmit loop converges.
 """
 from __future__ import annotations
 
@@ -308,27 +310,51 @@ class FaultInjectingBackend(StorageBackend):
     def stat(self, p): self._gate("stat", p); return self.inner.stat(p)
     def readdir(self, p): self._gate("readdir", p); return self.inner.readdir(p)
 
+    def readdir_plus(self, p):
+        # one fused listing call = one matching "readdir" call for the
+        # plan; per-entry stat rules do not fire (the warm-up is advisory
+        # and must not condemn a region — cf. the prefetch-fault test)
+        self._gate("readdir", p)
+        return self.inner.readdir_plus(p)
+
+    def remove_tree(self, p):
+        # per-fused-op semantics, mirroring write_vec: N collapsed
+        # unlinks/rmdirs are ONE matching "remove_tree" call
+        self._gate("remove_tree", p)
+        return self.inner.remove_tree(p)
+
 
 # ---------------------------------------------------------------------------
 
 
 class QuotaBackend(StorageBackend):
-    """Byte-budget decorator: EDQUOT once cumulative file bytes exceed
-    ``budget_bytes``.
+    """Byte- and inode-budget decorator: EDQUOT once cumulative file bytes
+    exceed ``budget_bytes``; ENOSPC once ``max_inodes`` namespace entries
+    (create/mkdir/symlink/link) are in flight.
 
     Accounting is by charged byte ranges per path (grow on write/truncate/
     fallocate past the previous high-water mark, release on unlink or
-    shrinking truncate, move on rename).  Pre-existing files written
+    shrinking truncate, move on rename) plus a charged-inode set (charge
+    on create/mkdir/symlink/link, release on unlink/rmdir and on a bulk
+    ``remove_tree``, move on rename).  Pre-existing entries written
     directly to the inner backend are not charged — the budget covers what
-    flows *through* this decorator, which is the transaction's footprint."""
+    flows *through* this decorator, which is the transaction's footprint.
+    Charge and release are exception-safe and symmetric: a delegated op
+    that raises uncharges, and rollback's removals release, which is why
+    the paper's roll-back-and-resubmit loop converges."""
 
-    def __init__(self, inner: StorageBackend, budget_bytes: int):
+    def __init__(self, inner: StorageBackend, budget_bytes: int, *,
+                 max_inodes: int | None = None):
         self.inner = inner
         self.budget_bytes = int(budget_bytes)
+        self.max_inodes = None if max_inodes is None else int(max_inodes)
         self._qlock = threading.Lock()
         self._charged: dict[str, int] = {}   # path -> charged size
+        self._inodes: set[str] = set()       # paths holding an inode charge
         self.used = 0
+        self.inodes_used = 0
         self.edquot_count = 0
+        self.enospc_count = 0
 
     def __getattr__(self, name):
         return getattr(self.inner, name)
@@ -337,6 +363,51 @@ class QuotaBackend(StorageBackend):
     def remaining(self) -> int:
         with self._qlock:
             return self.budget_bytes - self.used
+
+    @property
+    def inodes_remaining(self) -> int | None:
+        if self.max_inodes is None:
+            return None
+        with self._qlock:
+            return self.max_inodes - self.inodes_used
+
+    # -- inode accounting ----------------------------------------------
+
+    def _charge_inode(self, path: str) -> bool:
+        """Charge one inode for ``path``; raise ENOSPC when exhausted.
+        Returns True iff a new charge was taken (so a failed delegate can
+        uncharge exactly what it charged — recharging an owned path, e.g.
+        create-with-O_TRUNC over a charged file, is free)."""
+        if self.max_inodes is None:
+            return False
+        path = norm_path(path)
+        with self._qlock:
+            if path in self._inodes:
+                return False
+            if self.inodes_used + 1 > self.max_inodes:
+                self.enospc_count += 1
+                # organic budget exhaustion, not scripted chaos: no
+                # .injected tag (mirrors the EDQUOT path)
+                raise OSError(_errno.ENOSPC, "inode quota exceeded", path)
+            self._inodes.add(path)
+            self.inodes_used += 1
+            return True
+
+    def _uncharge_inode(self, path: str, charged: bool) -> None:
+        if not charged:
+            return
+        path = norm_path(path)
+        with self._qlock:
+            if path in self._inodes:
+                self._inodes.discard(path)
+                self.inodes_used -= 1
+
+    def _release_inode(self, path: str) -> None:
+        path = norm_path(path)
+        with self._qlock:
+            if path in self._inodes:
+                self._inodes.discard(path)
+                self.inodes_used -= 1
 
     def _grow(self, path: str, new_size: int) -> int:
         """Charge growth up to new_size; raise EDQUOT if over budget.
@@ -381,17 +452,32 @@ class QuotaBackend(StorageBackend):
                 self._charged[path] = new_size
             self.used -= prev - new_size
 
-    # namespace (dirs are free; files move/release their charge)
-    def mkdir(self, path): self.inner.mkdir(path)
-    def rmdir(self, path): self.inner.rmdir(path)
+    # namespace (dir bytes are free; every new entry costs an inode)
+    def mkdir(self, path):
+        inode = self._charge_inode(path)
+        try:
+            self.inner.mkdir(path)
+        except BaseException:
+            self._uncharge_inode(path, inode)
+            raise
+
+    def rmdir(self, path):
+        self.inner.rmdir(path)
+        self._release_inode(path)
 
     def create(self, path):
-        self.inner.create(path)
+        inode = self._charge_inode(path)
+        try:
+            self.inner.create(path)
+        except BaseException:
+            self._uncharge_inode(path, inode)
+            raise
         self._release(path)   # create truncates (O_TRUNC): old bytes are gone
 
     def unlink(self, path):
         self.inner.unlink(path)
         self._release(path)
+        self._release_inode(path)
 
     def rename(self, src, dst):
         self.inner.rename(src, dst)
@@ -406,8 +492,20 @@ class QuotaBackend(StorageBackend):
                 self.used -= prev
             for p in [p for p in self._charged if is_under(p, src)]:
                 self._charged[dst + p[len(src):]] = self._charged.pop(p)
+            if dst in self._inodes:
+                self._inodes.discard(dst)
+                self.inodes_used -= 1
+            for p in [p for p in self._inodes if is_under(p, src)]:
+                self._inodes.discard(p)
+                self._inodes.add(dst + p[len(src):])
 
-    def symlink(self, t, p): self.inner.symlink(t, p)
+    def symlink(self, t, p):
+        inode = self._charge_inode(p)
+        try:
+            self.inner.symlink(t, p)
+        except BaseException:
+            self._uncharge_inode(p, inode)
+            raise
 
     def link(self, src, dst):
         # charge the new name as if it were a copy: per-path accounting
@@ -415,14 +513,37 @@ class QuotaBackend(StorageBackend):
         # unlink releases the charge) lets linked data escape the budget
         with self._qlock:
             src_charge = self._charged.get(norm_path(src), 0)
+        inode = self._charge_inode(dst)
         growth = self._grow(dst, src_charge)
         try:
             self.inner.link(src, dst)
         except BaseException:
             self._uncharge(dst, growth)
+            self._uncharge_inode(dst, inode)
             raise
 
     def readlink(self, p): return self.inner.readlink(p)
+
+    def readdir_plus(self, p):
+        # must delegate whole: the base loop would re-enter this
+        # decorator's per-entry ops instead of the inner fused call
+        return self.inner.readdir_plus(p)
+
+    def remove_tree(self, path):
+        """Bulk removal releases every byte and inode charge under the
+        root in one sweep — the uncharge mirror of the fused call.  On a
+        partial failure (inner raised mid-walk) nothing is released: the
+        surviving paths keep their charges (conservative over-count until
+        the retried removal converges)."""
+        n = self.inner.remove_tree(path)
+        root = norm_path(path)
+        with self._qlock:
+            for p in [p for p in self._charged if is_under(p, root)]:
+                self.used -= self._charged.pop(p)
+            for p in [p for p in self._inodes if is_under(p, root)]:
+                self._inodes.discard(p)
+                self.inodes_used -= 1
+        return n
 
     # data
     def write_at(self, path, offset, data):

@@ -20,6 +20,7 @@ class EagerFlags:
     # -- structural / namespace ops ------------------------------------
     mkdir: bool = True
     rmdir: bool = True
+    remove_tree: bool = True     # fused bulk removal (rides rmdir's mode)
     create: bool = True          # file creation (open with O_CREAT)
     unlink: bool = True
     rename: bool = True
@@ -38,8 +39,11 @@ class EagerFlags:
     setxattr: bool = True
     removexattr: bool = True
     # -- metadata reads (mocking / caching, not deferral) ------------------
+    # These three now parameterize the namespace overlay (core/namespace.py)
+    # via OverlayPolicy.from_flags; an explicit CannyFS(overlay=...) policy
+    # supersedes them.
     mock_stat: bool = True       # answer stat from the write-through cache
-    readdir_prefetch: bool = True  # preventively stat all entries on readdir
+    readdir_prefetch: bool = True  # answer/warm readdir via the overlay
     negative_stat_cache: bool = True  # cache ENOENT results from unlink/rmdir
 
     def replace(self, **kw) -> "EagerFlags":

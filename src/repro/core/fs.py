@@ -18,6 +18,7 @@ from .engine import EagerIOEngine
 from .errors import ErrorLedger, ShortWriteError
 from .flags import EagerFlags
 from .fusion import FusionPolicy, MetaPayload, WritePayload
+from .namespace import OverlayPolicy
 
 
 class CannyFile:
@@ -98,12 +99,14 @@ class CannyFS:
                  executor: str = "pool",
                  abort_on_error: bool = False,
                  echo_errors: bool = True,
-                 fusion: FusionPolicy | bool | None = None):
+                 fusion: FusionPolicy | bool | None = None,
+                 overlay: OverlayPolicy | bool | None = None):
         self.flags = flags or EagerFlags()
         self.engine = EagerIOEngine(
             backend, flags=self.flags, max_inflight=max_inflight,
             workers=workers, executor=executor, abort_on_error=abort_on_error,
-            ledger=ErrorLedger(echo=echo_errors), fusion=fusion)
+            ledger=ErrorLedger(echo=echo_errors), fusion=fusion,
+            overlay=overlay)
         self.backend = backend
         self._txn_lock = threading.Lock()
         self._txn = None  # active Transaction (set by Transaction.__enter__)
@@ -176,10 +179,21 @@ class CannyFS:
     # ------------------------------------------------------------------
 
     def mkdir(self, path: str) -> None:
-        b, p = self.backend, norm_path(path)
-        self._submit_journaled("mkdir", (p,), lambda: b.mkdir(p),
-                               lambda t: t._record_create(p, True),
-                               cache_kw={})
+        b, p, txn = self.backend, norm_path(path), self._active_txn()
+
+        def fn():
+            b.mkdir(p)
+            # the dir provably came into existence fresh and empty just
+            # now: the overlay's provisional admit-time claim is promoted
+            # to backend-proven (journal + promote on *success* only — a
+            # failed mkdir created nothing and is invalidated instead)
+            ov = self.engine.overlay
+            if ov is not None:
+                ov.promote(p)
+            if txn is not None:
+                txn._record_create(p, True)
+
+        self._submit("mkdir", (p,), fn, cache_kw={}, region=txn)
 
     def makedirs(self, path: str, exist_ok: bool = True) -> None:
         parts = norm_path(path).split("/")
@@ -195,19 +209,44 @@ class CannyFS:
             b, p = self.backend, cur
 
             def fn(p=p, txn=txn):
+                ov = self.engine.overlay
                 try:
                     b.mkdir(p)
                 except FileExistsError:
+                    # the dir pre-existed: the overlay's admit-time claim
+                    # of a fresh (complete, empty) directory is wrong —
+                    # demote its completeness; the membership deltas
+                    # recorded so far remain valid
+                    if ov is not None:
+                        ov.demote(p)
                     if not exist_ok:
                         raise
                 else:  # journal only dirs this region actually created
+                    if ov is not None:
+                        ov.promote(p)
                     if txn is not None:
                         txn._record_create(p, True)
             self._submit("mkdir", (p,), fn, cache_kw={}, region=txn)
 
     def rmdir(self, path: str) -> None:
+        p, txn = norm_path(path), self._active_txn()
+        # cross-path bulk-remove peephole: when the overlay proves this
+        # directory's subtree is fully known and ends empty after the
+        # pending removals, those unlinks/rmdirs are elided and ONE
+        # vectored remove_tree backend call covers the whole prefix.
+        # Collapses roll up through the rmtree recursion: leaf dirs fuse
+        # first, parents then absorb their children's fused removals.
+        if self.flags.is_eager("rmdir") and self.flags.is_eager("remove_tree"):
+            covered = self.engine.prepare_rmtree(p, region=txn)
+            if covered is not None:
+                b = self.backend
+                self._submit("remove_tree", (p, *covered),
+                             lambda: b.remove_tree(p), cache_kw={},
+                             region=txn)
+                return
         b = self.backend
-        self._submit("rmdir", (path,), lambda: b.rmdir(path), cache_kw={})
+        self._submit("rmdir", (p,), lambda: b.rmdir(p), cache_kw={},
+                     region=txn)
 
     def create(self, path: str) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
@@ -261,7 +300,8 @@ class CannyFS:
         b = self.backend
         s, d = norm_path(src), norm_path(dst)
         self._submit_journaled("link", (s, d), lambda: b.link(s, d),
-                               lambda t: t._record_create(d, False))
+                               lambda t: t._record_create(d, False),
+                               cache_kw={})
 
     def readlink(self, path: str) -> str:
         b = self.backend
@@ -390,12 +430,24 @@ class CannyFS:
                      lambda: b.removexattr(path, key))
 
     def stat(self, path: str) -> StatResult:
+        """Stat is an *overlay read*: answered from the write-through
+        cache (positive and negative hits) or from the overlay's proven
+        membership (a complete parent that does not list the name) without
+        sealing anything; only a miss takes the sync, sealing path."""
         path = norm_path(path)
-        if self.flags.mock_stat:
+        ov = self.engine.overlay
+        mock = ov.policy.mock_stat if ov is not None else self.flags.mock_stat
+        negative = (ov.policy.negative_stat if ov is not None
+                    else self.flags.negative_stat_cache)
+        if mock:
             hit = self.engine.stat_cache.get(path)
-            if hit is not None and (hit.exists or self.flags.negative_stat_cache):
+            if hit is not None and (hit.exists or negative):
                 self.engine.stats.mocked_stats += 1
                 return hit
+            if hit is None and negative and ov is not None \
+                    and ov.lookup(path) is False:
+                self.engine.stats.mocked_stats += 1
+                return StatResult(False, mocked=True)
         b = self.backend
         cache = self.engine.stat_cache
 
@@ -413,8 +465,43 @@ class CannyFS:
         return self.stat(path).exists
 
     def readdir(self, path: str) -> list[str]:
+        """Readdir consults the namespace overlay first: when the
+        directory's membership is fully determined by the transaction's
+        own writes (created in-window) or a cached backend listing, the
+        answer comes from pending state and the chains beneath stay
+        rewritable (no seal, no backend roundtrip).  A miss executes ONE
+        vectored ``readdir_plus`` call — names plus attributes, the NFS
+        READDIRPLUS analogue — installing the listing into the overlay
+        and warming the stat cache, and seals as any sync op does."""
         path = norm_path(path)
+        ov = self.engine.overlay
         b = self.backend
+        if ov is not None:
+            if ov.policy.readdir_overlay:
+                names = ov.readdir(path)
+                if names is not None:
+                    stats = self.engine.stats
+                    stats.overlay_readdirs += 1
+                    if self.engine._sched.has_pending_under(path):
+                        stats.overlay_seals_avoided += 1
+                    return names
+            cache = self.engine.stat_cache
+            warm = ov.policy.prefetch
+
+            def fn():
+                listing = b.readdir_plus(path)
+                if warm:
+                    for name, st in listing:
+                        child = f"{path}/{name}" if path else name
+                        if st is not None and cache.get(child) is None:
+                            cache.put(child, st)
+                            self.engine.stats.prefetched_stats += 1
+                ov.install_listing(path, listing)
+                return [name for name, _ in listing]
+
+            return self.engine.submit("readdir", (path,), fn, eager=False)
+        # overlay disabled: the pre-overlay path — plain backend readdir
+        # plus the legacy advisory per-entry prefetch stats
         names = self.engine.submit("readdir", (path,),
                                    lambda: b.readdir(path), eager=False)
         if self.flags.readdir_prefetch:
@@ -441,9 +528,18 @@ class CannyFS:
     # ------------------------------------------------------------------
 
     def rmtree(self, path: str) -> None:
-        """`rm -rf` — the paper's second benchmark.  readdir prefetch makes
-        the per-entry stat a cache hit; unlinks/rmdirs are eager, and the
-        engine's pending-children edges keep each rmdir after its subtree."""
+        """`rm -rf` — the paper's second benchmark, readdir-driven.
+
+        With the namespace overlay this walk stays inside the unobserved
+        window: readdirs of in-window (or once-listed) directories answer
+        from pending state without sealing, per-entry stats hit the cache
+        warmed by the listing, and each ``rmdir`` tries the bulk-remove
+        peephole — collapsing the subtree's pending unlinks/rmdirs into
+        one vectored ``remove_tree`` backend call that rolls up the
+        recursion to a single fused removal of the whole tree.  With the
+        overlay off (or on any miss) this degrades gracefully to the
+        per-entry path: eager unlinks/rmdirs ordered by the engine's
+        pending-children edges."""
         path = norm_path(path)
         for name in self.readdir(path):
             child = f"{path}/{name}" if path else name

@@ -15,7 +15,15 @@ peephole rules over each path's pending chain:
 * **elide** — a ``create``+``write``(+metadata) chain whose path is
   unlinked inside the same unobserved window never touches the backend at
   all (the extract-then-rmtree workload); the trailing unlink becomes
-  tolerant of the file's absence so the stream stays error-free.
+  tolerant of the file's absence so the stream stays error-free;
+* **bulk remove** (cross-path, keyed by directory prefix) — when an
+  ``rmdir`` arrives and the namespace overlay proves its whole subtree is
+  known *and* ends empty after the pending removals, those pending
+  unlinks/rmdirs/child-``remove_tree``s are elided and replaced by ONE
+  vectored ``remove_tree`` backend call on the common root.  Collapses
+  roll up: leaf directories fuse first, parents then absorb their
+  children's fused removals, so a readdir-driven ``rmtree`` converges to
+  a single backend op for the whole tree.
 
 Safety comes from the scheduler's per-op flags: fusion only ever mutates
 the pending *tip* op of a path while it is unclaimed (no executor owns
@@ -31,12 +39,18 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass
 
+from .backend import is_under
+
 # op kinds whose effects on a path are invisible at commit once the path
 # is unlinked in the same unobserved window
 ELIDABLE_KINDS = frozenset({
     "create", "write", "chmod", "utimens", "truncate", "fallocate",
     "setxattr",
 })
+
+# pending removal ops a bulk remove_tree on an ancestor subsumes: their
+# whole duty transfers to the fused call, so they can leave the stream
+REMOVAL_KINDS = frozenset({"unlink", "rmdir", "remove_tree"})
 
 
 @dataclass(frozen=True)
@@ -51,6 +65,7 @@ class FusionPolicy:
     coalesce_writes: bool = True
     fold_metadata: bool = True
     elide_unlinked: bool = True
+    bulk_remove: bool = True     # cross-path unlink/rmdir -> remove_tree
     max_segments: int = 128
     max_bytes: int = 32 << 20
 
@@ -188,3 +203,62 @@ class Fuser:
             self.stats.elided_ops += len(elided)
             self.stats.bytes_elided += dropped
         return True
+
+    # -- rule 4: cross-path bulk remove --------------------------------
+
+    def prepare_bulk_remove(self, sched, overlay, root: str,
+                            region: object) -> list[str] | None:
+        """Collapse the pending removals under ``root`` into one vectored
+        ``remove_tree`` backend call.
+
+        Fires only when the namespace overlay proves the subtree: every
+        reachable directory's membership is overlay-known, and no entry is
+        still *present* (present entries carry no pending removal — an
+        admitted unlink/rmdir marks its path absent immediately — so a
+        present entry means the rmdir would correctly fail ENOTEMPTY and
+        must not be rewritten).  Same-region pending unlink/rmdir/child-
+        remove_tree ops directly under the known directories are elided —
+        their removal duty transfers to the fused call; ineligible ones
+        (sealed, claimed, another region's) simply run first, ordered by
+        the fused op's dependency edges, and the tolerant ``remove_tree``
+        mops up what remains.
+
+        Returns the covered paths for the fused op's path set (they give
+        it its dependency edges and its error-invalidation scope), or
+        None when the per-entry path must be taken."""
+        pol = self.policy
+        if not (pol.enabled and pol.bulk_remove):
+            return None
+        sub = overlay.subtree(root)
+        if sub is None:
+            return None
+        files, dirs = sub
+        if files:
+            return None   # will not be empty: let the plain rmdir report it
+        covered: set[str] = set()
+        candidates: dict[int, object] = {}
+        for d in (root, *dirs):
+            for op in sched.pending_structural_children(d):
+                if op.kind not in REMOVAL_KINDS or id(op) in candidates:
+                    continue
+                if not all(p != root and is_under(p, root)
+                           for p in op.paths):
+                    continue
+                candidates[id(op)] = op
+                covered.update(op.paths)
+        if dirs and not set(dirs) <= covered:
+            return None   # a present dir with no pending removal
+        elided = 0
+        for op in candidates.values():
+            with op.flock:
+                if (op.completed or op.claimed or op.sealed or op.cancelled
+                        or op.elided or op.region is not region):
+                    continue
+                op.elided = True
+                elided += 1
+        if not elided:
+            return None   # nothing rewritable: plain rmdir is as good
+        with self._slock:
+            self.stats.bulk_removes += 1
+            self.stats.elided_ops += elided
+        return sorted(covered)

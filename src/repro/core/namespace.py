@@ -1,0 +1,342 @@
+"""Namespace overlay: the write-back directory-tree delta of the pending
+op stream.
+
+The optimizer's blind spot before this layer was `readdir`: every
+namespace *read* was an observation point that sealed the pending chains
+beneath it, so a readdir-driven `rmtree` — the paper's second headline
+benchmark — forfeited elision and paid one backend op per entry.  The
+overlay closes that gap by mirroring the engine's submitted mutations as
+a per-directory membership delta:
+
+* every namespace mutation (`mkdir`/`create`/`symlink`/`link`/`unlink`/
+  `rmdir`/`rename`/`remove_tree`, plus implicit-create `write`s) is
+  applied to the overlay at *admission* — the same instant the
+  write-through stat cache learns it, strictly before the op can run;
+* a directory is **complete** when its full membership is determined by
+  the transaction's own writes (created inside the window) or by a cached
+  backend listing (installed when a readdir miss executed);
+* `readdir`/`stat`/`exists` become *overlay reads*: when the answer is
+  fully determined by pending state + cache they return immediately and
+  **do not seal** the chains below — observation-point classification is
+  per-answer, not per-call.  An overlay miss still takes the sync path
+  and seals, exactly as before.
+
+Correctness contract (mirrors the stat cache's): the overlay answers
+from *intended effects* in submission order.  A background op that later
+fails invalidates every overlay claim on its paths (membership dropped,
+parent completeness demoted), so the next read consults the backend; the
+deferred-error ledger carries the truth either way.  A tolerant
+`makedirs` mkdir that lands on a pre-existing directory demotes the
+directory's completeness at execution (its real contents are unknown).
+
+The overlay is also what makes **cross-path bulk-remove fusion** safe:
+`Fuser.prepare_bulk_remove` may collapse the pending unlinks/rmdirs
+under a directory into one vectored ``remove_tree`` backend call only
+when the subtree is overlay-known — i.e. when the engine can prove the
+directory ends empty from its own write stream (see fusion.py).
+
+Lifecycle: populated at submission, invalidated per-path on op failure,
+cleared wholesale by transaction rollback (which mutates the backend
+behind the engine's back) and dropped at commit (the delta is spent once
+the window closes).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+from .backend import StatResult, is_under, norm_path, parent_of
+
+# membership kinds tracked per directory entry (None = present, kind
+# not yet proven — enough for readdir, not enough for a bulk remove)
+_DIR, _FILE, _LINK = "dir", "file", "link"
+
+
+@dataclass(frozen=True)
+class OverlayPolicy:
+    """Which overlay answers are allowed.  This is where the engine's old
+    ``mock_stat``/``readdir_prefetch``/``negative_stat_cache`` flags now
+    live: ``CannyFS(overlay=None)`` derives a policy from the legacy
+    flags, ``overlay=OverlayPolicy(...)`` supersedes them."""
+
+    enabled: bool = True
+    readdir_overlay: bool = True   # answer readdir from the overlay
+    mock_stat: bool = True         # answer stat from the write-through cache
+    negative_stat: bool = True     # ...including proven-absent answers
+    prefetch: bool = True          # readdir misses warm the stat cache
+    #                                (one vectored readdir_plus call)
+
+    @classmethod
+    def off(cls) -> "OverlayPolicy":
+        return cls(enabled=False, readdir_overlay=False, mock_stat=False,
+                   negative_stat=False, prefetch=False)
+
+    @classmethod
+    def from_flags(cls, flags) -> "OverlayPolicy":
+        """Fold the legacy EagerFlags knobs into an overlay policy; with
+        every knob off (EagerFlags.all_off — the 'direct' baseline) the
+        overlay is disabled outright and all reads hit the backend."""
+        enabled = (flags.mock_stat or flags.readdir_prefetch
+                   or flags.negative_stat_cache)
+        return cls(enabled=enabled,
+                   readdir_overlay=flags.readdir_prefetch,
+                   mock_stat=flags.mock_stat,
+                   negative_stat=flags.negative_stat_cache,
+                   prefetch=flags.readdir_prefetch)
+
+
+class _DirState:
+    """One directory's delta: known-present children (name -> kind),
+    known-absent names, and whether membership is complete.
+
+    ``provisional`` completeness comes from an *unexecuted* mkdir's
+    admit-time claim of a fresh empty directory.  Overlay reads may use
+    it (the same intent-based approximation as the write-through stat
+    cache, self-repairing at execution), but the bulk-remove pass must
+    not: until the backend confirms the mkdir created the directory, a
+    pre-existing directory with unknown contents is possible, and a fused
+    ``remove_tree`` would silently delete data an unfused execution
+    would have preserved behind ENOTEMPTY."""
+
+    __slots__ = ("children", "absent", "complete", "provisional")
+
+    def __init__(self):
+        self.children: dict[str, str | None] = {}
+        self.absent: set[str] = set()
+        self.complete = False
+        self.provisional = False
+
+
+class NamespaceOverlay:
+    """Thread-safe directory-tree delta.  A leaf lock in the engine's
+    lock order (nests under shard/op/control locks, holds no other)."""
+
+    def __init__(self, policy: OverlayPolicy | None = None):
+        self.policy = policy or OverlayPolicy()
+        self._lock = threading.Lock()
+        self._dirs: dict[str, _DirState] = {}
+
+    # ------------------------------------------------------------------
+    # write side: mirror the op stream (called from submit's on_admit)
+    # ------------------------------------------------------------------
+
+    def _state(self, dirpath: str) -> _DirState:
+        st = self._dirs.get(dirpath)
+        if st is None:
+            st = self._dirs[dirpath] = _DirState()
+        return st
+
+    def _add(self, dirpath: str, name: str, kind: str | None) -> None:
+        st = self._state(dirpath)
+        if name not in st.children:
+            st.children[name] = kind
+        elif st.children[name] is None and kind is not None:
+            st.children[name] = kind   # first proven kind wins
+        st.absent.discard(name)
+
+    def _remove(self, dirpath: str, name: str) -> None:
+        st = self._state(dirpath)
+        st.children.pop(name, None)
+        st.absent.add(name)
+
+    @staticmethod
+    def _split(path: str) -> tuple[str, str]:
+        return parent_of(path), path.rsplit("/", 1)[-1]
+
+    def on_op(self, kind: str, paths: tuple[str, ...], **kw) -> None:
+        """Apply one admitted op's intended namespace effect."""
+        with self._lock:
+            if kind == "mkdir":
+                p = paths[0]
+                par, name = self._split(p)
+                self._add(par, name, _DIR)
+                # intended effect: a freshly created directory is empty,
+                # hence complete — but only *provisionally* until the
+                # mkdir executes (promote on success, demote on a
+                # tolerant EEXIST, invalidate on error)
+                st = self._state(p)
+                if not st.complete:
+                    st.complete = True
+                    st.provisional = True
+            elif kind in ("create", "write", "truncate"):
+                par, name = self._split(paths[0])
+                self._add(par, name, _FILE)
+            elif kind == "symlink":
+                par, name = self._split(paths[0])
+                self._add(par, name, _LINK)
+            elif kind == "link":
+                par, name = self._split(paths[1] if len(paths) > 1
+                                         else paths[0])
+                self._add(par, name, _FILE)
+            elif kind == "unlink":
+                self._remove(*self._split(paths[0]))
+            elif kind == "rmdir":
+                p = paths[0]
+                self._remove(*self._split(p))
+                self._dirs.pop(p, None)
+            elif kind == "remove_tree":
+                root = paths[0]
+                self._remove(*self._split(root))
+                for k in [k for k in self._dirs if is_under(k, root)]:
+                    del self._dirs[k]
+            elif kind == "rename":
+                src, dst = paths
+                kind_src = None
+                sp, sn = self._split(src)
+                st = self._dirs.get(sp)
+                if st is not None:
+                    kind_src = st.children.get(sn)
+                self._remove(sp, sn)
+                # transfer the renamed subtree's dir states key-for-key
+                moved_dir = False
+                for k in [k for k in self._dirs if is_under(k, src)]:
+                    self._dirs[dst + k[len(src):]] = self._dirs.pop(k)
+                    moved_dir = moved_dir or k == src
+                dp, dn = self._split(dst)
+                self._add(dp, dn, _DIR if moved_dir else kind_src)
+            elif kind == "fallocate":
+                # backends disagree on whether fallocate creates a missing
+                # file (LocalBackend does, InMemory does not) — membership
+                # under its parent is no longer provable
+                st = self._dirs.get(parent_of(paths[0]))
+                if st is not None:
+                    st.complete = False
+
+    def install_listing(self, path: str,
+                        listing: list[tuple[str, StatResult | None]]) -> None:
+        """Install a backend listing (from an executed readdir miss) as the
+        directory's base membership.  Names the overlay already has a
+        delta for keep it — their ops are ordered around the readdir and
+        the listing agrees with every op ordered before it."""
+        with self._lock:
+            if path:
+                # a rmdir/remove_tree admitted after this readdir was
+                # submitted already popped the dir's state and marked it
+                # absent in its parent — installing the (older) listing
+                # would resurrect a complete overlay entry for a
+                # directory that no longer exists
+                par, name = self._split(path)
+                pst = self._dirs.get(par)
+                if pst is not None and name in pst.absent:
+                    return
+            st = self._state(path)
+            for name, stt in listing:
+                if name in st.children or name in st.absent:
+                    continue
+                st.children[name] = (None if stt is None
+                                     else _DIR if stt.is_dir
+                                     else _LINK if stt.is_symlink
+                                     else _FILE)
+            st.complete = True
+            st.provisional = False   # backend truth, not an intent claim
+
+    # ------------------------------------------------------------------
+    # read side
+    # ------------------------------------------------------------------
+
+    def readdir(self, path: str) -> list[str] | None:
+        """The directory's full listing, or None when membership is not
+        fully determined by pending state + cached listings (a miss: the
+        caller must take the sync, sealing path)."""
+        with self._lock:
+            st = self._dirs.get(path)
+            if st is None or not st.complete:
+                return None
+            return sorted(st.children)
+
+    def lookup(self, path: str) -> bool | None:
+        """Presence of ``path``: True/False when provable, None otherwise.
+        False needs either an explicit absence delta (unlinked/removed in
+        the window) or a complete parent that does not list the name."""
+        path = norm_path(path)
+        if not path:
+            return True
+        with self._lock:
+            par, name = self._split(path)
+            st = self._dirs.get(par)
+            if st is None:
+                return None
+            if name in st.children:
+                return True
+            if name in st.absent or st.complete:
+                return False
+            return None
+
+    def subtree(self, root: str) -> tuple[list[str], list[str]] | None:
+        """(files, dirs) of *present* entries under ``root``, or None when
+        any reachable directory is incomplete, provisional (its mkdir has
+        not yet proven the dir was created fresh) or any kind unproven —
+        the bulk-remove pass may only fire on a fully overlay-PROVEN
+        tree, because a fused remove_tree deletes unconditionally where
+        an unfused rmdir would have failed ENOTEMPTY."""
+        with self._lock:
+            return self._subtree(root)
+
+    def _subtree(self, root):
+        st = self._dirs.get(root)
+        if st is None or not st.complete or st.provisional:
+            return None
+        files: list[str] = []
+        dirs: list[str] = []
+        for name, kind in st.children.items():
+            p = f"{root}/{name}" if root else name
+            if kind == _DIR:
+                sub = self._subtree(p)
+                if sub is None:
+                    return None
+                dirs.append(p)
+                files.extend(sub[0])
+                dirs.extend(sub[1])
+            elif kind is None:
+                return None
+            else:
+                files.append(p)
+        return files, dirs
+
+    # ------------------------------------------------------------------
+    # invalidation
+    # ------------------------------------------------------------------
+
+    def invalidate(self, path: str) -> None:
+        """A background op on ``path`` failed (or was cancelled): every
+        claim the overlay made about it is suspect.  Drop its membership
+        entry, demote its parent's completeness, and forget the state of
+        any directory at or under it."""
+        path = norm_path(path)
+        with self._lock:
+            if path:
+                par, name = self._split(path)
+                st = self._dirs.get(par)
+                if st is not None:
+                    st.children.pop(name, None)
+                    st.absent.discard(name)
+                    st.complete = False
+            for k in [k for k in self._dirs if is_under(k, path)]:
+                del self._dirs[k]
+
+    def demote(self, path: str) -> None:
+        """Keep the membership delta but drop completeness (a tolerant
+        mkdir found the directory pre-existing: its base contents are
+        unknown, the deltas recorded so far are still valid)."""
+        with self._lock:
+            st = self._dirs.get(norm_path(path))
+            if st is not None:
+                st.complete = False
+                st.provisional = False
+
+    def promote(self, path: str) -> None:
+        """An executed mkdir confirmed it created ``path`` fresh: its
+        provisional admit-time completeness is now backend-proven.  A
+        state popped in the meantime (a rmdir admitted while the mkdir
+        was pending) is deliberately NOT resurrected."""
+        with self._lock:
+            st = self._dirs.get(norm_path(path))
+            if st is not None and st.complete:
+                st.provisional = False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._dirs.clear()
+
+
+__all__ = ["NamespaceOverlay", "OverlayPolicy"]

@@ -32,6 +32,10 @@ race-free against the executor claiming it:
 * ``claimed``  — an executor owns the op; its payload is frozen.
 * ``sealed``   — an observation point (read / barrier / any sync op) has
   scheduled a wait on this op; it must execute exactly as submitted.
+  Observation classification is per-*answer*, not per-call: a readdir or
+  stat satisfied by the namespace overlay (core/namespace.py) never
+  reaches the scheduler and seals nothing; only an overlay miss submits
+  the sync op that pins its dependencies.
 * ``elided``   — the optimizer proved the op's effects are invisible at
   every observation point (e.g. writes to a path unlinked in the same
   window); the executor completes it without touching the backend.
@@ -50,9 +54,12 @@ from .errors import EnginePoisonedError
 # ops that change the namespace under their parent directory — a readdir /
 # rmdir / rename of the parent must wait for *all* of these (siblings do not
 # chain with each other, so per-path order alone cannot express this).
-STRUCTURAL = {"mkdir", "rmdir", "create", "unlink", "rename", "symlink", "link"}
-# ops that must observe a complete namespace under their own path
-NEEDS_CHILDREN = {"rmdir", "readdir", "rename"}
+STRUCTURAL = {"mkdir", "rmdir", "create", "unlink", "rename", "symlink",
+              "link", "remove_tree"}
+# ops that must observe a complete namespace under their own path.  A fused
+# remove_tree lists every covered entry in its paths, so this edge also
+# orders it after any pending straggler beneath the tree.
+NEEDS_CHILDREN = {"rmdir", "readdir", "rename", "remove_tree"}
 
 DEFAULT_SHARDS = 16
 
@@ -283,6 +290,23 @@ class OpScheduler:
                 out.append(cur)
                 cur = nxt
         return out
+
+    def pending_structural_children(self, path: str) -> list[_Op]:
+        """Snapshot of the pending structural ops directly under ``path``
+        (the bulk-remove pass scans these for collapsible removals)."""
+        shard = self._shard_of(path)
+        with shard.lock:
+            return list(shard.pending_children.get(path, {}).values())
+
+    def has_pending_under(self, path: str) -> bool:
+        """True when ``path`` has a pending tip or pending structural
+        children — i.e. an observation at ``path`` answered by the
+        namespace overlay genuinely avoided sealing something."""
+        shard = self._shard_of(path)
+        with shard.lock:
+            if shard.last_op.get(path) is not None:
+                return True
+            return bool(shard.pending_children.get(path))
 
     def seal_path(self, path: str) -> Optional[_Op]:
         """Pin the pending tip on ``path`` (an observation point is about

@@ -127,6 +127,12 @@ class Transaction:
         errs = self.errors()
         if errs:
             raise TransactionFailedError(errs)
+        # the optimization window is closed: drop the namespace overlay's
+        # delta (its claims are now plain backend truth; the next window
+        # rebuilds its own)
+        ov = self.fs.engine.overlay
+        if ov is not None:
+            ov.clear()
         self.committed = True
 
     def rollback(self) -> None:
@@ -183,6 +189,11 @@ class Transaction:
             except OSError:
                 leftovers.append(p)
         self.rollback_leftovers = leftovers
+        # rollback mutated the backend behind the engine's back (direct
+        # unlinks/rmdirs): every overlay claim is now suspect — clear it
+        ov = self.fs.engine.overlay
+        if ov is not None:
+            ov.clear()
         # scoped clear: only this region's errors are handled — entries
         # from earlier work or a concurrently-opened region must survive
         self.fs.ledger.clear_region(self)

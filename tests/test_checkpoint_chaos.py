@@ -1,0 +1,172 @@
+"""Crash-restart chaos for TransactionalCheckpointManager (ROADMAP item c):
+kill the process (simulated by a non-OSError BaseException the manager
+cannot catch) between the first shard write and the COMMIT marker — at
+EVERY injection point — then start a fresh manager on the same backend
+and assert startup recovery discards exactly the uncommitted step dir,
+leaving committed checkpoints byte-identical."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import COMMIT_FILE, TransactionalCheckpointManager
+from repro.core import CannyFS, EagerFlags, InMemoryBackend
+
+
+class _Crash(BaseException):
+    """Simulated process death.  Deliberately NOT an OSError/CannyError:
+    the manager's own error handling must not see it — the partial step
+    dir is left exactly as the dying process would leave it."""
+
+
+class CrashingBackend(InMemoryBackend):
+    """Raises _Crash on the k-th mutating call under the checkpoint root
+    once armed.  Counting only ckpt-dir mutations makes injection point k
+    deterministic and independent of unrelated traffic."""
+
+    def __init__(self, root="ck"):
+        super().__init__()
+        self._root = root
+        self.countdown = None     # None = disarmed
+
+    def _tick(self, path):
+        if self.countdown is None or not str(path).startswith(self._root):
+            return
+        if self.countdown == 0:
+            self.countdown = None
+            raise _Crash(path)
+        self.countdown -= 1
+
+    def mkdir(self, path):
+        self._tick(path)
+        super().mkdir(path)
+
+    def create(self, path):
+        self._tick(path)
+        super().create(path)
+
+    def write_at(self, path, offset, data):
+        self._tick(path)
+        return super().write_at(path, offset, data)
+
+    def write_vec(self, path, segments):
+        self._tick(path)
+        return super().write_vec(path, segments)
+
+
+def _sync_fs(be):
+    # fully synchronous mount: every op runs in the caller's thread, so
+    # _Crash propagates out of save() like a process dying mid-syscall
+    # (nothing self-cleans; the partial dir survives on the backend)
+    return CannyFS(be, flags=EagerFlags.all_off(), workers=2,
+                   echo_errors=False)
+
+
+def _ckpt_files(be, step):
+    prefix = f"ck/step_{step:010d}/"
+    return {p: bytes(d) for p, d in be.snapshot()["files"].items()
+            if p.startswith(prefix)}
+
+
+def test_crash_restart_at_every_injection_point():
+    be = CrashingBackend("ck")
+    state1 = {"w": np.arange(8, dtype=np.float32),
+              "b": np.ones(3, np.float32)}
+    state2 = {"w": np.arange(8, dtype=np.float32) * 2.0,
+              "b": np.zeros(3, np.float32)}
+
+    # seed one committed checkpoint (no chaos armed)
+    fs0 = _sync_fs(be)
+    mgr0 = TransactionalCheckpointManager(fs0, "ck")
+    assert mgr0.save(1, state1, block=True).ok
+    fs0.close()
+    committed = _ckpt_files(be, 1)
+    assert any(p.endswith(COMMIT_FILE) for p in committed)
+
+    crash_points = 0
+    k = 0
+    while True:
+        be.countdown = k
+        fs = _sync_fs(be)
+        crashed = False
+        try:
+            mgr = TransactionalCheckpointManager(fs, "ck")
+            res = mgr.save(2, state2, block=True)
+        except _Crash:
+            crashed = True
+        be.countdown = None
+        fs.close()
+
+        # restart: a fresh manager on the same backend runs recovery
+        fs2 = _sync_fs(be)
+        mgr2 = TransactionalCheckpointManager(fs2, "ck")
+        if crashed:
+            crash_points += 1
+            # recovery discarded exactly the uncommitted step dir...
+            assert mgr2.list_steps() == [1]
+            assert _ckpt_files(be, 2) == {}
+            assert all(not p.startswith("ck/step_0000000002")
+                       for p in be.snapshot()["files"])
+            # ...and the committed checkpoint is untouched and restorable
+            assert _ckpt_files(be, 1) == committed
+            step, out = mgr2.restore(state1)
+            assert step == 1
+            np.testing.assert_array_equal(out["w"], state1["w"])
+            fs2.close()
+            k += 1
+            continue
+        # chaos exhausted: the uninjected save must have committed
+        assert res.ok, res.error
+        assert mgr2.list_steps() == [1, 2]
+        step, out = mgr2.restore(state2)
+        assert step == 2
+        np.testing.assert_array_equal(out["w"], state2["w"])
+        fs2.close()
+        break
+
+    # the sweep covered the full window: root mkdir, manifest, both shard
+    # streams and the COMMIT marker itself are all >1 mutating calls
+    assert crash_points >= 5
+
+
+def test_crash_after_commit_marker_is_durable():
+    """A crash strictly *after* the COMMIT content landed loses nothing:
+    restart sees a committed step (the marker names the step) and
+    recovery discards nothing."""
+    be = CrashingBackend("ck")
+    state = {"w": np.ones(4, np.float32)}
+    fs = _sync_fs(be)
+    mgr = TransactionalCheckpointManager(fs, "ck")
+    assert mgr.save(7, state, block=True).ok
+    fs.close()
+    before = be.snapshot()["files"]
+
+    fs2 = _sync_fs(be)
+    mgr2 = TransactionalCheckpointManager(fs2, "ck")
+    assert mgr2.rollback_uncommitted() == []
+    assert mgr2.list_steps() == [7]
+    assert be.snapshot()["files"] == before
+    fs2.close()
+
+
+def test_partial_commit_marker_is_not_a_commit():
+    """Crash between the COMMIT file's create and its content write: the
+    empty marker must read as *uncommitted* and recovery must discard the
+    step (an empty/garbage marker naming no step is not durable)."""
+    be = CrashingBackend("ck")
+    state = {"w": np.ones(4, np.float32)}
+    fs = _sync_fs(be)
+    mgr = TransactionalCheckpointManager(fs, "ck")
+    assert mgr.save(1, state, block=True).ok
+    fs.close()
+
+    # forge the failure mode directly: step 2 fully written, marker empty
+    d = "ck/step_0000000002"
+    be.mkdir(d)
+    be.create(f"{d}/manifest.json")
+    be.write_at(f"{d}/manifest.json", 0, b"{}")
+    be.create(f"{d}/{COMMIT_FILE}")          # created, never written
+
+    fs2 = _sync_fs(be)
+    mgr2 = TransactionalCheckpointManager(fs2, "ck")
+    assert mgr2.list_steps() == [1]
+    assert all(not p.startswith(d) for p in be.snapshot()["files"])
+    fs2.close()

@@ -11,10 +11,10 @@ import pytest
 
 from repro.core import (CannyFS, EagerFlags, EnginePoisonedError,
                         FaultInjectingBackend, FaultPlan, FaultRule,
-                        InMemoryBackend, LatencyBackend, LatencyModel,
-                        OpCancelledError, QuotaBackend, Transaction,
-                        TransactionFailedError, VirtualClock, make_fault,
-                        run_transaction)
+                        FusionPolicy, InMemoryBackend, LatencyBackend,
+                        LatencyModel, LocalBackend, OpCancelledError,
+                        QuotaBackend, Transaction, TransactionFailedError,
+                        VirtualClock, make_fault, run_transaction)
 
 
 def chaos_fs(rules, *, seed=0, workers=1, quota=None, latency=False,
@@ -113,9 +113,12 @@ def test_mid_extract_eio_lands_in_ledger():
 
 
 def test_mid_rmtree_fault_poisons_engine_under_abort():
+    # bulk_remove off: this test exercises the per-entry removal path,
+    # where each unlink is its own backend call the rule can match (the
+    # fused remove_tree path has its own fault tests in test_namespace)
     inner, plan, _, fs = chaos_fs(
         [FaultRule(error="EIO", ops=("unlink",), path_glob="*f03*")],
-        abort_on_error=True)
+        abort_on_error=True, fusion=FusionPolicy(bulk_remove=False))
     extract(fs)
     fs.drain()
     assert not fs.poisoned
@@ -322,6 +325,162 @@ def test_quota_exhaustion_fails_transaction_and_rollback_releases():
     assert q.used == 0                        # budget fully released
     assert fs.stats.rollbacks == 3
     fs.close()
+
+
+# ---------------------------------------------------------------------------
+# QuotaBackend: inode limits (ROADMAP item e)
+# ---------------------------------------------------------------------------
+
+def test_inode_quota_enospc_and_charge_release_symmetry():
+    """Every create/mkdir/symlink/link charges one inode, ENOSPC on
+    exhaustion; unlink/rmdir release — the charge/release cycle is exactly
+    symmetric, so the budget is reusable indefinitely."""
+    q = QuotaBackend(InMemoryBackend(), 1 << 20, max_inodes=3)
+    q.mkdir("d")
+    q.create("d/a")
+    q.symlink("t", "d/s")
+    assert q.inodes_used == 3 and q.inodes_remaining == 0
+    with pytest.raises(OSError) as ei:
+        q.create("d/b")
+    assert ei.value.errno == errno.ENOSPC
+    assert q.enospc_count == 1
+    with pytest.raises(OSError):
+        q.mkdir("d2")
+    with pytest.raises(OSError):
+        q.link("d/a", "d/hard")
+    # release one, and the budget admits exactly one again
+    q.unlink("d/s")
+    assert q.inodes_used == 2
+    q.create("d/b")
+    assert q.inodes_used == 3
+    # full teardown returns the budget to zero
+    q.unlink("d/a")
+    q.unlink("d/b")
+    q.rmdir("d")
+    assert q.inodes_used == 0 and q.inodes_remaining == 3
+    assert q.used == 0
+
+
+def test_inode_quota_recharge_and_failed_delegate_uncharges():
+    inner = InMemoryBackend()
+    q = QuotaBackend(inner, 1 << 20, max_inodes=2)
+    q.create("a")
+    q.create("a")                 # O_TRUNC re-create: no second charge
+    assert q.inodes_used == 1
+    with pytest.raises(FileNotFoundError):
+        q.create("missing_parent/x")   # inner raised: charge backed out
+    assert q.inodes_used == 1
+    with pytest.raises(FileNotFoundError):
+        q.mkdir("nope/deep")
+    assert q.inodes_used == 1
+
+
+def test_inode_quota_rename_moves_charge_and_overwrite_releases():
+    q = QuotaBackend(InMemoryBackend(), 1 << 20, max_inodes=2)
+    q.create("a")
+    q.create("b")
+    assert q.inodes_used == 2
+    q.rename("a", "b")            # overwrite: b's old inode charge released
+    assert q.inodes_used == 1
+    q.unlink("b")
+    assert q.inodes_used == 0
+
+
+def test_inode_quota_released_by_remove_tree_and_rollback_converges():
+    """The fused bulk removal and transaction rollback both release inode
+    charges, so the roll-back-and-resubmit loop converges instead of
+    wedging on a phantom-full namespace."""
+    inner = InMemoryBackend()
+    q = QuotaBackend(inner, 1 << 20, max_inodes=10)
+    fs = CannyFS(q, echo_errors=False)
+
+    def body(fs):
+        extract(fs, n=20)         # 20 files + 2 dirs > 10 inodes
+
+    with pytest.raises(TransactionFailedError) as ei:
+        run_transaction(fs, body, retries=2)
+    assert all(e.error.errno == errno.ENOSPC for e in ei.value.entries)
+    assert inner.snapshot()["files"] == {}
+    assert q.inodes_used == 0     # rollback released every charge
+    # a small tree now fits, and a fused remove_tree releases it again
+    fs.makedirs("ok")
+    for i in range(4):
+        fs.write_file(f"ok/f{i}", b"v")
+    fs.drain()
+    assert q.inodes_used == 5
+    fs.rmtree("ok")
+    fs.drain()
+    assert fs.stats.bulk_removes >= 1
+    assert q.inodes_used == 0 and q.used == 0
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# fault stack over the real-FS backend (ROADMAP item b)
+# ---------------------------------------------------------------------------
+
+def test_fault_stack_on_local_backend_extract_rmtree(tmp_path):
+    """Integration realism: FaultInjecting(Quota(Local)) against a real
+    tmpdir, running the extract+rmtree workload under run_transaction
+    with raise, short (torn write) and delay rules — the transactional
+    loop must converge to a byte-correct on-disk tree, and the removal
+    must leave the directory empty on the real filesystem."""
+    import os
+    base = LocalBackend(str(tmp_path / "mnt"))
+    plan = FaultPlan([
+        FaultRule(error="EIO", ops=("write",), path_glob="out/*",
+                  after_count=3, max_failures=2),
+        FaultRule(outcome="short", ops=("write",), short_fraction=0.5,
+                  after_count=8, max_failures=1),
+        FaultRule(error="EACCES", ops=("create",), path_glob="*f05*",
+                  max_failures=1),
+        FaultRule(outcome="delay", ops=("mkdir",), delay_s=0.001),
+    ], seed=7)
+    stack = FaultInjectingBackend(
+        QuotaBackend(base, 1 << 20, max_inodes=256), plan)
+    fs = CannyFS(stack, echo_errors=False, workers=4)
+    payloads = {f"out/deep/f{i:02d}": bytes([i]) * 200 for i in range(12)}
+
+    def body(fs):
+        fs.makedirs("out/deep")
+        for path, data in payloads.items():
+            with fs.open(path, "wb") as h:
+                for lo in range(0, len(data), 64):
+                    h.write(data[lo:lo + 64])
+
+    run_transaction(fs, body, retries=6)
+    fs.drain()
+    assert plan.injected > 0                      # chaos actually fired
+    assert fs.stats.retries >= 1
+    root = str(tmp_path / "mnt")
+    for path, data in payloads.items():           # byte-correct on disk
+        with open(os.path.join(root, path), "rb") as f:
+            assert f.read() == data
+    plan.expire()
+    fs.rmtree("out")
+    fs.drain()
+    assert len(fs.ledger) == 0
+    assert os.listdir(root) == []                 # really gone from the FS
+    fs.close()
+
+
+def test_local_backend_readdir_plus_and_remove_tree(tmp_path):
+    """The new vectored primitives on the real FS: one-scandir listings
+    with attributes, and the one-walk bulk removal."""
+    base = LocalBackend(str(tmp_path / "m"))
+    base.mkdir("d")
+    base.create("d/f")
+    base.write_at("d/f", 0, b"xyz")
+    base.mkdir("d/sub")
+    base.symlink("f", "d/ln")
+    listing = base.readdir_plus("d")
+    assert [n for n, _ in listing] == ["f", "ln", "sub"]
+    attrs = dict(listing)
+    assert attrs["sub"].is_dir and attrs["ln"].is_symlink
+    assert attrs["f"].size == 3
+    assert base.remove_tree("d") == 4             # f, ln, sub, d
+    assert base.remove_tree("d") == 0             # absence-tolerant
+    assert not base.stat("d").exists
 
 
 # ---------------------------------------------------------------------------

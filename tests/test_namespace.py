@@ -1,0 +1,527 @@
+"""Namespace-overlay tests: overlay reads (readdir/stat/exists answered
+from pending state without sealing), the cross-path bulk-remove fusion
+pass, its fault/region semantics, and the overlay lifecycle.
+
+Determinism technique (as in test_fusion): a ``GateBackend`` wedges the
+engine's single worker on a sentinel op so every subsequently submitted
+op stays *pending* until released — overlay answers and peephole
+decisions become exact, not race-dependent.  ``Boundary`` counts calls at
+the engine↔backend boundary only (a delegating wrapper, not a subclass,
+so the InMemory default remove_tree/readdir_plus loops' *internal* calls
+are not counted)."""
+import errno
+import threading
+from collections import Counter
+
+import pytest
+
+from repro.core import (CannyFS, EagerFlags, FaultInjectingBackend,
+                        FaultPlan, FaultRule, FusionPolicy, InMemoryBackend,
+                        LatencyBackend, LatencyModel, OverlayPolicy,
+                        Transaction, TransactionFailedError, VirtualClock,
+                        run_transaction)
+
+GATE = "gate_sentinel"
+
+BOUNDARY_OPS = frozenset({
+    "mkdir", "rmdir", "create", "unlink", "rename", "symlink", "link",
+    "readlink", "write_at", "write_vec", "read_at", "truncate", "fallocate",
+    "fsync", "chmod", "chown", "utimens", "setxattr", "removexattr", "stat",
+    "readdir", "readdir_plus", "remove_tree",
+})
+
+
+class Boundary:
+    """Counts ops the *engine* issues; inner-loop calls stay invisible."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.counts = Counter()
+
+    def __getattr__(self, name):
+        attr = getattr(self.inner, name)
+        if name in BOUNDARY_OPS:
+            def wrap(*a, **k):
+                self.counts[name] += 1
+                return attr(*a, **k)
+            return wrap
+        return attr
+
+
+class GateBackend(InMemoryBackend):
+    def __init__(self):
+        super().__init__()
+        self.gate = threading.Event()
+
+    def fsync(self, path):
+        if path == GATE:
+            self.gate.wait()
+
+
+def gated_fs(**kw):
+    be = GateBackend()
+    fs = CannyFS(be, workers=1, echo_errors=False, **kw)
+    fs.create(GATE)
+    fs.drain()
+    fs.fsync(GATE)        # wedges the single worker until be.gate.set()
+    return be, fs
+
+
+def release(be, fs):
+    be.gate.set()
+    fs.drain()
+
+
+def prepopulate(backend, n_dirs=3, files_per_dir=4, root="pre"):
+    """A tree the mount has never observed (directly on the backend)."""
+    dirs = [root] + [f"{root}/d{i}" for i in range(n_dirs - 1)]
+    entries = 0
+    for d in dirs:
+        backend.mkdir(d)
+        entries += 1
+    for d in dirs:
+        for j in range(files_per_dir):
+            backend.create(f"{d}/f{j}")
+            entries += 1
+    return dirs, entries
+
+
+# ---------------------------------------------------------------------------
+# overlay reads: readdir / stat from pending state, no seal, no backend
+# ---------------------------------------------------------------------------
+
+def test_readdir_of_in_window_tree_answers_from_overlay():
+    """A directory created through the mount is overlay-complete: readdir
+    answers from pending state while every op underneath is still queued —
+    the worker is wedged, so a backend readdir would deadlock."""
+    be, fs = gated_fs()
+    fs.mkdir("d")
+    fs.write_file("d/a", b"1")
+    fs.write_file("d/b", b"2")
+    fs.mkdir("d/sub")
+    assert fs.readdir("d") == ["a", "b", "sub"]   # would deadlock if sync
+    st = fs.stats
+    assert st.overlay_readdirs == 1
+    assert st.overlay_seals_avoided == 1          # pending ops underneath
+    release(be, fs)
+    assert fs.readdir("d") == ["a", "b", "sub"]   # still overlay (quiescent)
+    assert fs.stats.overlay_readdirs == 2
+    assert fs.stats.overlay_seals_avoided == 1    # nothing pending now
+    fs.close()
+
+
+def test_readdir_does_not_seal_chains_elision_still_fires():
+    """The tentpole semantics: a readdir answered by the overlay leaves
+    the chains beneath it rewritable — the subsequent unlinks still elide
+    the whole create+write chains (before PR 3 the readdir sealed them)."""
+    be, fs = gated_fs()
+    fs.mkdir("t")
+    for i in range(4):
+        fs.write_file(f"t/f{i}", b"x" * 32)
+    names = fs.readdir("t")                       # observation, per-answer
+    for name in names:
+        fs.unlink(f"t/{name}")
+    assert fs.stats.elided_ops >= 8               # create+write per file
+    assert fs.stats.bytes_elided == 4 * 32
+    release(be, fs)
+    assert be.snapshot()["files"] == {GATE: b""}
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_readdir_miss_hits_backend_once_then_overlay():
+    inner = InMemoryBackend()
+    prepopulate(inner, n_dirs=1, files_per_dir=3)
+    be = Boundary(inner)
+    fs = CannyFS(be, echo_errors=False)
+    assert fs.readdir("pre") == ["f0", "f1", "f2"]
+    assert be.counts["readdir_plus"] == 1         # the miss: one fused call
+    assert fs.readdir("pre") == ["f0", "f1", "f2"]
+    assert be.counts["readdir_plus"] == 1         # the hit: overlay
+    assert fs.stats.overlay_readdirs == 1
+    # the listing warmed the stat cache: per-entry stats cost no backend op
+    assert fs.stat("pre/f1").exists
+    assert be.counts["stat"] == 0
+    assert fs.stats.prefetched_stats == 3
+    fs.close()
+
+
+def test_stat_negative_answer_from_complete_parent():
+    """A complete directory proves absence: stat of a missing name under
+    it needs no backend roundtrip (the overlay's negative answer)."""
+    inner = InMemoryBackend()
+    be = Boundary(inner)
+    fs = CannyFS(be, echo_errors=False)
+    fs.mkdir("d")
+    st = fs.stat("d/never_created")
+    assert not st.exists and st.mocked
+    assert be.counts["stat"] == 0
+    assert not fs.exists("d/never_created")
+    fs.close()
+
+
+def test_overlay_disabled_preserves_pre_overlay_behaviour():
+    inner = InMemoryBackend()
+    prepopulate(inner, n_dirs=1, files_per_dir=2)
+    be = Boundary(inner)
+    fs = CannyFS(be, echo_errors=False, overlay=False)
+    assert fs.readdir("pre") == ["f0", "f1"]
+    assert fs.readdir("pre") == ["f0", "f1"]
+    assert be.counts["readdir"] == 2              # every readdir is sync
+    assert be.counts["readdir_plus"] == 0
+    assert fs.stats.overlay_readdirs == 0
+    fs.drain()
+    assert fs.stats.prefetched_stats == 2         # legacy advisory prefetch
+    fs.close()
+
+
+def test_all_off_flags_disable_overlay():
+    fs = CannyFS(InMemoryBackend(), flags=EagerFlags.all_off(),
+                 echo_errors=False, workers=2)
+    assert fs.engine.overlay is None
+    fs.close()
+
+
+def test_makedirs_over_preexisting_dir_demotes_completeness():
+    """A tolerant mkdir that lands on a pre-existing directory must not
+    leave the overlay claiming the dir is (complete and) empty."""
+    inner = InMemoryBackend()
+    inner.mkdir("pre")
+    inner.create("pre/old")
+    fs = CannyFS(inner, echo_errors=False)
+    fs.makedirs("pre")
+    fs.drain()                     # the demote lands at execution
+    assert fs.readdir("pre") == ["old"]
+    fs.close()
+
+
+def test_rename_directory_carries_overlay_state():
+    be, fs = gated_fs()
+    fs.mkdir("d")
+    fs.write_file("d/f", b"1")
+    fs.rename("d", "e")
+    assert fs.readdir("e") == ["f"]               # state moved key-for-key
+    assert fs.stat("d").exists is False
+    release(be, fs)
+    snap = be.snapshot()
+    assert "e" in snap["dirs"] and snap["files"]["e/f"] == b"1"
+    fs.close()
+
+
+def test_failed_op_invalidates_overlay_claims():
+    """A deferred failure drops the overlay's membership claims so the
+    next read consults the backend instead of repeating the lie."""
+    class Bad(InMemoryBackend):
+        def create(self, p):
+            if p.endswith("boom"):
+                raise OSError(errno.EACCES, "injected", p)
+            super().create(p)
+
+    fs = CannyFS(Bad(), echo_errors=False)
+    fs.mkdir("d")
+    fs.create("d/ok")
+    fs.create("d/boom")
+    assert "boom" in fs.readdir("d")              # intended effect, pre-exec
+    fs.drain()                                    # failure lands
+    assert fs.readdir("d") == ["ok"]              # re-listed from backend
+    assert len(fs.ledger) == 1
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# cross-path bulk-remove fusion
+# ---------------------------------------------------------------------------
+
+def test_bulk_remove_collapses_preexisting_tree_fewer_ops_than_entries():
+    """The acceptance criterion: readdir-driven rmtree of a tree the
+    engine has never seen performs fewer backend ops than entries
+    removed — listings are fused readdir_plus calls, per-entry stats hit
+    the warmed cache, and the removals collapse to remove_tree."""
+    inner = InMemoryBackend()
+    dirs, entries = prepopulate(inner, n_dirs=4, files_per_dir=6)
+    be = Boundary(inner)
+    fs = CannyFS(be, echo_errors=False)
+    fs.rmtree("pre")
+    fs.drain()
+    total_ops = sum(be.counts.values())
+    assert total_ops < entries, (total_ops, entries, dict(be.counts))
+    assert fs.stats.bulk_removes >= 1
+    assert be.counts["remove_tree"] >= 1
+    assert be.counts["unlink"] == 0 and be.counts["rmdir"] == 0
+    snap = inner.snapshot()
+    assert not [p for p in list(snap["files"]) + list(snap["dirs"])
+                if p.startswith("pre")]
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_bulk_remove_rolls_up_to_single_fused_call_in_window():
+    """Extract + readdir-driven rmtree inside one unobserved window:
+    chains elide, leaf collapses are absorbed by their parents, and
+    exactly ONE remove_tree reaches the backend.  The dirs are created
+    (and drained) first: a still-provisional mkdir — one the backend has
+    not yet confirmed created the dir fresh — correctly refuses to fuse
+    (see test_provisional_mkdir_blocks_bulk_remove)."""
+    gate_inner = GateBackend()
+    be = Boundary(gate_inner)
+    fs = CannyFS(be, workers=1, echo_errors=False)
+    fs.create(GATE)
+    fs.makedirs("t/u")
+    fs.drain()                    # dirs backend-proven fresh: promoted
+    be.counts.clear()
+    fs.fsync(GATE)                # wedge: everything below stays pending
+    for d in ("t", "t/u"):
+        for i in range(3):
+            fs.write_file(f"{d}/f{i}", b"z" * 16)
+    fs.rmtree("t")                # readdir-driven, fully in-window
+    gate_inner.gate.set()
+    fs.drain()
+    assert fs.stats.bulk_removes == 2             # leaf + rolled-up root
+    assert be.counts["remove_tree"] == 1          # only the root executed
+    assert be.counts["unlink"] == 0 and be.counts["rmdir"] == 0
+    assert be.counts["readdir"] == 0              # all walks via overlay
+    assert be.counts["readdir_plus"] == 0
+    snap = gate_inner.snapshot()
+    assert snap["files"] == {GATE: b""} and snap["dirs"] == {""}
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_provisional_mkdir_blocks_bulk_remove():
+    """The review-fix semantics: while a (tolerant) mkdir is pending, the
+    overlay's complete-and-empty claim is provisional — overlay reads may
+    use it, but a fused remove_tree may not, because the dir could turn
+    out to pre-exist with contents an unfused execution would have
+    preserved behind ENOTEMPTY."""
+    inner = GateBackend()
+    inner.mkdir("pre")            # pre-existing, never observed
+    inner.create("pre/old")
+    inner.write_at("pre/old", 0, b"precious")
+    fs = CannyFS(inner, workers=1, echo_errors=False)
+    fs.create(GATE)
+    fs.drain()
+    fs.fsync(GATE)                # wedge: the mkdir below stays pending
+    fs.makedirs("pre")            # tolerant mkdir over a pre-existing dir
+    fs.write_file("pre/x", b"1")
+    fs.unlink("pre/x")
+    fs.rmdir("pre")               # provisional: must NOT fuse
+    assert fs.stats.bulk_removes == 0
+    inner.gate.set()
+    fs.drain()
+    # exactly the unfused outcome: rmdir failed ENOTEMPTY, data preserved
+    assert inner.snapshot()["files"]["pre/old"] == b"precious"
+    sig = [(e.kind, getattr(e.error, "errno", None))
+           for e in fs.ledger.entries()]
+    assert ("rmdir", errno.ENOTEMPTY) in sig
+    fs.close()
+
+
+def test_stale_listing_cannot_resurrect_removed_dir():
+    """The review-fix for the install race: a listing taken by a readdir
+    in flight while a rmdir (or remove_tree) was admitted behind it must
+    not re-install a complete overlay entry for the removed directory —
+    the late ``install_listing`` is a no-op once the dir's parent delta
+    marks it absent."""
+    inner = InMemoryBackend()
+    inner.mkdir("d")
+    inner.create("d/f")
+    fs = CannyFS(inner, echo_errors=False)
+    assert fs.readdir("d") == ["f"]
+    fs.unlink("d/f")
+    fs.rmdir("d")                     # admit pops the dir's overlay state
+    ov = fs.engine.overlay
+    # the racing readdir's execution lands its (older) listing now
+    ov.install_listing("d", [("f", None)])
+    assert ov.readdir("d") is None    # not resurrected
+    assert ov.lookup("d") is False
+    fs.drain()
+    with pytest.raises(FileNotFoundError):
+        fs.readdir("d")               # backend truth: gone
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_rmdir_of_nonempty_dir_is_not_rewritten():
+    """A present entry with no pending removal means the rmdir must fail
+    ENOTEMPTY exactly as an unfused execution would — no collapse."""
+    be = InMemoryBackend()
+    fs = CannyFS(be, echo_errors=False)
+    fs.mkdir("d")
+    fs.write_file("d/keep", b"1")
+    fs.rmdir("d")
+    fs.drain()
+    assert fs.stats.bulk_removes == 0
+    sig = [(e.kind, getattr(e.error, "errno", None))
+           for e in fs.ledger.entries()]
+    assert sig == [("rmdir", errno.ENOTEMPTY)]
+    assert be.snapshot()["files"]["d/keep"] == b"1"
+    fs.close()
+
+
+def test_bulk_remove_requires_overlay_known_subtree():
+    """An unlisted pre-existing directory is not overlay-known: rmdir of
+    it takes the plain path (and correctly fails while non-empty)."""
+    inner = InMemoryBackend()
+    inner.mkdir("pre")
+    inner.create("pre/f")
+    fs = CannyFS(inner, echo_errors=False)
+    fs.unlink("pre/f")            # engine knows the unlink...
+    fs.rmdir("pre")               # ...but never listed pre: no collapse
+    fs.drain()
+    assert fs.stats.bulk_removes == 0
+    assert "pre" not in inner.snapshot()["dirs"]
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_bulk_remove_same_region_only():
+    """Pending removals from another region are never elided: the fused
+    call must not adopt work whose failure belongs to a different ledger
+    scope.  The rmdir falls back to the plain per-entry path."""
+    be, fs = gated_fs()
+    fs.mkdir("t")
+    fs.write_file("t/f", b"1")
+    fs.unlink("t/f")              # region None, pending (gated)
+    txn = Transaction(fs)
+    txn.__enter__()
+    fs.rmdir("t")                 # region txn: must not elide None-region ops
+    assert fs.stats.bulk_removes == 0
+    release(be, fs)
+    txn.__exit__(None, None, None)
+    assert "t" not in be.snapshot()["dirs"]
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_bulk_remove_fault_fires_per_fused_call_and_recovers():
+    """One fused remove_tree of N collapsed removals is a single matching
+    call for the fault plan; its failure invalidates every covered
+    overlay claim, so the retried rmtree re-observes the backend and
+    converges once the outage ends."""
+    inner = InMemoryBackend()
+    prepopulate(inner, n_dirs=2, files_per_dir=3)
+    plan = FaultPlan([FaultRule(error="EIO", ops=("remove_tree",),
+                                max_failures=1)])
+    fs = CannyFS(FaultInjectingBackend(inner, plan), echo_errors=False)
+
+    def body(fs):
+        fs.rmtree("pre")
+
+    run_transaction(fs, body, retries=3)
+    fs.drain()
+    assert plan.injected == 1
+    assert fs.stats.retries >= 1
+    snap = inner.snapshot()
+    assert not [p for p in list(snap["files"]) + list(snap["dirs"])
+                if p.startswith("pre")]
+    fs.close()
+
+
+def test_bulk_remove_respects_fusion_policy_off():
+    inner = InMemoryBackend()
+    prepopulate(inner, n_dirs=2, files_per_dir=2)
+    be = Boundary(inner)
+    fs = CannyFS(be, echo_errors=False,
+                 fusion=FusionPolicy(bulk_remove=False))
+    fs.rmtree("pre")
+    fs.drain()
+    assert fs.stats.bulk_removes == 0
+    assert be.counts["remove_tree"] == 0
+    assert be.counts["unlink"] == 4 and be.counts["rmdir"] == 2
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_quota_released_by_fused_remove_tree():
+    """The Quota decorator's uncharge mirror of the fused call: bytes and
+    inodes charged during extract are released by one remove_tree."""
+    from repro.core import QuotaBackend
+    q = QuotaBackend(InMemoryBackend(), budget_bytes=1 << 20, max_inodes=64)
+    fs = CannyFS(q, echo_errors=False)
+    fs.makedirs("t")
+    for i in range(4):
+        fs.write_file(f"t/f{i}", b"q" * 100)
+    fs.drain()
+    assert q.used == 400 and q.inodes_used == 5
+    fs.rmtree("t")
+    fs.drain()
+    assert fs.stats.bulk_removes >= 1
+    assert q.used == 0 and q.inodes_used == 0
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# overlay lifecycle: populated at submit, cleared on rollback/commit
+# ---------------------------------------------------------------------------
+
+def test_overlay_dropped_at_commit():
+    inner = InMemoryBackend()
+    be = Boundary(inner)
+    fs = CannyFS(be, echo_errors=False)
+    with Transaction(fs):
+        fs.mkdir("out")
+        fs.write_file("out/x", b"1")
+        assert fs.readdir("out") == ["x"]         # overlay answer in-window
+    assert fs.engine.overlay.readdir("out") is None   # delta dropped
+    assert fs.readdir("out") == ["x"]             # re-listed from backend
+    assert be.counts["readdir_plus"] == 1
+    fs.close()
+
+
+def test_overlay_cleared_on_rollback_and_retry_converges():
+    """Rollback removes the region's outputs directly against the backend;
+    the overlay must forget its claims or the retry would trust them."""
+    calls = {"n": 0}
+
+    class FlakyOnce(InMemoryBackend):
+        def write_at(self, p, o, d):
+            if p == "out/f1" and calls["n"] == 0:
+                calls["n"] += 1
+                raise OSError(errno.EIO, "transient", p)
+            return super().write_at(p, o, d)
+
+    be = FlakyOnce()
+    fs = CannyFS(be, echo_errors=False)
+
+    def body(fs):
+        fs.makedirs("out")
+        for i in range(3):
+            fs.write_file(f"out/f{i}", b"v")
+        assert sorted(fs.readdir("out")) == ["f0", "f1", "f2"]
+
+    run_transaction(fs, body, retries=2)
+    fs.close()
+    snap = be.snapshot()
+    assert sorted(p for p in snap["files"] if p.startswith("out/")) == \
+        ["out/f0", "out/f1", "out/f2"]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: overlay keeps the removal benchmark inside the window
+# ---------------------------------------------------------------------------
+
+def test_readdir_driven_rmtree_beats_overlay_off_on_remote_backend():
+    """The paper's removal benchmark, readdir-driven, against the latency
+    model: overlay-on must issue strictly fewer remote roundtrips than
+    both overlay-off and the number of entries removed."""
+    def build(overlay):
+        inner = InMemoryBackend()
+        dirs, entries = prepopulate(inner, n_dirs=4, files_per_dir=8)
+        clock = VirtualClock()
+        remote = LatencyBackend(
+            inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0),
+            clock=clock)
+        fs = CannyFS(remote, workers=8, echo_errors=False, overlay=overlay)
+        fs.rmtree("pre")
+        fs.close()
+        snap = inner.snapshot()
+        assert not [p for p in list(snap["files"]) + list(snap["dirs"])
+                    if p.startswith("pre")]
+        return entries, remote.op_count, fs.stats
+
+    entries, ops_on, st_on = build(overlay=None)
+    _, ops_off, st_off = build(overlay=False)
+    assert st_on.bulk_removes >= 1 and st_off.bulk_removes == 0
+    assert ops_on < entries
+    assert ops_on < ops_off
