@@ -1,0 +1,167 @@
+"""CI regression guard for PR 4's dispatch hot path + same-breath bulk
+removal.  Emits ``BENCH_pr4.json`` and FAILS (exit 1) when either
+tentpole regressed:
+
+1. **Dispatch scaling** — the extraction op stream runs on the virtual
+   clock at 1 worker and at 8 workers.  Each backend call 'sleeps' its
+   modelled latency on the executing worker's *per-thread* virtual
+   timeline, so ``VirtualClock.makespan()`` (the busiest worker's
+   accumulated wait) is the schedule's critical path and
+   ``ops / makespan`` the dispatch throughput — deterministic, no real
+   sleeps.  With per-shard ready queues + work stealing the 8-worker pool
+   spreads the load and must clear >= 2x the single-worker throughput;
+   a dispatch bottleneck (or a stealing bug starving shards) collapses
+   the ratio toward 1x.  Fusion is off for this phase so both runs
+   execute the identical op count.
+
+2. **Same-breath extract_then_rm** — extraction and readdir-driven
+   removal in one breath (mkdirs still pending at fuse time): the
+   exec-time re-verification pass must recover the paper's headline
+   collapse.  Real (small) latency so the queue genuinely backs up, as
+   in the fusion table.  Fails if ``bulk_removes == 0`` or the removal
+   degenerated to >= one backend op per entry.
+
+Scale with REPRO_BENCH_SCALE as usual (CI runs 0.1).
+
+    PYTHONPATH=src REPRO_BENCH_SCALE=0.1 python -m benchmarks.dispatch_guard
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from repro.core import (CannyFS, InMemoryBackend, LatencyBackend,
+                        LatencyModel, VirtualClock)
+
+from .workloads import TreeSpec, extract_then_rm, extract_tree, synth_tree
+
+MIN_SPEEDUP = 2.0
+
+
+class PacedVirtualClock(VirtualClock):
+    """Virtual accounting plus a real sleep scaled down by ``pace``.
+
+    The throughput *measure* stays virtual (per-thread makespan), but a
+    zero-real-cost op stream would leave the worker distribution to the
+    OS scheduler: one GIL-holding worker can drain every shard before the
+    parked ones wake, collapsing the measured speedup to ~1x on a bad
+    scheduling roll.  The scaled real sleep makes each op genuinely block
+    (releasing the GIL), so the 8-worker pool actually interleaves and
+    the makespan reflects the dispatch layer, not scheduler luck — at
+    1/20th real time, a 1 ms modelled roundtrip costs 50 us of wall
+    clock."""
+
+    def __init__(self, pace: float = 0.05):
+        super().__init__()
+        self.pace = pace
+
+    def sleep(self, dt: float) -> None:
+        super().sleep(dt)
+        if dt > 0:
+            time.sleep(dt * self.pace)
+
+
+def dispatch_throughput(dirs, files, workers: int) -> dict:
+    clock = PacedVirtualClock()
+    remote = LatencyBackend(
+        InMemoryBackend(),
+        LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0, seed=4),
+        clock=clock)
+    fs = CannyFS(remote, max_inflight=4000, workers=workers,
+                 fusion=False)   # fixed op count: pure dispatch measure
+    extract_tree(fs, dirs, files)
+    fs.close()
+    st = fs.stats
+    makespan = clock.makespan()
+    return {
+        "workers": workers,
+        "ops": st.executed,
+        "makespan_virtual_s": makespan,
+        # per-worker virtual busy seconds: how evenly stealing spread the
+        # load (the makespan is this list's max)
+        "worker_virtual_s": sorted(clock.thread_seconds().values(),
+                                   reverse=True),
+        "ops_per_virtual_s": st.executed / makespan if makespan else 0.0,
+        "steals": st.steals,
+        "parks": st.parks,
+        "ledger": len(fs.ledger),
+    }
+
+
+def same_breath_extract_rm(dirs, files) -> dict:
+    inner = InMemoryBackend()
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=3.0, data_ms=3.0, jitter_sigma=0.0,
+                            server_slots=8, seed=9))
+    fs = CannyFS(remote, max_inflight=4000, workers=8)
+    extract_then_rm(fs, dirs, files)
+    fs.close()
+    st = fs.stats
+    snap = inner.snapshot()
+    present = set(snap["files"]) | set(snap["dirs"])
+    leftover = [p for p in (*dirs, *(p for p, _ in files)) if p in present]
+    return {
+        "entries": len(dirs) + len(files),    # the workload manifest
+        "backend_ops": remote.op_count,
+        "bulk_removes": st.bulk_removes,
+        "bulk_reverify_promoted": st.bulk_reverify_promoted,
+        "bulk_reverify_demoted": st.bulk_reverify_demoted,
+        "elided_ops": st.elided_ops,
+        "adaptive_max_bytes": st.adaptive_max_bytes,
+        "leftover": len(leftover),
+        "ledger": len(fs.ledger),
+    }
+
+
+def main() -> int:
+    spec = TreeSpec(n_files=240, n_dirs=20).scaled()
+    dirs, files = synth_tree(spec)
+    one = dispatch_throughput(dirs, files, workers=1)
+    eight = dispatch_throughput(dirs, files, workers=8)
+    ratio = (eight["ops_per_virtual_s"] / one["ops_per_virtual_s"]
+             if one["ops_per_virtual_s"] else 0.0)
+    breath = same_breath_extract_rm(dirs, files)
+    report = {
+        "dispatch": {"w1": one, "w8": eight, "speedup": ratio,
+                     "min_speedup": MIN_SPEEDUP},
+        "extract_then_rm": breath,
+    }
+    with open("BENCH_pr4.json", "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"dispatch: {one['ops']} ops  w1={one['ops_per_virtual_s']:.0f}/s "
+          f"w8={eight['ops_per_virtual_s']:.0f}/s  speedup={ratio:.2f}x "
+          f"(steals={eight['steals']} parks={eight['parks']})")
+    print(f"extract_then_rm: entries={breath['entries']} "
+          f"backend_ops={breath['backend_ops']} "
+          f"bulk_removes={breath['bulk_removes']} "
+          f"reverify_promoted={breath['bulk_reverify_promoted']} "
+          f"demoted={breath['bulk_reverify_demoted']}")
+    ok = True
+    if ratio < MIN_SPEEDUP:
+        print(f"FAIL: 8-worker dispatch throughput is {ratio:.2f}x the "
+              f"single worker (need >= {MIN_SPEEDUP}x) — the sharded "
+              "ready queues / work stealing regressed", file=sys.stderr)
+        ok = False
+    if one["ledger"] or eight["ledger"] or breath["ledger"]:
+        print("FAIL: deferred errors during a clean run", file=sys.stderr)
+        ok = False
+    if breath["bulk_removes"] == 0:
+        print("FAIL: bulk_removes == 0 — the same-breath extract_then_rm "
+              "workload no longer fuses its removal (exec-time "
+              "re-verification regressed)", file=sys.stderr)
+        ok = False
+    if breath["backend_ops"] >= breath["entries"]:
+        print(f"FAIL: {breath['backend_ops']} backend ops for "
+              f"{breath['entries']} manifest entries — the one-breath "
+              "removal left the optimization window", file=sys.stderr)
+        ok = False
+    if breath["leftover"]:
+        print(f"FAIL: {breath['leftover']} manifest entries survived the "
+              "removal", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

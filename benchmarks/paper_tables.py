@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core import CannyFS, EagerFlags, InMemoryBackend
 
-from .workloads import (TreeSpec, bench_scale, extract_tree,
+from .workloads import (TreeSpec, bench_scale, extract_then_rm, extract_tree,
                         extract_tree_chunked, fusion_stats,
                         make_remote_backend, remove_tree_manifest,
                         run_extraction, run_removal, synth_tree)
@@ -180,7 +180,13 @@ def fusion_table() -> list:
       stats hit the warmed cache, and the bulk-remove pass collapses the
       unlinks+rmdirs into remove_tree calls (bulk_removes > 0, far fewer
       backend ops than entries); the ``cannyfs-nooverlay`` column is the
-      ablation showing exactly what the overlay buys.
+      ablation showing exactly what the overlay buys;
+    * ``extract_then_rm`` — extraction and *readdir-driven* removal in
+      ONE breath: the mkdirs are still pending when the rmdirs arrive,
+      so the collapse rests on provisional overlay claims re-verified at
+      execution time (PR 4, ROADMAP m).  bulk_removes > 0 here is the
+      recovered headline collapse — pre-PR 4 this workload forfeited the
+      fused removal entirely.
 
     Latency is real (slept, small — scale with REPRO_BENCH_SCALE) so the
     remote queue genuinely backs up: that pending backlog is exactly what
@@ -208,6 +214,8 @@ def fusion_table() -> list:
                                    remove_tree_manifest(fs, dirs, files))),
         "rmtree_readdir": (lambda be: populate_tree(be, dirs, files),
                            lambda fs: rmtree_readdir(fs, "src")),
+        "extract_then_rm": (None,
+                            lambda fs: extract_then_rm(fs, dirs, files)),
     }
     rows = []
     for wname, (prepare, body) in workloads.items():

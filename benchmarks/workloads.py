@@ -144,6 +144,18 @@ def rmtree_readdir(fs: CannyFS, root: str = "src") -> None:
     fs.rmtree(root)
 
 
+def extract_then_rm(fs: CannyFS, dirs, files, chunk: int = 8192) -> None:
+    """Extract and readdir-driven rmtree in ONE breath — no drain between,
+    so every mkdir is typically still pending when the removal walks the
+    tree.  The paper's headline collapse at its hardest: file chains elide
+    outright, readdirs answer from provisional overlay claims, and the
+    rmdirs fuse into a single re-verified ``remove_tree`` backend call
+    (exec-time promotion; pre-PR 4 the provisional mkdirs forced the
+    per-entry fallback)."""
+    extract_tree_chunked(fs, dirs, files, chunk=chunk)
+    fs.rmtree("src")
+
+
 def fusion_stats(fs: CannyFS) -> dict:
     """The optimizer's counters for one run, ready for a derived column."""
     st = fs.stats

@@ -42,13 +42,18 @@ Engine layers (see ``core/engine.py`` for the diagram)
 ------------------------------------------------------
 
 The engine itself is scheduler (``core/scheduler.py``: path-hash-sharded
-per-path FIFO + DAG) / optimizer (``core/fusion.py``: the transactional
-op-fusion pass — coalesce writes into ``write_vec``, fold metadata
+per-path FIFO + DAG, with per-shard ready deques and work stealing on
+the dispatch path — ``CannyFS(work_stealing=False)`` pins workers to
+their own shards) / optimizer (``core/fusion.py``: the transactional
+op-fusion pass — coalesce writes into ``write_vec`` sized to ~2x the
+backend's measured bandwidth-delay product when adaptive, fold metadata
 last-wins, elide chains unlinked in-window, collapse cross-path removals
-into one ``remove_tree``; control via ``CannyFS(fusion=FusionPolicy(...))``
-or ``fusion=False``) / namespace overlay (``core/namespace.py``: the
-write-back directory-tree delta that answers ``readdir``/``stat``/
-``exists`` from pending state without sealing chains; control via
+into one ``remove_tree`` with exec-time re-verification under
+still-provisional mkdirs; control via ``CannyFS(fusion=
+FusionPolicy(...))`` or ``fusion=False``) / namespace overlay
+(``core/namespace.py``: the write-back directory-tree delta that answers
+``readdir``/``stat``/``exists``/``walk`` from pending state without
+sealing chains, cached listings LRU-bounded; control via
 ``CannyFS(overlay=OverlayPolicy(...))`` or ``overlay=False``) / executor
 (``core/executor.py``: pool | thread_per_op).  Fault rules fire per
 *fused* backend call (one ``write_vec`` or ``remove_tree`` of N engine
@@ -66,7 +71,7 @@ from .faults import (FaultInjectingBackend, FaultPlan, FaultRule,
 from .flags import EagerFlags, N_FLAGS
 from .fs import CannyFS, CannyFile
 from .fusion import FusionPolicy
-from .namespace import NamespaceOverlay, OverlayPolicy
+from .namespace import NamespaceOverlay, OverlayPolicy, RemoveWitness
 from .transaction import Transaction, run_transaction
 
 __all__ = [
@@ -76,7 +81,7 @@ __all__ = [
     "InMemoryBackend",
     "LatencyBackend", "LatencyModel", "LedgerEntry", "LocalBackend", "N_FLAGS",
     "NamespaceOverlay", "OpCancelledError", "OverlayPolicy", "QuotaBackend",
-    "RealClock", "RollbackLeakError",
+    "RealClock", "RemoveWitness", "RollbackLeakError",
     "ShortWriteError", "StatResult",
     "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
     "is_under", "make_fault", "norm_path", "parent_of", "run_transaction",

@@ -580,11 +580,20 @@ class VirtualClock(Clock):
     """Lock-protected simulated time.  ``sleep`` returns immediately after
     crediting the virtual elapsed time; ``now()`` is the total simulated
     seconds 'slept' so far across all threads (an upper bound on what a
-    serial execution would have waited — per-op schedules stay exact)."""
+    serial execution would have waited — per-op schedules stay exact).
+
+    Virtual elapsed time is additionally accounted *per thread*:
+    ``makespan()`` is the busiest single thread's accumulated wait, i.e.
+    the parallel schedule's critical path when the executor keeps its
+    workers balanced.  ``ops / makespan()`` is therefore a deterministic
+    dispatch-throughput measure that genuinely rewards spreading ready
+    ops across workers (the dispatch_guard benchmark) without a single
+    real sleep."""
 
     def __init__(self, start: float = 0.0):
         self._lock = threading.Lock()
         self._now = float(start)
+        self._per_thread: dict[int, float] = {}
 
     def now(self) -> float:
         with self._lock:
@@ -593,8 +602,21 @@ class VirtualClock(Clock):
     def sleep(self, dt: float) -> None:
         if dt <= 0:
             return
+        tid = threading.get_ident()
         with self._lock:
             self._now += dt
+            self._per_thread[tid] = self._per_thread.get(tid, 0.0) + dt
+
+    def makespan(self) -> float:
+        """The longest per-thread accumulated virtual wait (0.0 when no
+        thread has slept yet)."""
+        with self._lock:
+            return max(self._per_thread.values(), default=0.0)
+
+    def thread_seconds(self) -> dict[int, float]:
+        """Per-thread virtual seconds slept (thread ident -> seconds)."""
+        with self._lock:
+            return dict(self._per_thread)
 
 
 @dataclass
@@ -629,7 +651,18 @@ class LatencyModel:
 
 
 class LatencyBackend(StorageBackend):
-    """Decorator that makes any backend behave like remote storage."""
+    """Decorator that makes any backend behave like remote storage.
+
+    Besides injecting the delays it also *measures* them: every executed
+    call updates an EWMA of the round-trip time (metadata ops: the whole
+    latency) and of the achieved bandwidth (data ops: payload over the
+    service time past the RTT).  ``bdp_bytes()`` exposes the resulting
+    bandwidth-delay product, which the optimizer uses to size write
+    coalescing and bulk-remove batching to ~2x BDP instead of a fixed
+    constant (ROADMAP item i) — the transactional window stays just wide
+    enough that one fused op keeps the pipe full."""
+
+    BDP_ALPHA = 0.2   # EWMA smoothing for the measured RTT / bandwidth
 
     def __init__(self, inner: StorageBackend, model: LatencyModel | None = None,
                  clock: Clock | None = None):
@@ -641,14 +674,44 @@ class LatencyBackend(StorageBackend):
         self._slots = threading.Semaphore(self.model.server_slots)
         self.op_count = 0
         self.busy_s = 0.0  # total server-side service time (for utilization)
+        self._rtt_ewma: Optional[float] = None   # measured round-trip time
+        self._bw_ewma: Optional[float] = None    # measured bytes/second
 
     def _delay(self, kind: str, nbytes: int = 0):
+        a = self.BDP_ALPHA
         with self._rng_lock:
             lat = self.model.latency_s(self._rng, kind, nbytes)
             self.op_count += 1
             self.busy_s += lat
+            if nbytes > 0:
+                # bandwidth sample = payload over the service time past the
+                # RTT; a jittered-down draw can land under the RTT EWMA,
+                # and dividing by that sliver would explode the estimate —
+                # skip non-positive samples instead
+                svc = lat - (self._rtt_ewma or 0.0)
+                if svc > 0:
+                    bw = nbytes / svc
+                    self._bw_ewma = (bw if self._bw_ewma is None
+                                     else (1 - a) * self._bw_ewma + a * bw)
+            else:
+                self._rtt_ewma = (lat if self._rtt_ewma is None
+                                  else (1 - a) * self._rtt_ewma + a * lat)
         with self._slots:
             self.clock.sleep(lat)
+
+    def bdp_bytes(self) -> Optional[float]:
+        """Measured bandwidth-delay product in bytes, or None before the
+        first metadata round-trip has been observed.  Until a data op has
+        calibrated the bandwidth EWMA the model's nominal rate stands in.
+        Lock-free reads: float loads are atomic and a slightly stale EWMA
+        only shifts the adaptive clamp by one smoothing step."""
+        rtt = self._rtt_ewma
+        if rtt is None:
+            return None
+        bw = self._bw_ewma
+        if bw is None:
+            bw = self.model.bandwidth_mb_s * 1e6
+        return rtt * bw
 
     def __getattr__(self, name):  # delegate non-op attrs
         return getattr(self.inner, name)

@@ -8,26 +8,35 @@ Architecture (one op's life, left to right)::
         +---------------v-----------------------------------------+
         |  OpScheduler (core/scheduler.py)                        |
         |  per-path FIFO + cross-path DAG edges; submission state |
-        |  sharded by path hash; in-flight budget; ready queue    |
+        |  AND ready queues sharded by path hash; in-flight       |
+        |  budget; poison/close                                   |
         +---------------+-----------------------------------------+
                         | pending tip / chain, under shard+op locks
         +---------------v-----------------------------------------+
         |  Fuser (core/fusion.py)                                 |
         |  peephole pass over the pending stream:                 |
         |    coalesce write_at -> one vectored write_vec          |
+        |      (cap ~2x the backend's measured bandwidth-delay    |
+        |       product when adaptive, else FusionPolicy.max_bytes)|
         |    fold chmod/utimens/truncate to last-wins             |
         |    elide create+write chains unlinked in-window         |
         |    collapse cross-path unlink/rmdir -> one remove_tree  |
+        |      (provisional dirs fuse too: the op re-verifies the |
+        |       overlay claim at exec via a RemoveWitness)        |
         +------+--------+-----------------------------------------+
-               |        | ready ops
+               |        | per-shard ready deques
         +------v------+ |   +-------------------------------------+
         | Namespace   | +--->  PoolExecutor | ThreadPerOp         |
         | Overlay     |     |  (core/executor.py)                 |
-        | (namespace  |     |  runs op.fn against the backend;    |
-        |  .py)       |     |  completion releases dependents     |
-        +-------------+     +-------------------------------------+
-          mirrors every admitted op as a directory-tree delta;
-          readdir/stat/exists answered here never seal a chain
+        | (namespace  |     |  worker i of W owns shards s with   |
+        |  .py)       |     |  s % W == i, steals from the rest   |
+        +-------------+     |  when dry, parks when all empty;    |
+          mirrors every     |  completion releases dependents     |
+          admitted op as a  +-------------------------------------+
+          directory-tree delta; readdir/stat/exists/walk answered
+          here never seal a chain; cached listings are LRU-bounded
+          (OverlayPolicy.max_cached_listings; eviction demotes
+          completeness only, never pending membership)
 
 Semantics (paper §2–§3):
 
@@ -54,8 +63,12 @@ Semantics (paper §2–§3):
   pending vectored op), ``folded_meta`` (last-wins metadata folds),
   ``elided_ops``/``bytes_elided`` (ops/bytes deleted by elision),
   ``overlay_readdirs``/``overlay_seals_avoided`` (namespace reads that
-  never reached the backend / that left pending chains rewritable) and
-  ``bulk_removes`` (cross-path removal collapses).
+  never reached the backend / that left pending chains rewritable),
+  ``bulk_removes`` (cross-path removal collapses),
+  ``bulk_reverify_promoted``/``bulk_reverify_demoted`` (fused removals
+  confirmed / fallen back at execution time), ``steals``/``parks``
+  (dispatch-layer load balancing) and ``adaptive_max_bytes`` (the
+  latest BDP-derived coalescing clamp).
 * Failures of background ops land in the ErrorLedger; optional
   abort_on_error poisons the engine.  ``max_inflight`` bounds queued ops
   (fused absorptions don't consume new slots — coalescing is also
@@ -99,6 +112,14 @@ class EngineStats:
     overlay_readdirs: int = 0    # readdirs answered from the overlay
     overlay_seals_avoided: int = 0  # of those, with pending ops underneath
     bulk_removes: int = 0        # cross-path removals fused to remove_tree
+    bulk_reverify_promoted: int = 0  # fused removals whose provisional dirs
+    #                                  all proved fresh at execution time
+    bulk_reverify_demoted: int = 0   # ...that fell back per-entry instead
+    # -- dispatch counters (sharded ready queues + work stealing) ----------
+    steals: int = 0              # ops popped from a non-owned shard's deque
+    parks: int = 0               # worker waits in the all-shards-empty lot
+    # -- adaptive fusion sizing --------------------------------------------
+    adaptive_max_bytes: int = 0  # latest BDP-derived write-coalescing clamp
     # -- fault / trace counters (chaos + error-path observability) --------
     deferred_errors: int = 0     # background failures recorded in the ledger
     injected_faults: int = 0     # of those, carried an `.injected` tag
@@ -188,7 +209,8 @@ class EagerIOEngine:
                  abort_on_error: bool = False,
                  ledger: ErrorLedger | None = None,
                  fusion: FusionPolicy | bool | None = None,
-                 overlay: OverlayPolicy | bool | None = None):
+                 overlay: OverlayPolicy | bool | None = None,
+                 work_stealing: bool = True):
         self.backend = backend
         self.flags = flags or EagerFlags()
         self.max_inflight = int(max_inflight)
@@ -216,8 +238,15 @@ class EagerIOEngine:
             ov_policy = overlay
         self.overlay: NamespaceOverlay | None = (
             NamespaceOverlay(ov_policy) if ov_policy.enabled else None)
-        self._sched = OpScheduler(self.stats, max_inflight=self.max_inflight)
-        self._fuser = Fuser(self.fusion, self.stats)
+        self._sched = OpScheduler(self.stats, max_inflight=self.max_inflight,
+                                  work_stealing=work_stealing)
+        # adaptive fusion sizing: a latency-measuring backend anywhere in
+        # the decorator stack exposes its bandwidth-delay product (the
+        # decorators delegate unknown attrs inward); without one the
+        # fixed FusionPolicy bounds stand
+        bdp = getattr(backend, "bdp_bytes", None)
+        self._fuser = Fuser(self.fusion, self.stats,
+                            bdp_source=bdp if callable(bdp) else None)
         self._closed = False
         self._executor = executor
         self._exec = make_executor(executor, self._sched, self._execute,
@@ -304,13 +333,58 @@ class EagerIOEngine:
     def prepare_rmtree(self, path: str, *, region: object = None):
         """Cross-path bulk-remove peephole: collapse the pending removals
         under ``path`` into one vectored ``remove_tree`` call.  Returns
-        the covered paths (the fused op's co-paths: dependency edges and
-        error-invalidation scope) when the overlay proves the subtree, or
-        None when the caller must submit a plain rmdir."""
+        the fused op's ``BulkRemovePayload`` (covered co-paths: dependency
+        edges and error-invalidation scope; per-entry fallback manifest;
+        re-verification witness) when the overlay proves — or, with
+        ``FusionPolicy.reverify_provisional``, provisionally claims — the
+        subtree, or None when the caller must submit a plain rmdir."""
         if self._sched.poisoned or self.overlay is None:
             return None
         return self._fuser.prepare_bulk_remove(self._sched, self.overlay,
                                                norm_path(path), region)
+
+    def run_bulk_remove(self, payload) -> int:
+        """Execute one fused removal (called from the fused op's fn on a
+        worker thread).  The op's DAG edges ordered it after every mkdir
+        it depends on, so the witness verdict is final here: promoted (or
+        no witness — the tree was backend-proven at fuse time) runs the
+        single vectored ``remove_tree``; demoted falls back to per-entry
+        removals, byte-identical to the unfused execution — children
+        before parents, absence-tolerant (elided creates mean an entry may
+        never have existed), with the final rmdir of the root left to
+        fail ENOTEMPTY exactly as the plain rmdir would have when the
+        demoted directory turns out to hold pre-existing entries."""
+        ov = self.overlay
+        w = payload.witness
+        verdict = ("clean" if w is None or ov is None
+                   else ov.resolve_witness(w))
+        if verdict != "demoted":
+            if verdict == "promoted":
+                with self._sched._ctl:
+                    self.stats.bulk_reverify_promoted += 1
+            return self.backend.remove_tree(payload.root)
+        with self._sched._ctl:
+            self.stats.bulk_reverify_demoted += 1
+        b = self.backend
+        removed = 0
+        for p, is_dir in payload.fallback_order():
+            try:
+                (b.rmdir if is_dir else b.unlink)(p)
+                removed += 1
+            except OSError:
+                # per-entry failures are independent, as unfused execution's
+                # would have been: a surviving entry (ENOTEMPTY on a demoted
+                # subdir, EACCES, ...) keeps the root non-empty, so the
+                # final rmdir below reports the failure for the whole op —
+                # aborting here would strand siblings the unfused rmdirs
+                # would still have removed
+                pass
+        try:
+            b.rmdir(payload.root)
+            removed += 1
+        except FileNotFoundError:
+            pass
+        return removed
 
     # ------------------------------------------------------------------
     # barriers
@@ -416,6 +490,12 @@ class EagerIOEngine:
                 self.stat_cache.invalidate(p)
                 if self.overlay is not None:
                     self.overlay.invalidate(p)
+        if self.overlay is not None:
+            # a fused removal's re-verification witness is spent once the
+            # op is done (ran, fell back, was elided into a parent, failed
+            # or was cancelled) — unhook it from the overlay's watchers
+            self.overlay.release_witness(getattr(op.payload, "witness",
+                                                 None))
         with self._sched._ctl:   # exact counters (see scheduler lock note)
             self.stats.exec_latency_s += op.finished_at - op.started_at
             self.stats.executed += 1

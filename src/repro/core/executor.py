@@ -22,19 +22,26 @@ EXECUTOR_MODES = ("pool", "thread_per_op")
 
 
 class PoolExecutor:
+    """Workers are numbered: worker ``i`` of ``W`` pulls from its owned
+    ready-queue shards first and steals from the rest when dry (see the
+    scheduler's dispatch architecture)."""
+
     def __init__(self, sched: OpScheduler, run: Callable[[_Op], None],
                  workers: int = 32):
         self._threads = []
-        for i in range(max(1, int(workers))):
-            t = threading.Thread(target=self._worker_loop, args=(sched, run),
+        nworkers = max(1, int(workers))
+        for i in range(nworkers):
+            t = threading.Thread(target=self._worker_loop,
+                                 args=(sched, run, i, nworkers),
                                  name=f"cannyfs-w{i}", daemon=True)
             t.start()
             self._threads.append(t)
 
     @staticmethod
-    def _worker_loop(sched: OpScheduler, run: Callable[[_Op], None]) -> None:
+    def _worker_loop(sched: OpScheduler, run: Callable[[_Op], None],
+                     worker: int, workers: int) -> None:
         while True:
-            op = sched.next_ready()
+            op = sched.next_ready(worker, workers)
             if op is None:
                 return
             run(op)

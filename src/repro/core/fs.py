@@ -100,13 +100,14 @@ class CannyFS:
                  abort_on_error: bool = False,
                  echo_errors: bool = True,
                  fusion: FusionPolicy | bool | None = None,
-                 overlay: OverlayPolicy | bool | None = None):
+                 overlay: OverlayPolicy | bool | None = None,
+                 work_stealing: bool = True):
         self.flags = flags or EagerFlags()
         self.engine = EagerIOEngine(
             backend, flags=self.flags, max_inflight=max_inflight,
             workers=workers, executor=executor, abort_on_error=abort_on_error,
             ledger=ErrorLedger(echo=echo_errors), fusion=fusion,
-            overlay=overlay)
+            overlay=overlay, work_stealing=work_stealing)
         self.backend = backend
         self._txn_lock = threading.Lock()
         self._txn = None  # active Transaction (set by Transaction.__enter__)
@@ -237,12 +238,12 @@ class CannyFS:
         # Collapses roll up through the rmtree recursion: leaf dirs fuse
         # first, parents then absorb their children's fused removals.
         if self.flags.is_eager("rmdir") and self.flags.is_eager("remove_tree"):
-            covered = self.engine.prepare_rmtree(p, region=txn)
-            if covered is not None:
-                b = self.backend
-                self._submit("remove_tree", (p, *covered),
-                             lambda: b.remove_tree(p), cache_kw={},
-                             region=txn)
+            prep = self.engine.prepare_rmtree(p, region=txn)
+            if prep is not None:
+                eng = self.engine
+                self._submit("remove_tree", (p, *prep.covered),
+                             lambda: eng.run_bulk_remove(prep), cache_kw={},
+                             region=txn, payload=prep)
                 return
         b = self.backend
         self._submit("rmdir", (p,), lambda: b.rmdir(p), cache_kw={},
@@ -551,8 +552,29 @@ class CannyFS:
         self.rmdir(path)
 
     def walk(self, path: str = ""):
-        """Generator of (dir, subdirs, files) — `find`/`du`-style traversal."""
+        """Generator of (dir, subdirs, files) — `find`/`du`-style traversal.
+
+        Overlay fast path: a directory whose membership *and* child kinds
+        are fully determined by pending state or a cached listing yields
+        without a single backend roundtrip or seal (counted in
+        ``overlay_readdirs``); any other directory falls back to the
+        readdir + per-entry stat walk for that directory only — each
+        subdirectory re-tries the fast path."""
         path = norm_path(path)
+        ov = self.engine.overlay
+        if ov is not None and ov.policy.readdir_overlay:
+            kinds = ov.listing_kinds(path)
+            if kinds is not None:
+                dirs, files = kinds
+                stats = self.engine.stats
+                stats.overlay_readdirs += 1
+                if self.engine._sched.has_pending_under(path):
+                    stats.overlay_seals_avoided += 1
+                yield path, dirs, files
+                for d in dirs:
+                    child = f"{path}/{d}" if path else d
+                    yield from self.walk(child)
+                return
         names = self.readdir(path)
         dirs, files = [], []
         for name in names:

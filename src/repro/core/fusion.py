@@ -23,7 +23,11 @@ peephole rules over each path's pending chain:
   vectored ``remove_tree`` backend call on the common root.  Collapses
   roll up: leaf directories fuse first, parents then absorb their
   children's fused removals, so a readdir-driven ``rmtree`` converges to
-  a single backend op for the whole tree.
+  a single backend op for the whole tree.  Subtrees resting on
+  *provisional* directories (mkdir admitted, not yet executed) fuse too:
+  the fused op carries a ``RemoveWitness`` and re-verifies the claim at
+  execution time, falling back per-entry byte-identically when a mkdir
+  was demoted (``FusionPolicy.reverify_provisional``).
 
 Safety comes from the scheduler's per-op flags: fusion only ever mutates
 the pending *tip* op of a path while it is unclaimed (no executor owns
@@ -59,7 +63,24 @@ class FusionPolicy:
 
     ``max_segments``/``max_bytes`` cap one fused op's payload so a writer
     streaming into a single file still rotates ops (and re-enters the
-    engine's in-flight budget) instead of growing one op without bound."""
+    engine's in-flight budget) instead of growing one op without bound.
+
+    With ``adaptive_max_bytes`` on and a backend that measures its own
+    bandwidth-delay product (``LatencyBackend.bdp_bytes``), the effective
+    write-coalescing cap is ``bdp_multiplier`` x BDP instead of the fixed
+    ``max_bytes`` — one fused op is sized to keep the pipe full for about
+    two round trips, no larger.  The policy bounds always win: the
+    adaptive value is clamped to [``min_adaptive_bytes``, ``max_bytes``].
+    Bulk-remove batching is clamped the same way (a fused ``remove_tree``
+    covers at most ``bdp_multiplier`` x BDP worth of directory entries at
+    ~256 bytes each, within [``min_remove_entries``,
+    ``max_remove_entries``]).
+
+    ``reverify_provisional`` lets the bulk-remove pass fuse under
+    *provisional* directories (mkdir admitted, not yet executed); the
+    fused op then re-verifies the overlay claim at execution time and
+    falls back to per-entry removal byte-identically when any mkdir was
+    demoted (see ``namespace.RemoveWitness``)."""
 
     enabled: bool = True
     coalesce_writes: bool = True
@@ -68,6 +89,15 @@ class FusionPolicy:
     bulk_remove: bool = True     # cross-path unlink/rmdir -> remove_tree
     max_segments: int = 128
     max_bytes: int = 32 << 20
+    # -- adaptive bandwidth-delay sizing (ROADMAP i) --
+    adaptive_max_bytes: bool = True
+    bdp_multiplier: float = 2.0
+    min_adaptive_bytes: int = 64 << 10
+    # -- bulk-remove batching bounds --
+    max_remove_entries: int = 1 << 20
+    min_remove_entries: int = 4096
+    # -- exec-time re-verification for provisional subtrees (ROADMAP m) --
+    reverify_provisional: bool = True
 
     @classmethod
     def off(cls) -> "FusionPolicy":
@@ -116,14 +146,78 @@ class MetaPayload:
         self.args = args
 
 
+class BulkRemovePayload:
+    """One fused cross-path removal: the root, the covered paths (the
+    fused op's co-paths — dependency edges and error-invalidation scope),
+    the per-entry manifest for the demoted fallback, and the overlay
+    witness that re-verifies provisional directories at execution time.
+
+    ``witness`` is None when the subtree was fully backend-proven at fuse
+    time (the PR 3 case) — the fused ``remove_tree`` runs unconditionally.
+    Otherwise the executor asks the overlay whether every watched mkdir
+    was *promoted* (created its directory fresh): promoted -> the single
+    vectored ``remove_tree``; demoted -> a byte-identical per-entry
+    fallback over ``entries`` (children before parents, absence-tolerant,
+    ENOTEMPTY propagating exactly as the unfused rmdir would have)."""
+
+    __slots__ = ("root", "covered", "entries", "witness")
+
+    def __init__(self, root: str, covered: list[str],
+                 entries: dict[str, bool], witness):
+        self.root = root
+        self.covered = covered              # sorted co-paths of the op
+        self.entries = entries              # path -> is_dir
+        self.witness = witness              # namespace.RemoveWitness | None
+
+    def fallback_order(self) -> list[tuple[str, bool]]:
+        """Entries deepest-first so children go before their parents."""
+        return sorted(self.entries.items(),
+                      key=lambda kv: (-kv[0].count("/"), kv[0]))
+
+
 class Fuser:
     """The peephole pass.  Stateless apart from its counters; the
-    scheduler provides the locking context (``fuse_tip``/``elide_chain``)."""
+    scheduler provides the locking context (``fuse_tip``/``elide_chain``).
 
-    def __init__(self, policy: FusionPolicy, stats):
+    ``bdp_source`` is the backend's measured bandwidth-delay product
+    (``LatencyBackend.bdp_bytes`` or None when the stack has no latency
+    layer): when present and the policy allows, it sizes the coalescing
+    and bulk-remove clamps adaptively."""
+
+    def __init__(self, policy: FusionPolicy, stats, bdp_source=None):
         self.policy = policy
         self.stats = stats
+        self._bdp = bdp_source
         self._slock = threading.Lock()   # exact counters across shards
+
+    # -- adaptive bandwidth-delay sizing -------------------------------
+
+    def effective_max_bytes(self) -> int:
+        """The write-coalescing byte cap for one fused op: ~2x the
+        measured BDP, clamped so the policy bounds always win."""
+        pol = self.policy
+        if not pol.adaptive_max_bytes or self._bdp is None:
+            return pol.max_bytes
+        bdp = self._bdp()
+        if not bdp:
+            return pol.max_bytes
+        eff = max(pol.min_adaptive_bytes,
+                  min(int(pol.bdp_multiplier * bdp), pol.max_bytes))
+        self.stats.adaptive_max_bytes = eff   # latest clamp, observability
+        return eff
+
+    def effective_remove_entries(self) -> int:
+        """How many directory entries one fused ``remove_tree`` may cover:
+        ~2x BDP worth of ~256-byte dirents, within the policy bounds."""
+        pol = self.policy
+        if not pol.adaptive_max_bytes or self._bdp is None:
+            return pol.max_remove_entries
+        bdp = self._bdp()
+        if not bdp:
+            return pol.max_remove_entries
+        return max(pol.min_remove_entries,
+                   min(int(pol.bdp_multiplier * bdp / 256),
+                       pol.max_remove_entries))
 
     # -- rule 1: write coalescing --------------------------------------
 
@@ -143,7 +237,7 @@ class Fuser:
                     or op.region is not region):
                 return False
             if (pl.n_segments >= pol.max_segments
-                    or pl.nbytes + len(data) > pol.max_bytes):
+                    or pl.nbytes + len(data) > self.effective_max_bytes()):
                 return False
             pl.add(offset, data)
             with self._slock:
@@ -207,7 +301,7 @@ class Fuser:
     # -- rule 4: cross-path bulk remove --------------------------------
 
     def prepare_bulk_remove(self, sched, overlay, root: str,
-                            region: object) -> list[str] | None:
+                            region: object) -> BulkRemovePayload | None:
         """Collapse the pending removals under ``root`` into one vectored
         ``remove_tree`` backend call.
 
@@ -223,19 +317,38 @@ class Fuser:
         the fused op's dependency edges, and the tolerant ``remove_tree``
         mops up what remains.
 
-        Returns the covered paths for the fused op's path set (they give
-        it its dependency edges and its error-invalidation scope), or
-        None when the per-entry path must be taken."""
+        With ``reverify_provisional`` the proof may rest on *provisional*
+        directories — mkdirs admitted but not yet executed (the
+        extract-then-rmtree-in-one-breath shape).  The overlay then hands
+        back a ``RemoveWitness`` watching those mkdirs; the fused op's DAG
+        edges already order it after every one of them, so by execution
+        time each has been promoted (created fresh) or demoted
+        (pre-existing / failed) and the executor picks the vectored call
+        or the byte-identical per-entry fallback accordingly.  A child
+        fused removal absorbed by this one donates its witness: the
+        parent inherits every still-unproven directory underneath.
+
+        Returns the fused op's ``BulkRemovePayload`` (covered paths give
+        it its dependency edges and error-invalidation scope), or None
+        when the per-entry path must be taken."""
         pol = self.policy
         if not (pol.enabled and pol.bulk_remove):
             return None
-        sub = overlay.subtree(root)
+        sub = overlay.subtree_for_removal(
+            root, allow_provisional=pol.reverify_provisional)
         if sub is None:
             return None
-        files, dirs = sub
+        files, dirs, witness = sub
+
+        def decline():
+            if witness is not None:
+                overlay.release_witness(witness)
+            return None
+
         if files:
-            return None   # will not be empty: let the plain rmdir report it
+            return decline()  # will not be empty: plain rmdir reports it
         covered: set[str] = set()
+        entries: dict[str, bool] = {}    # path -> is_dir, for the fallback
         candidates: dict[int, object] = {}
         for d in (root, *dirs):
             for op in sched.pending_structural_children(d):
@@ -246,8 +359,24 @@ class Fuser:
                     continue
                 candidates[id(op)] = op
                 covered.update(op.paths)
+                if op.kind == "unlink":
+                    entries.setdefault(op.paths[0], False)
+                elif op.kind == "rmdir":
+                    entries[op.paths[0]] = True
+                else:   # a child fused remove_tree: absorb its manifest
+                    pl = op.payload
+                    if isinstance(pl, BulkRemovePayload):
+                        entries.update(pl.entries)
+                        entries[pl.root] = True
+                        if pl.witness is not None:
+                            witness = overlay.merge_witness(witness,
+                                                            pl.witness)
+                    else:
+                        entries[op.paths[0]] = True
         if dirs and not set(dirs) <= covered:
-            return None   # a present dir with no pending removal
+            return decline()  # a present dir with no pending removal
+        if len(covered) > self.effective_remove_entries():
+            return decline()  # batch larger than the adaptive clamp allows
         elided = 0
         for op in candidates.values():
             with op.flock:
@@ -257,8 +386,8 @@ class Fuser:
                 op.elided = True
                 elided += 1
         if not elided:
-            return None   # nothing rewritable: plain rmdir is as good
+            return decline()  # nothing rewritable: plain rmdir is as good
         with self._slock:
             self.stats.bulk_removes += 1
             self.stats.elided_ops += elided
-        return sorted(covered)
+        return BulkRemovePayload(root, sorted(covered), entries, witness)

@@ -43,6 +43,7 @@ the window closes).
 from __future__ import annotations
 
 import threading
+from collections import OrderedDict
 from dataclasses import dataclass
 
 from .backend import StatResult, is_under, norm_path, parent_of
@@ -65,6 +66,14 @@ class OverlayPolicy:
     negative_stat: bool = True     # ...including proven-absent answers
     prefetch: bool = True          # readdir misses warm the stat cache
     #                                (one vectored readdir_plus call)
+    # LRU bound on directories whose completeness comes from a *cached
+    # backend listing* (installed by an executed readdir miss).  Eviction
+    # demotes completeness only — the pending membership delta (entries
+    # created/unlinked through the mount) is never dropped, so a re-listed
+    # directory still merges the transaction's own writes.  Directories
+    # complete from in-window creation don't count against the bound.
+    # <= 0 means unbounded.
+    max_cached_listings: int = 4096
 
     @classmethod
     def off(cls) -> "OverlayPolicy":
@@ -107,6 +116,29 @@ class _DirState:
         self.provisional = False
 
 
+class RemoveWitness:
+    """Exec-time re-verification token for one fused bulk removal
+    (ROADMAP item m).
+
+    Registered by ``subtree_for_removal`` for every directory whose
+    completeness was still *provisional* at fuse time (its mkdir admitted
+    but not yet executed).  The overlay updates it as those mkdirs land:
+    ``promote`` discards the dir from ``pending`` (created fresh — the
+    claim holds), ``demote``/``invalidate`` set ``demoted`` (the dir
+    pre-existed or its op failed: a fused unconditional removal could
+    delete contents an unfused ENOTEMPTY would have preserved).  All
+    mutation happens under the overlay's lock; the executor reads the
+    verdict through ``resolve_witness``."""
+
+    __slots__ = ("pending", "watched", "demoted")
+
+    def __init__(self):
+        self.pending: set[str] = set()   # dirs awaiting their mkdir's proof
+        self.watched: set[str] = set()   # every dir ever registered (for
+        #                                  watcher-list cleanup)
+        self.demoted = False
+
+
 class NamespaceOverlay:
     """Thread-safe directory-tree delta.  A leaf lock in the engine's
     lock order (nests under shard/op/control locks, holds no other)."""
@@ -115,6 +147,11 @@ class NamespaceOverlay:
         self.policy = policy or OverlayPolicy()
         self._lock = threading.Lock()
         self._dirs: dict[str, _DirState] = {}
+        # LRU over dirs whose completeness came from a cached backend
+        # listing (insertion/refresh order = recency; see OverlayPolicy)
+        self._listed: OrderedDict[str, None] = OrderedDict()
+        # exec-time re-verification: provisional dir -> watching witnesses
+        self._watchers: dict[str, list[RemoveWitness]] = {}
 
     # ------------------------------------------------------------------
     # write side: mirror the op stream (called from submit's on_admit)
@@ -125,6 +162,35 @@ class NamespaceOverlay:
         if st is None:
             st = self._dirs[dirpath] = _DirState()
         return st
+
+    # -- cached-listing LRU (all under self._lock) ---------------------
+
+    def _touch_listing(self, path: str) -> None:
+        """Mark a cached-listing dir most-recently-used and evict past the
+        policy bound.  Eviction demotes completeness only: the membership
+        delta (pending entries created/removed through the mount) stays."""
+        bound = self.policy.max_cached_listings
+        if bound <= 0:
+            return
+        self._listed[path] = None
+        self._listed.move_to_end(path)
+        while len(self._listed) > bound:
+            victim, _ = self._listed.popitem(last=False)
+            st = self._dirs.get(victim)
+            if st is not None:
+                st.complete = False
+                st.provisional = False
+
+    def _drop_listed(self, path: str) -> None:
+        self._listed.pop(path, None)
+
+    def _demote_watchers_under(self, path: str) -> None:
+        """A dir at/under ``path`` became unreliable: demote every fused
+        removal whose proof rests on it."""
+        for k, ws in self._watchers.items():
+            if is_under(k, path):
+                for w in ws:
+                    w.demoted = True
 
     def _add(self, dirpath: str, name: str, kind: str | None) -> None:
         st = self._state(dirpath)
@@ -174,11 +240,14 @@ class NamespaceOverlay:
                 p = paths[0]
                 self._remove(*self._split(p))
                 self._dirs.pop(p, None)
+                self._drop_listed(p)
             elif kind == "remove_tree":
                 root = paths[0]
                 self._remove(*self._split(root))
                 for k in [k for k in self._dirs if is_under(k, root)]:
                     del self._dirs[k]
+                for k in [k for k in self._listed if is_under(k, root)]:
+                    del self._listed[k]
             elif kind == "rename":
                 src, dst = paths
                 kind_src = None
@@ -192,6 +261,9 @@ class NamespaceOverlay:
                 for k in [k for k in self._dirs if is_under(k, src)]:
                     self._dirs[dst + k[len(src):]] = self._dirs.pop(k)
                     moved_dir = moved_dir or k == src
+                for k in [k for k in self._listed if is_under(k, src)]:
+                    del self._listed[k]
+                    self._listed[dst + k[len(src):]] = None
                 dp, dn = self._split(dst)
                 self._add(dp, dn, _DIR if moved_dir else kind_src)
             elif kind == "fallocate":
@@ -229,6 +301,7 @@ class NamespaceOverlay:
                                      else _FILE)
             st.complete = True
             st.provisional = False   # backend truth, not an intent claim
+            self._touch_listing(path)
 
     # ------------------------------------------------------------------
     # read side
@@ -242,7 +315,28 @@ class NamespaceOverlay:
             st = self._dirs.get(path)
             if st is None or not st.complete:
                 return None
+            if path in self._listed:
+                self._touch_listing(path)   # LRU recency on cache hits
             return sorted(st.children)
+
+    def listing_kinds(self, path: str) -> tuple[list[str], list[str]] | None:
+        """(subdir names, file/link names) of a complete directory with
+        every child's kind proven, or None (the walk fast path falls back
+        to readdir + per-entry stat for this directory only)."""
+        with self._lock:
+            st = self._dirs.get(path)
+            if st is None or not st.complete:
+                return None
+            dirs: list[str] = []
+            files: list[str] = []
+            for name in sorted(st.children):
+                kind = st.children[name]
+                if kind is None:
+                    return None
+                (dirs if kind == _DIR else files).append(name)
+            if path in self._listed:
+                self._touch_listing(path)
+            return dirs, files
 
     def lookup(self, path: str) -> bool | None:
         """Presence of ``path``: True/False when provable, None otherwise.
@@ -262,26 +356,56 @@ class NamespaceOverlay:
                 return False
             return None
 
-    def subtree(self, root: str) -> tuple[list[str], list[str]] | None:
-        """(files, dirs) of *present* entries under ``root``, or None when
-        any reachable directory is incomplete, provisional (its mkdir has
-        not yet proven the dir was created fresh) or any kind unproven —
-        the bulk-remove pass may only fire on a fully overlay-PROVEN
-        tree, because a fused remove_tree deletes unconditionally where
-        an unfused rmdir would have failed ENOTEMPTY."""
-        with self._lock:
-            return self._subtree(root)
+    def subtree_for_removal(self, root: str, *, allow_provisional: bool
+                            ) -> tuple[list[str], list[str],
+                                       "RemoveWitness | None"] | None:
+        """(files, dirs, witness) of *present* entries under ``root`` for
+        the bulk-remove pass, or None when any reachable directory is
+        incomplete or any kind unproven — the pass may only fire on an
+        overlay-proven tree, because a fused remove_tree deletes
+        unconditionally where an unfused rmdir would have failed
+        ENOTEMPTY.
 
-    def _subtree(self, root):
+        Without ``allow_provisional`` a directory whose completeness is
+        still an unexecuted mkdir's admit-time claim also returns None.
+        With it, the scan tolerates such directories and returns a
+        ``RemoveWitness`` watching them (registered atomically with the
+        scan, so a promote/demote racing the fuse decision is never
+        lost).  The witness is None when the whole tree was already
+        backend-proven.  The caller must either attach the witness to the
+        fused op (released by the engine at completion) or hand it back
+        via ``release_witness`` when it declines to fuse."""
+        with self._lock:
+            prov: list[str] = []
+            sub = self._subtree(root, prov if allow_provisional else None)
+            if sub is None:
+                return None
+            files, dirs = sub
+            if not prov:
+                return files, dirs, None
+            w = RemoveWitness()
+            w.pending.update(prov)
+            w.watched.update(prov)
+            for d in prov:
+                self._watchers.setdefault(d, []).append(w)
+            return files, dirs, w
+
+    def _subtree(self, root, provisional_out):
+        """``provisional_out`` is None for strict (backend-proven only)
+        scans, or a list collecting the provisional dirs encountered."""
         st = self._dirs.get(root)
-        if st is None or not st.complete or st.provisional:
+        if st is None or not st.complete:
             return None
+        if st.provisional:
+            if provisional_out is None:
+                return None
+            provisional_out.append(root)
         files: list[str] = []
         dirs: list[str] = []
         for name, kind in st.children.items():
             p = f"{root}/{name}" if root else name
             if kind == _DIR:
-                sub = self._subtree(p)
+                sub = self._subtree(p, provisional_out)
                 if sub is None:
                     return None
                 dirs.append(p)
@@ -294,14 +418,64 @@ class NamespaceOverlay:
         return files, dirs
 
     # ------------------------------------------------------------------
+    # exec-time re-verification witnesses (the bulk-remove pass under
+    # provisional dirs: fusion.BulkRemovePayload carries one of these)
+    # ------------------------------------------------------------------
+
+    def merge_witness(self, parent: RemoveWitness | None,
+                      child: RemoveWitness) -> RemoveWitness:
+        """A parent fused removal absorbs a child's: the parent inherits
+        every directory the child is still waiting on (and its verdict so
+        far), so the rolled-up op re-verifies the whole subtree."""
+        with self._lock:
+            if parent is None:
+                parent = RemoveWitness()
+            parent.demoted = parent.demoted or child.demoted
+            for d in child.pending:
+                if d not in parent.watched:
+                    parent.watched.add(d)
+                    self._watchers.setdefault(d, []).append(parent)
+                parent.pending.add(d)
+            return parent
+
+    def resolve_witness(self, w: RemoveWitness) -> str:
+        """The exec-time verdict: ``"promoted"`` (every watched mkdir
+        created its dir fresh — run the vectored removal), ``"demoted"``
+        (any demotion/invalidation, or a mkdir somehow still unproven —
+        take the byte-identical per-entry fallback), or ``"clean"`` (the
+        witness never watched anything)."""
+        with self._lock:
+            if w.demoted or w.pending:
+                return "demoted"
+            return "promoted" if w.watched else "clean"
+
+    def release_witness(self, w: RemoveWitness | None) -> None:
+        """Unregister a witness from every watcher list (idempotent)."""
+        if w is None:
+            return
+        with self._lock:
+            for d in w.watched:
+                lst = self._watchers.get(d)
+                if lst is None:
+                    continue
+                try:
+                    lst.remove(w)
+                except ValueError:
+                    pass
+                if not lst:
+                    del self._watchers[d]
+            w.watched.clear()
+
+    # ------------------------------------------------------------------
     # invalidation
     # ------------------------------------------------------------------
 
     def invalidate(self, path: str) -> None:
         """A background op on ``path`` failed (or was cancelled): every
         claim the overlay made about it is suspect.  Drop its membership
-        entry, demote its parent's completeness, and forget the state of
-        any directory at or under it."""
+        entry, demote its parent's completeness, forget the state of any
+        directory at or under it, and demote every fused removal whose
+        re-verification watches a directory in that subtree."""
         path = norm_path(path)
         with self._lock:
             if path:
@@ -313,30 +487,50 @@ class NamespaceOverlay:
                     st.complete = False
             for k in [k for k in self._dirs if is_under(k, path)]:
                 del self._dirs[k]
+            for k in [k for k in self._listed if is_under(k, path)]:
+                del self._listed[k]
+            self._demote_watchers_under(path)
 
     def demote(self, path: str) -> None:
         """Keep the membership delta but drop completeness (a tolerant
         mkdir found the directory pre-existing: its base contents are
-        unknown, the deltas recorded so far are still valid)."""
+        unknown, the deltas recorded so far are still valid).  Any fused
+        removal watching this directory loses its proof."""
+        path = norm_path(path)
         with self._lock:
-            st = self._dirs.get(norm_path(path))
+            st = self._dirs.get(path)
             if st is not None:
                 st.complete = False
                 st.provisional = False
+            for w in self._watchers.get(path, ()):
+                w.demoted = True
 
     def promote(self, path: str) -> None:
         """An executed mkdir confirmed it created ``path`` fresh: its
-        provisional admit-time completeness is now backend-proven.  A
-        state popped in the meantime (a rmdir admitted while the mkdir
-        was pending) is deliberately NOT resurrected."""
+        provisional admit-time completeness is now backend-proven, and
+        any fused removal watching the directory checks it off.  A state
+        popped in the meantime (a rmdir admitted while the mkdir was
+        pending) is deliberately NOT resurrected — but the witnesses are
+        still settled: the fused removal that popped it is exactly the op
+        waiting on this proof."""
+        path = norm_path(path)
         with self._lock:
-            st = self._dirs.get(norm_path(path))
+            st = self._dirs.get(path)
             if st is not None and st.complete:
                 st.provisional = False
+            for w in self._watchers.get(path, ()):
+                w.pending.discard(path)
 
     def clear(self) -> None:
         with self._lock:
             self._dirs.clear()
+            self._listed.clear()
+            # rollback mutates the backend behind the engine: no pending
+            # fused removal may keep trusting its pre-rollback proof
+            for ws in self._watchers.values():
+                for w in ws:
+                    w.demoted = True
+            self._watchers.clear()
 
 
-__all__ = ["NamespaceOverlay", "OverlayPolicy"]
+__all__ = ["NamespaceOverlay", "OverlayPolicy", "RemoveWitness"]

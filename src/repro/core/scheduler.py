@@ -7,8 +7,29 @@ executor).  It owns *which op may run when* and nothing else:
   execute in submission order);
 * cross-path edges for the cases per-path order cannot see (create under a
   pending mkdir, readdir racing child creation, rename spanning two paths);
-* the in-flight budget (submission blocks at ``max_inflight``), the ready
-  queue the executor drains, and the poison/close lifecycle.
+* the in-flight budget (submission blocks at ``max_inflight``), the
+  per-shard ready queues the executor drains, and the poison/close
+  lifecycle.
+
+Dispatch architecture
+---------------------
+
+PR 2 sharded *submission* state; dispatch still funnelled every ready op
+through one global deque + condition variable, so at high worker counts
+the scheduler itself became the latency the engine claims to hide.  Ready
+ops now live in per-shard deques aligned to the path-hash shards:
+
+* a ready op is enqueued on its first path's home shard;
+* pool worker ``i`` of ``W`` owns the shards ``s`` with ``s % W == i`` and
+  pops from them FIFO (every shard has exactly one owner, so stealing off
+  still drains everything);
+* a worker whose owned shards are dry *steals* from the tail of a victim
+  shard's deque (``stats.steals``); stealing is what keeps uneven per-shard
+  load balanced across the pool;
+* only when every shard is empty does a worker fall back to the single
+  parking lot — one condition variable on the control lock
+  (``stats.parks``).  Producers take the control lock only to wake parked
+  workers, so the busy-pool fast path never touches a global lock to pop.
 
 Lock architecture
 -----------------
@@ -17,13 +38,15 @@ The seed engine serialized *all* submit/complete traffic under one global
 lock.  Here submission state is sharded by path hash: each shard's lock
 protects only that shard's ``last_op`` and ``pending_children`` maps, so
 disjoint-path submissions and completions proceed in parallel.  A small
-control lock remains for the ready queue, the in-flight budget and
-lifecycle flags; it is held only for queue pushes/pops and counter
-updates, never while wiring dependencies.
+control lock remains for the in-flight budget, the parking lot and
+lifecycle flags; it is held only for counter updates and parking, never
+while wiring dependencies.
 
 Lock order (never acquired in reverse): shard locks (ascending index)
--> per-op ``flock`` -> control lock.  Leaf locks (stat cache, ledger,
-fusion stats) nest under any of these.
+-> per-op ``flock`` -> control lock -> per-shard ready-queue ``rlock``
+(the deepest leaf: a parked worker rescans the ready deques while holding
+the control lock, so an rlock holder must never wait on anything).  Leaf
+locks (stat cache, ledger, fusion stats) nest under any of these.
 
 Per-op flags (``claimed``/``sealed``/``elided``/``completed``) live under
 the op's own ``flock`` so the optimizer can mutate a pending op's payload
@@ -69,7 +92,7 @@ class _Op:
                  "remaining_deps", "dependents", "cancelled", "submitted_at",
                  "started_at", "finished_at", "eager", "region",
                  "flock", "completed", "claimed", "sealed", "elided",
-                 "payload", "prev_same_path")
+                 "payload", "prev_same_path", "wired")
 
     def __init__(self, seq: int, kind: str, paths: tuple[str, ...],
                  fn: Callable[[], Any], eager: bool = True,
@@ -97,16 +120,25 @@ class _Op:
         self.elided = False           # optimizer removed it from the stream
         self.payload = payload        # fusable payload (fusion.py), or None
         self.prev_same_path: Optional[_Op] = None  # chain link for peepholes
+        # wiring stamp: drawn while the op still holds its shard locks at
+        # the end of dependency wiring.  Cross-shard edges added *outside*
+        # an op's own locked region (the rename chain-tip pass) may only
+        # point at ops with a smaller stamp — every edge then strictly
+        # decreases the stamp, which keeps the DAG acyclic (0 = unwired).
+        self.wired = 0
 
 
 class _Shard:
-    __slots__ = ("lock", "last_op", "pending_children")
+    __slots__ = ("lock", "last_op", "pending_children", "rlock", "rq")
 
     def __init__(self):
         self.lock = threading.Lock()
         self.last_op: dict[str, _Op] = {}       # last pending op per path
         # every pending structural op, grouped by parent dir (seq -> op)
         self.pending_children: dict[str, dict[int, _Op]] = {}
+        # the shard's ready deque: owner pops the head, thieves the tail
+        self.rlock = threading.Lock()
+        self.rq: deque[_Op] = deque()
 
 
 class OpScheduler:
@@ -115,18 +147,21 @@ class OpScheduler:
     control lock so they stay exact under concurrency."""
 
     def __init__(self, stats, *, max_inflight: int = 300,
-                 shards: int = DEFAULT_SHARDS):
+                 shards: int = DEFAULT_SHARDS, work_stealing: bool = True):
         self.stats = stats
         self.max_inflight = int(max_inflight)
+        self.work_stealing = bool(work_stealing)
         self._shards = [_Shard() for _ in range(max(1, int(shards)))]
         self._nshards = len(self._shards)
         self._seq = itertools.count(1)
-        # control lock: ready queue + budget + lifecycle (held briefly)
+        self._wire_seq = itertools.count(1)   # wiring stamps (see _Op.wired)
+        # control lock: budget + parking lot + lifecycle (held briefly)
         self._ctl = threading.Lock()
-        self._ready_cv = threading.Condition(self._ctl)
+        self._ready_cv = threading.Condition(self._ctl)   # the parking lot
         self._idle_cv = threading.Condition(self._ctl)
         self._budget_cv = threading.Condition(self._ctl)
-        self._ready: deque[_Op] = deque()
+        self._slock = threading.Lock()    # exact steal counter (leaf)
+        self._parked = 0                  # workers waiting in the lot
         self._inflight = 0
         self._poisoned = False
         self._closed = False
@@ -190,25 +225,26 @@ class OpScheduler:
         relevant = set(paths)
         for p in paths:
             relevant.add(parent_of(p))
+        deps: list[_Op] = []
+        seen: set[int] = set()
+
+        def add_dep(d: Optional[_Op]) -> None:
+            if d is None or id(d) in seen:
+                return
+            seen.add(id(d))
+            with d.flock:
+                if d.completed:
+                    return
+                d.dependents.append(op)
+                # observation point: a sync op waiting on d pins it —
+                # the optimizer may no longer rewrite or remove it
+                if not eager:
+                    d.sealed = True
+            deps.append(d)
+
+        kid_paths: set[str] = set()
         shards = self._lock_shards(relevant)
         try:
-            deps: list[_Op] = []
-            seen: set[int] = set()
-
-            def add_dep(d: Optional[_Op]) -> None:
-                if d is None or id(d) in seen:
-                    return
-                seen.add(id(d))
-                with d.flock:
-                    if d.completed:
-                        return
-                    d.dependents.append(op)
-                    # observation point: a sync op waiting on d pins it —
-                    # the optimizer may no longer rewrite or remove it
-                    if not eager:
-                        d.sealed = True
-                deps.append(d)
-
             for p in paths:
                 shard = self._shard_of(p)
                 prev = shard.last_op.get(p)
@@ -223,6 +259,15 @@ class OpScheduler:
                     kids = self._shard_of(p).pending_children.get(p, {})
                     for d in list(kids.values()):
                         add_dep(d)
+                        if kind == "rename":
+                            # a rename moves *content*: it must also wait
+                            # for the non-structural tails (writes, meta)
+                            # chained behind each structural child — their
+                            # shards are outside this op's lock set, so
+                            # they are wired in the pass below
+                            kid_paths.update(
+                                kp for kp in d.paths
+                                if kp not in relevant and kp != p)
             for p in paths:
                 self._shard_of(p).last_op[p] = op
             if kind in STRUCTURAL:
@@ -230,22 +275,75 @@ class OpScheduler:
                     par = parent_of(p)
                     self._shard_of(par).pending_children.setdefault(
                         par, {})[op.seq] = op
-            # publish the dep count last: deps completing mid-wiring have
-            # already decremented remaining_deps below zero, so the sum
-            # lands on the true outstanding count exactly once
-            with op.flock:
-                op.remaining_deps += len(deps)
-                ready_now = op.remaining_deps == 0
+            op.wired = next(self._wire_seq)   # stamped inside the region
         finally:
             self._unlock_shards(shards)
+        # rename chain-tip pass: BFS over the renamed subtree's pending
+        # structural ops, depending on every discovered path's pending
+        # *tip* (transitively the whole chain) — a create two levels down
+        # (s/a/f under pending mkdir s/a) is reached through s/a's
+        # pending_children, so deep write chains are ordered before the
+        # rename too, not just the direct children.  One shard lock at a
+        # time; only ops wired strictly before this one are eligible — a
+        # tip wired later may already depend on this op through the
+        # parent-directory edge, and the stamp guard is what keeps the
+        # DAG acyclic (see _Op.wired).  (Known gap, pre-existing: a
+        # non-structural op on a path with no pending structural anchor —
+        # e.g. chmod of a file that pre-existed the window — has no
+        # pending_children entry to discover it through.)
+        visited: set[str] = set(relevant)
+        frontier = sorted(kid_paths)
+        while frontier:
+            deeper: set[str] = set()
+            for kp in frontier:
+                visited.add(kp)
+                sh = self._shard_of(kp)
+                with sh.lock:
+                    cur = sh.last_op.get(kp)
+                    while cur is not None and not 0 < cur.wired < op.wired:
+                        cur = cur.prev_same_path
+                    add_dep(cur)
+                    for d in sh.pending_children.get(kp, {}).values():
+                        if 0 < d.wired < op.wired:
+                            deeper.update(d.paths)
+            frontier = sorted(deeper - visited)
+        # publish the dep count last: deps completing mid-wiring have
+        # already decremented remaining_deps below zero, so the sum
+        # lands on the true outstanding count exactly once
+        with op.flock:
+            op.remaining_deps += len(deps)
+            ready_now = op.remaining_deps == 0
         if ready_now:
             self._push_ready(op)
         return op
 
+    def _home_shard(self, op: _Op) -> _Shard:
+        return self._shards[hash(op.paths[0]) % self._nshards]
+
+    def _enqueue_ready(self, op: _Op) -> None:
+        """Append to the op's home-shard ready deque (rlock is the deepest
+        leaf: never held while taking any other lock)."""
+        sh = self._home_shard(op)
+        with sh.rlock:
+            sh.rq.append(op)
+
+    def _notify_ready(self, n: int) -> None:
+        """Wake parked workers for ``n`` newly enqueued ops.  Caller holds
+        the control lock.  With stealing on, any worker can take any op,
+        so waking exactly ``n`` avoids a thundering herd; with stealing
+        off an arbitrary woken worker may not own the op's shard and
+        would re-park, so broadcast."""
+        if not self._parked:
+            return
+        if self.work_stealing:
+            self._ready_cv.notify(n)
+        else:
+            self._ready_cv.notify_all()
+
     def _push_ready(self, op: _Op) -> None:
+        self._enqueue_ready(op)
         with self._ctl:
-            self._ready.append(op)
-            self._ready_cv.notify()
+            self._notify_ready(1)
 
     # ------------------------------------------------------------------
     # optimizer hooks
@@ -323,14 +421,66 @@ class OpScheduler:
     # executor interface
     # ------------------------------------------------------------------
 
-    def next_ready(self) -> Optional[_Op]:
-        """Blocking pop; None once the scheduler is closed and drained."""
-        with self._ctl:
-            while not self._ready and not self._closed:
+    def _owned_shards(self, worker: int, workers: int) -> range | tuple:
+        """Worker ``worker`` of ``workers`` owns the shards congruent to it
+        mod the pool size — every shard has exactly one owner while the
+        pool is no wider than the shard count."""
+        n = self._nshards
+        if workers <= 0 or workers > n:
+            return (worker % n,)
+        return range(worker % workers, n, workers)
+
+    def _pop_ready(self, worker: int, workers: int) -> Optional[_Op]:
+        """Non-blocking pop: owned shards FIFO first, then (with stealing
+        on) the tail of the first non-empty victim shard."""
+        shards = self._shards
+        owned = self._owned_shards(worker, workers)
+        for s in owned:
+            sh = shards[s]
+            with sh.rlock:
+                if sh.rq:
+                    return sh.rq.popleft()
+        if not self.work_stealing:
+            return None
+        mine = set(owned)
+        n = self._nshards
+        for k in range(n):
+            s = (worker + k) % n
+            if s in mine:
+                continue
+            sh = shards[s]
+            with sh.rlock:
+                op = sh.rq.pop() if sh.rq else None
+            if op is not None:
+                with self._slock:
+                    self.stats.steals += 1
+                return op
+        return None
+
+    def next_ready(self, worker: int = 0, workers: int = 1) -> Optional[_Op]:
+        """Blocking pop for pool worker ``worker`` of ``workers``; None once
+        the scheduler is closed and every shard is drained.  Parks on the
+        control-lock condition only when all shards are dry; the re-scan
+        under the control lock closes the race with producers (who take the
+        control lock after enqueueing, so either they see us parked or we
+        see their op)."""
+        while True:
+            op = self._pop_ready(worker, workers)
+            if op is not None:
+                return op
+            with self._ctl:
+                # rescan while holding ctl: rlocks nest under the control
+                # lock, so a producer's enqueue either landed before this
+                # scan or its notify comes after our wait begins
+                op = self._pop_ready(worker, workers)
+                if op is not None:
+                    return op
+                if self._closed:
+                    return None
+                self._parked += 1
+                self.stats.parks += 1
                 self._ready_cv.wait()
-            if not self._ready:
-                return None
-            return self._ready.popleft()
+                self._parked -= 1
 
     def on_complete(self, op: _Op) -> None:
         """Release dependents, clean the shard maps, retire the budget
@@ -363,10 +513,11 @@ class OpScheduler:
                             del self._shard_of(par).pending_children[par]
         finally:
             self._unlock_shards(shards)
+        for d in newly_ready:
+            self._enqueue_ready(d)
         with self._ctl:
-            for d in newly_ready:
-                self._ready.append(d)
-                self._ready_cv.notify()
+            if newly_ready:
+                self._notify_ready(len(newly_ready))
             self._inflight -= 1
             self._budget_cv.notify()
             if self._inflight == 0:
@@ -395,7 +546,10 @@ class OpScheduler:
         with self._ctl:
             self._poisoned = True
             # cancel everything not yet started; their dependents cascade
-            queued = list(self._ready)
+            queued: list[_Op] = []
+            for sh in self._shards:
+                with sh.rlock:
+                    queued.extend(sh.rq)
         for op in queued:
             op.cancelled = True
 

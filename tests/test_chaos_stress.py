@@ -156,6 +156,119 @@ def test_quota_contention_is_consistent_under_threads():
     fs.close()
 
 
+def _paths_on_few_shards(n_paths: int, n_hot_shards: int = 2,
+                         n_shards: int = 16, prefix: str = "hot"):
+    """Paths whose scheduler shard (hash(path) % n_shards) lands on only
+    ``n_hot_shards`` shards — the uneven load that forces dry workers to
+    steal.  Probed at runtime because str hashing is salted per process."""
+    out, i = [], 0
+    while len(out) < n_paths:
+        p = f"stress/{prefix}_{i}"
+        if hash(p) % n_shards < n_hot_shards:
+            out.append(p)
+        i += 1
+    return out
+
+
+@pytest.mark.parametrize("stealing", [True, False])
+def test_steal_hammer_uneven_shards_no_lost_or_double_ops(stealing):
+    """The work-stealing hammer: 8 pool workers, every op concentrated on
+    two of the sixteen ready-queue shards, fault plan active.  Invariants:
+    nothing lost (executed == submitted, final content is per-path FIFO),
+    nothing double-executed (chunk counts exact), faults all accounted,
+    and with stealing ON the dry workers actually stole."""
+    inner = InMemoryBackend()
+    clock = VirtualClock()
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.4,
+                            seed=23), clock=clock)
+    rules = [FaultRule(error="EIO", ops=("write", "create"),
+                       path_glob="*victim*", probability=0.3)]
+    plan = FaultPlan(rules, seed=23)
+    fs = CannyFS(FaultInjectingBackend(remote, plan), max_inflight=256,
+                 workers=8, echo_errors=False, work_stealing=stealing)
+    fs.makedirs("stress")
+    per_thread = (CHUNKS_PER_THREAD + 4) // 5
+    hot = _paths_on_few_shards(N_THREADS)
+    victims = _paths_on_few_shards(N_THREADS * per_thread, prefix="victim")
+    errors: list[BaseException] = []
+
+    def worker(k: int):
+        try:
+            with fs.open(hot[k], "wb") as h:
+                for i in range(CHUNKS_PER_THREAD):
+                    h.write(bytes([k, i]) * 3)
+                    if i % 5 == 0:
+                        fs.write_file(victims[k * per_thread + i // 5],
+                                      b"v" * 8)
+        except BaseException as e:  # pragma: no cover - would fail the test
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(k,))
+               for k in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fs.drain()
+    assert not errors, errors
+    snap = inner.snapshot()
+    for k in range(N_THREADS):
+        want = b"".join(bytes([k, i]) * 3 for i in range(CHUNKS_PER_THREAD))
+        assert snap["files"][hot[k]] == want, f"FIFO broken for {hot[k]}"
+    st = fs.stats
+    assert fs.engine._inflight == 0
+    assert st.executed == st.submitted          # nothing lost or doubled
+    assert len(fs.engine._last_op) == 0
+    assert len(fs.engine._pending_children) == 0
+    assert st.deferred_errors == plan.injected  # every fault accounted
+    if stealing:
+        assert st.steals > 0, "uneven shards with 8 workers must steal"
+    else:
+        assert st.steals == 0
+    fs.close()
+
+
+def test_steal_hammer_poison_propagates_cleanly():
+    """abort_on_error under concentrated-shard load: poisoning mid-steal
+    must cancel the queued ops across every shard deque, drain() must
+    terminate with parked workers woken, and submissions fail fast."""
+    inner = InMemoryBackend()
+    clock = VirtualClock()
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.4,
+                            seed=7), clock=clock)
+    plan = FaultPlan([FaultRule(error="EIO", ops=("write", "create"),
+                                path_glob="*victim*", probability=1.0)],
+                     seed=7)
+    fs = CannyFS(FaultInjectingBackend(remote, plan), max_inflight=256,
+                 workers=8, echo_errors=False, abort_on_error=True)
+    fs.makedirs("stress")
+    victims = _paths_on_few_shards(4 * CHUNKS_PER_THREAD, prefix="victim")
+    poisoned_hits = []
+
+    def worker(k: int):
+        try:
+            for i in range(CHUNKS_PER_THREAD):
+                fs.write_file(victims[k * CHUNKS_PER_THREAD + i], b"v")
+        except EnginePoisonedError:
+            poisoned_hits.append(k)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fs.drain()          # must not hang on cancelled ops in any shard deque
+    assert fs.poisoned
+    assert fs.engine._inflight == 0
+    assert len(fs.ledger) >= 1
+    with pytest.raises(EnginePoisonedError):
+        fs.create("after")
+    fs.engine.reset_poison()
+    fs.close()
+
+
 def test_matrix_runs_fast_enough_for_ci():
     """The whole chaos matrix above relies on the virtual clock; this guard
     asserts simulated time actually decoupled from real time."""

@@ -142,8 +142,10 @@ def test_cancelled_untagged_ops_are_ledgered():
         def __init__(self):
             super().__init__()
             self.ev = threading.Event()
+            self.entered = threading.Event()
 
         def chmod(self, p, m):
+            self.entered.set()
             self.ev.wait()              # hold the single worker...
             raise PermissionError(p)    # ...then poison
 
@@ -152,6 +154,7 @@ def test_cancelled_untagged_ops_are_ledgered():
     fs.write_file("x", b"1")
     fs.drain()
     fs.chmod("x", 0o600)                # blocks the worker
+    be.entered.wait()                   # provably wedged before queueing
     for i in range(5):
         fs.create(f"q{i}")              # queued behind the blocked worker
     be.ev.set()
@@ -788,16 +791,22 @@ def test_poison_from_untagged_op_cannot_let_commit_succeed():
     fs = CannyFS(InMemoryBackend(), abort_on_error=True, workers=1,
                  echo_errors=False)
     txn = Transaction(fs)
+    started = threading.Event()
+    release = threading.Event()
 
     def boom():
+        started.set()       # the single worker is provably inside boom...
+        release.wait()      # ...so everything submitted below stays queued
         raise PermissionError("background job")
 
     with pytest.raises((TransactionFailedError, EnginePoisonedError)):
         with txn:
             # a background op outside any transaction (region=None)
             fs.engine.submit("chmod", ("x",), boom, eager=True)
+            started.wait()
             for i in range(20):
                 fs.write_file(f"out{i}", b"y")
+            release.set()
     assert not txn.committed
     fs.engine.reset_poison()
     fs.close()
@@ -899,8 +908,10 @@ def test_checkpoint_survives_poison_cancelling_its_writes():
         def __init__(self):
             super().__init__()
             self.ev = threading.Event()
+            self.entered = threading.Event()
 
         def chmod(self, p, m):
+            self.entered.set()
             self.ev.wait()
             raise PermissionError(p)
 
@@ -910,6 +921,7 @@ def test_checkpoint_survives_poison_cancelling_its_writes():
     fs.write_file("unrelated", b"1")
     fs.drain()
     fs.chmod("unrelated", 0o600)      # wedge the worker, then poison
+    be.entered.wait()
     res = mgr.save(1, {"w": np.ones(8, np.float32)})
     be.ev.set()
     mgr.wait_for_save()

@@ -29,11 +29,13 @@ class GateBackend(InMemoryBackend):
     def __init__(self):
         super().__init__()
         self.gate = threading.Event()
+        self.entered = threading.Event()   # the worker reached the gate
         self.calls: list[tuple] = []
         self.vec_calls: list[tuple] = []
 
     def fsync(self, path):
         if path == GATE:
+            self.entered.set()
             self.gate.wait()
 
     def write_at(self, p, o, data):
@@ -74,6 +76,7 @@ def gated_fs(**kw):
     fs.create(GATE)
     fs.drain()
     fs.fsync(GATE)        # wedges the single worker until be.gate.set()
+    be.entered.wait()     # worker provably wedged: later submissions pend
     return be, fs
 
 
@@ -241,7 +244,9 @@ def test_unlink_of_preexisting_file_still_removes_it():
     be.calls.clear()
     be.vec_calls.clear()
     be.gate.clear()
+    be.entered.clear()
     fs.fsync(GATE)                      # wedge again
+    be.entered.wait()
     fs.write_file("keep", b"new")       # pending rewrite chain
     fs.unlink("keep")
     release(be, fs)

@@ -52,9 +52,11 @@ class GateBackend(InMemoryBackend):
     def __init__(self):
         super().__init__()
         self.gate = threading.Event()
+        self.entered = threading.Event()   # the worker reached the gate
 
     def fsync(self, path):
         if path == GATE:
+            self.entered.set()
             self.gate.wait()
 
 
@@ -64,6 +66,7 @@ def gated_fs(**kw):
     fs.create(GATE)
     fs.drain()
     fs.fsync(GATE)        # wedges the single worker until be.gate.set()
+    be.entered.wait()     # worker provably wedged: later submissions pend
     return be, fs
 
 
@@ -208,20 +211,48 @@ def test_rename_directory_carries_overlay_state():
     fs.close()
 
 
+def test_rename_waits_for_deep_pending_write_chains():
+    """Review-caught regression: a rename must order after pending write
+    chains arbitrarily deep under it (s/a/f under pending mkdir s/a),
+    not just after its direct structural children — else the rename wins
+    the race, the deep create fails ENOENT at the old path, and the data
+    never lands.  Hammered across a pool, where dispatch order is
+    genuinely concurrent."""
+    for trial in range(30):
+        be = InMemoryBackend()
+        fs = CannyFS(be, workers=8, echo_errors=False)
+        fs.makedirs(f"s{trial}/a")
+        fs.write_file(f"s{trial}/a/f", b"deep")
+        fs.rename(f"s{trial}", f"t{trial}")
+        fs.drain()
+        snap = be.snapshot()
+        assert snap["files"].get(f"t{trial}/a/f") == b"deep", \
+            (trial, sorted(snap["files"]), fs.ledger.entries())
+        assert len(fs.ledger) == 0, fs.ledger.entries()
+        fs.close()
+
+
 def test_failed_op_invalidates_overlay_claims():
     """A deferred failure drops the overlay's membership claims so the
     next read consults the backend instead of repeating the lie."""
     class Bad(InMemoryBackend):
+        def __init__(self):
+            super().__init__()
+            self.release = threading.Event()
+
         def create(self, p):
             if p.endswith("boom"):
+                self.release.wait()   # hold the failure until observed
                 raise OSError(errno.EACCES, "injected", p)
             super().create(p)
 
-    fs = CannyFS(Bad(), echo_errors=False)
+    be = Bad()
+    fs = CannyFS(be, echo_errors=False)
     fs.mkdir("d")
     fs.create("d/ok")
     fs.create("d/boom")
     assert "boom" in fs.readdir("d")              # intended effect, pre-exec
+    be.release.set()
     fs.drain()                                    # failure lands
     assert fs.readdir("d") == ["ok"]              # re-listed from backend
     assert len(fs.ledger) == 1
@@ -239,8 +270,34 @@ def test_bulk_remove_collapses_preexisting_tree_fewer_ops_than_entries():
     the warmed cache, and the removals collapse to remove_tree."""
     inner = InMemoryBackend()
     dirs, entries = prepopulate(inner, n_dirs=4, files_per_dir=6)
-    be = Boundary(inner)
-    fs = CannyFS(be, echo_errors=False)
+
+    # slow *removals only* (real sleep) behind a 2-worker pool: listings
+    # and stats stay fast so the walk races ahead, while at most two
+    # claimed removals can execute per claim window — the rest reliably
+    # outlive the walk and stay elidable.  (An instant backend lets the
+    # eager unlinks race the rmdir out of the optimization window —
+    # executed/claimed ops can't be elided — same reasoning as
+    # benchmarks.paper_tables.fusion_table.)
+    class SlowRemovals:
+        def __init__(self, inner, delay_s=0.05):
+            self.inner = inner
+            self.delay_s = delay_s
+
+        def __getattr__(self, name):
+            return getattr(self.inner, name)
+
+        def _slow(self, call, *a):
+            import time
+            time.sleep(self.delay_s)
+            return call(*a)
+
+        def unlink(self, p): return self._slow(self.inner.unlink, p)
+        def rmdir(self, p): return self._slow(self.inner.rmdir, p)
+        def remove_tree(self, p):
+            return self._slow(self.inner.remove_tree, p)
+
+    be = Boundary(SlowRemovals(inner))
+    fs = CannyFS(be, workers=2, echo_errors=False)
     fs.rmtree("pre")
     fs.drain()
     total_ops = sum(be.counts.values())
@@ -259,9 +316,9 @@ def test_bulk_remove_rolls_up_to_single_fused_call_in_window():
     """Extract + readdir-driven rmtree inside one unobserved window:
     chains elide, leaf collapses are absorbed by their parents, and
     exactly ONE remove_tree reaches the backend.  The dirs are created
-    (and drained) first: a still-provisional mkdir — one the backend has
-    not yet confirmed created the dir fresh — correctly refuses to fuse
-    (see test_provisional_mkdir_blocks_bulk_remove)."""
+    (and drained) first, so the collapse needs no exec-time
+    re-verification (the same-breath variant with still-provisional
+    mkdirs is test_same_breath_extract_rmtree_promotes_and_fuses)."""
     gate_inner = GateBackend()
     be = Boundary(gate_inner)
     fs = CannyFS(be, workers=1, echo_errors=False)
@@ -270,6 +327,7 @@ def test_bulk_remove_rolls_up_to_single_fused_call_in_window():
     fs.drain()                    # dirs backend-proven fresh: promoted
     be.counts.clear()
     fs.fsync(GATE)                # wedge: everything below stays pending
+    gate_inner.entered.wait()
     for d in ("t", "t/u"):
         for i in range(3):
             fs.write_file(f"{d}/f{i}", b"z" * 16)
@@ -287,12 +345,14 @@ def test_bulk_remove_rolls_up_to_single_fused_call_in_window():
     fs.close()
 
 
-def test_provisional_mkdir_blocks_bulk_remove():
-    """The review-fix semantics: while a (tolerant) mkdir is pending, the
-    overlay's complete-and-empty claim is provisional — overlay reads may
-    use it, but a fused remove_tree may not, because the dir could turn
-    out to pre-exist with contents an unfused execution would have
-    preserved behind ENOTEMPTY."""
+def test_provisional_mkdir_demotes_fused_remove_at_exec():
+    """Exec-time re-verification (PR 4, ROADMAP m): a subtree resting on
+    a still-pending (tolerant) mkdir now *fuses* — the fused op's DAG
+    edges order it after the mkdir, and when the mkdir lands on a
+    pre-existing directory (demoted), the fused removal falls back to the
+    byte-identical per-entry path: pre-existing contents are preserved
+    behind ENOTEMPTY exactly as an unfused execution would have left
+    them."""
     inner = GateBackend()
     inner.mkdir("pre")            # pre-existing, never observed
     inner.create("pre/old")
@@ -301,18 +361,118 @@ def test_provisional_mkdir_blocks_bulk_remove():
     fs.create(GATE)
     fs.drain()
     fs.fsync(GATE)                # wedge: the mkdir below stays pending
+    inner.entered.wait()
     fs.makedirs("pre")            # tolerant mkdir over a pre-existing dir
+    fs.write_file("pre/x", b"1")
+    fs.unlink("pre/x")
+    fs.rmdir("pre")               # provisional: fuses, re-verified at exec
+    assert fs.stats.bulk_removes == 1
+    inner.gate.set()
+    fs.drain()
+    # the mkdir demoted the overlay claim -> per-entry fallback: data
+    # preserved, removal surfaced as ENOTEMPTY in the ledger
+    assert fs.stats.bulk_reverify_demoted == 1
+    assert fs.stats.bulk_reverify_promoted == 0
+    assert inner.snapshot()["files"]["pre/old"] == b"precious"
+    sig = [(e.kind, getattr(e.error, "errno", None))
+           for e in fs.ledger.entries()]
+    assert ("remove_tree", errno.ENOTEMPTY) in sig
+    fs.close()
+
+
+def test_demoted_fallback_still_removes_sibling_subtrees():
+    """A demoted subdir's ENOTEMPTY must not abort the per-entry
+    fallback: sibling subtrees the unfused rmdirs would have removed are
+    still removed, the pre-existing data survives, and the failure
+    surfaces on the root exactly as an unfused execution's would."""
+    inner = GateBackend()
+    inner.mkdir("root")           # pre-existing, never observed
+    inner.mkdir("root/a")
+    inner.create("root/a/old")
+    inner.write_at("root/a/old", 0, b"precious")
+    fs = CannyFS(inner, workers=1, echo_errors=False)
+    fs.create(GATE)
+    fs.drain()
+    fs.fsync(GATE)                # wedge: every mkdir below stays pending
+    inner.entered.wait()
+    fs.makedirs("root")           # demoted at exec (pre-existing)
+    fs.makedirs("root/a")         # demoted at exec (pre-existing)
+    fs.makedirs("root/b")         # promoted at exec (created fresh)
+    fs.write_file("root/b/f", b"1")
+    fs.rmtree("root")             # fuses; demotion forces the fallback
+    assert fs.stats.bulk_removes >= 1
+    inner.gate.set()
+    fs.drain()
+    assert fs.stats.bulk_reverify_demoted == 1
+    snap = inner.snapshot()
+    # byte-identical to unfused: b removed, a's pre-existing data kept
+    assert "root/b" not in snap["dirs"] and "root/b/f" not in snap["files"]
+    assert snap["files"]["root/a/old"] == b"precious"
+    assert "root" in snap["dirs"] and "root/a" in snap["dirs"]
+    sig = [(e.kind, getattr(e.error, "errno", None))
+           for e in fs.ledger.entries()]
+    assert ("remove_tree", errno.ENOTEMPTY) in sig
+    fs.close()
+
+
+def test_reverify_policy_off_keeps_provisional_block():
+    """FusionPolicy(reverify_provisional=False) restores the PR 3
+    semantics: a provisional subtree refuses to fuse outright."""
+    inner = GateBackend()
+    inner.mkdir("pre")
+    inner.create("pre/old")
+    inner.write_at("pre/old", 0, b"precious")
+    fs = CannyFS(inner, workers=1, echo_errors=False,
+                 fusion=FusionPolicy(reverify_provisional=False))
+    fs.create(GATE)
+    fs.drain()
+    fs.fsync(GATE)
+    inner.entered.wait()
+    fs.makedirs("pre")
     fs.write_file("pre/x", b"1")
     fs.unlink("pre/x")
     fs.rmdir("pre")               # provisional: must NOT fuse
     assert fs.stats.bulk_removes == 0
     inner.gate.set()
     fs.drain()
-    # exactly the unfused outcome: rmdir failed ENOTEMPTY, data preserved
     assert inner.snapshot()["files"]["pre/old"] == b"precious"
     sig = [(e.kind, getattr(e.error, "errno", None))
            for e in fs.ledger.entries()]
     assert ("rmdir", errno.ENOTEMPTY) in sig
+    fs.close()
+
+
+def test_same_breath_extract_rmtree_promotes_and_fuses_to_one_call():
+    """The paper's headline collapse, recovered (ROADMAP m): extract and
+    readdir-driven rmtree issued in ONE breath — every mkdir still
+    pending at fuse time — now roll up to a single remove_tree backend
+    call.  The fused op executes after the mkdirs (DAG edges), each
+    mkdir promotes its provisional claim, and the exec-time check
+    confirms the overlay proof instead of refusing to fuse."""
+    gate_inner = GateBackend()
+    be = Boundary(gate_inner)
+    fs = CannyFS(be, workers=1, echo_errors=False)
+    fs.create(GATE)
+    fs.drain()
+    be.counts.clear()
+    fs.fsync(GATE)                # wedge: mkdirs AND files stay pending
+    gate_inner.entered.wait()
+    fs.makedirs("t/u")            # same breath: no drain before rmtree
+    for d in ("t", "t/u"):
+        for i in range(3):
+            fs.write_file(f"{d}/f{i}", b"z" * 16)
+    fs.rmtree("t")                # readdir-driven, fully in-window
+    assert fs.stats.bulk_removes >= 1
+    gate_inner.gate.set()
+    fs.drain()
+    assert fs.stats.bulk_reverify_promoted >= 1
+    assert fs.stats.bulk_reverify_demoted == 0
+    assert be.counts["remove_tree"] == 1          # ONE fused call
+    assert be.counts["unlink"] == 0 and be.counts["rmdir"] == 0
+    assert be.counts["readdir"] == 0 and be.counts["readdir_plus"] == 0
+    snap = gate_inner.snapshot()
+    assert snap["files"] == {GATE: b""} and snap["dirs"] == {""}
+    assert len(fs.ledger) == 0
     fs.close()
 
 
@@ -402,7 +562,10 @@ def test_bulk_remove_fault_fires_per_fused_call_and_recovers():
     prepopulate(inner, n_dirs=2, files_per_dir=3)
     plan = FaultPlan([FaultRule(error="EIO", ops=("remove_tree",),
                                 max_failures=1)])
-    fs = CannyFS(FaultInjectingBackend(inner, plan), echo_errors=False)
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0))
+    fs = CannyFS(FaultInjectingBackend(remote, plan), workers=2,
+                 echo_errors=False)
 
     def body(fs):
         fs.rmtree("pre")
@@ -436,8 +599,12 @@ def test_quota_released_by_fused_remove_tree():
     """The Quota decorator's uncharge mirror of the fused call: bytes and
     inodes charged during extract are released by one remove_tree."""
     from repro.core import QuotaBackend
-    q = QuotaBackend(InMemoryBackend(), budget_bytes=1 << 20, max_inodes=64)
-    fs = CannyFS(q, echo_errors=False)
+    q = QuotaBackend(
+        LatencyBackend(InMemoryBackend(),
+                       LatencyModel(meta_ms=1.0, data_ms=1.0,
+                                    jitter_sigma=0.0)),
+        budget_bytes=1 << 20, max_inodes=64)
+    fs = CannyFS(q, workers=2, echo_errors=False)
     fs.makedirs("t")
     for i in range(4):
         fs.write_file(f"t/f{i}", b"q" * 100)
@@ -447,6 +614,118 @@ def test_quota_released_by_fused_remove_tree():
     fs.drain()
     assert fs.stats.bulk_removes >= 1
     assert q.used == 0 and q.inodes_used == 0
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# cached-listing LRU bound (OverlayPolicy.max_cached_listings)
+# ---------------------------------------------------------------------------
+
+def test_listing_lru_evicts_completeness_only():
+    """Wide-namespace bound (ROADMAP l): with N cached listings allowed,
+    the N+1th readdir miss evicts the least-recently-used listing —
+    demoting that directory's completeness (its next readdir is a miss
+    again) while keeping the pending membership delta intact."""
+    inner = InMemoryBackend()
+    n_dirs = 6
+    for i in range(n_dirs):
+        inner.mkdir(f"wide{i}")
+        inner.create(f"wide{i}/base")
+    be = Boundary(inner)
+    from repro.core import OverlayPolicy
+    fs = CannyFS(be, echo_errors=False,
+                 overlay=OverlayPolicy(max_cached_listings=2))
+    # a pending delta in wide0 that eviction must NOT drop
+    fs.create("wide0/pending")
+    for i in range(n_dirs):
+        assert sorted(fs.readdir(f"wide{i}"))[-1:] in (["base"], ["pending"])
+    assert be.counts["readdir_plus"] == n_dirs      # all misses, LRU churns
+    # wide0's listing was evicted long ago: a re-list hits the backend,
+    # but the in-window create is still merged into the answer
+    assert fs.readdir("wide0") == ["base", "pending"]
+    assert be.counts["readdir_plus"] == n_dirs + 1
+    # pending membership survived eviction: lookup still proves presence
+    assert fs.engine.overlay.lookup("wide0/pending") is True
+    # the two most recent listings are still cached (overlay hits)
+    before = be.counts["readdir_plus"]
+    assert fs.readdir(f"wide{n_dirs - 1}") == ["base"]
+    assert be.counts["readdir_plus"] == before
+    fs.drain()
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_listing_lru_recency_on_hits():
+    """Overlay readdir hits refresh LRU recency: the repeatedly-read
+    listing survives while the cold one is evicted."""
+    inner = InMemoryBackend()
+    for name in ("hot", "cold", "third"):
+        inner.mkdir(name)
+    be = Boundary(inner)
+    from repro.core import OverlayPolicy
+    fs = CannyFS(be, echo_errors=False,
+                 overlay=OverlayPolicy(max_cached_listings=2))
+    fs.readdir("hot")             # miss -> cached
+    fs.readdir("cold")            # miss -> cached (hot is now LRU)
+    fs.readdir("hot")             # hit refreshes hot's recency
+    fs.readdir("third")           # miss -> evicts cold, not hot
+    n = be.counts["readdir_plus"]
+    fs.readdir("hot")             # still cached
+    assert be.counts["readdir_plus"] == n
+    fs.readdir("cold")            # evicted: miss again
+    assert be.counts["readdir_plus"] == n + 1
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# overlay-aware walk() fast path
+# ---------------------------------------------------------------------------
+
+def test_walk_served_from_overlay_without_sealing():
+    """ROADMAP k: a walk over an in-window tree answers entirely from the
+    overlay — no backend roundtrips, no seals — while the worker is
+    wedged (a sync readdir or stat would deadlock)."""
+    be, fs = gated_fs()
+    fs.mkdir("w")
+    fs.mkdir("w/sub")
+    fs.write_file("w/a", b"1")
+    fs.write_file("w/sub/b", b"2")
+    seen = list(fs.walk("w"))     # would deadlock if any level went sync
+    assert seen == [("w", ["sub"], ["a"]), ("w/sub", [], ["b"])]
+    st = fs.stats
+    assert st.overlay_readdirs == 2
+    assert st.overlay_seals_avoided == 2
+    # the chains under the walked tree stayed rewritable: unlinks elide
+    fs.unlink("w/a")
+    fs.unlink("w/sub/b")
+    assert st.elided_ops >= 4
+    release(be, fs)
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_walk_falls_back_per_directory_on_incomplete_dirs():
+    """A never-listed pre-existing subdir forces the sync fallback for
+    that directory only; overlay-known levels still fast-path."""
+    inner = InMemoryBackend()
+    inner.mkdir("mix")
+    inner.mkdir("mix/old")        # pre-existing, never observed
+    inner.create("mix/old/f")
+    be = Boundary(inner)
+    fs = CannyFS(be, echo_errors=False)
+    assert fs.readdir("mix") == ["old"]   # miss: installs mix's listing
+    fs.mkdir("mix/fresh")                 # in-window: overlay-complete
+    walked = {d: (tuple(sub), tuple(files))
+              for d, sub, files in fs.walk("mix")}
+    assert walked == {"mix": (("fresh", "old"), ()),
+                      "mix/fresh": ((), ()),
+                      "mix/old": ((), ("f",))}
+    # exactly one backend listing for the unknown dir; the known levels
+    # (mix from its cached listing, fresh from its pending mkdir) hit
+    assert be.counts["readdir_plus"] == 2          # mix + mix/old
+    assert fs.stats.overlay_readdirs >= 2
+    fs.drain()
     assert len(fs.ledger) == 0
     fs.close()
 
@@ -508,11 +787,12 @@ def test_readdir_driven_rmtree_beats_overlay_off_on_remote_backend():
     def build(overlay):
         inner = InMemoryBackend()
         dirs, entries = prepopulate(inner, n_dirs=4, files_per_dir=8)
-        clock = VirtualClock()
+        # real (small) latency so pending removals outlive the walk; a
+        # virtual clock sleeps in zero real time and would let the eager
+        # unlinks race the rmdir out of the optimization window
         remote = LatencyBackend(
-            inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0),
-            clock=clock)
-        fs = CannyFS(remote, workers=8, echo_errors=False, overlay=overlay)
+            inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0))
+        fs = CannyFS(remote, workers=2, echo_errors=False, overlay=overlay)
         fs.rmtree("pre")
         fs.close()
         snap = inner.snapshot()
