@@ -29,37 +29,13 @@ from __future__ import annotations
 
 import json
 import sys
-import time
 
-from repro.core import (CannyFS, InMemoryBackend, LatencyBackend,
-                        LatencyModel, VirtualClock)
+from repro.core import CannyFS, InMemoryBackend, LatencyBackend, LatencyModel
 
-from .workloads import TreeSpec, extract_then_rm, extract_tree, synth_tree
+from .workloads import (PacedVirtualClock, TreeSpec, extract_then_rm,
+                        extract_tree, synth_tree)
 
 MIN_SPEEDUP = 2.0
-
-
-class PacedVirtualClock(VirtualClock):
-    """Virtual accounting plus a real sleep scaled down by ``pace``.
-
-    The throughput *measure* stays virtual (per-thread makespan), but a
-    zero-real-cost op stream would leave the worker distribution to the
-    OS scheduler: one GIL-holding worker can drain every shard before the
-    parked ones wake, collapsing the measured speedup to ~1x on a bad
-    scheduling roll.  The scaled real sleep makes each op genuinely block
-    (releasing the GIL), so the 8-worker pool actually interleaves and
-    the makespan reflects the dispatch layer, not scheduler luck — at
-    1/20th real time, a 1 ms modelled roundtrip costs 50 us of wall
-    clock."""
-
-    def __init__(self, pace: float = 0.05):
-        super().__init__()
-        self.pace = pace
-
-    def sleep(self, dt: float) -> None:
-        super().sleep(dt)
-        if dt > 0:
-            time.sleep(dt * self.pace)
 
 
 def dispatch_throughput(dirs, files, workers: int) -> dict:

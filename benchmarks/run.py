@@ -26,6 +26,7 @@ def _tables():
         "executor_modes": paper_tables.executor_modes,
         "rw_switch": paper_tables.rw_switch,
         "fusion": paper_tables.fusion_table,
+        "cold_walk": paper_tables.cold_walk_table,
         "fault_recovery": paper_tables.fault_recovery,
         # beyond-paper: the engine inside the training framework
         "checkpoint_stall": io_training.checkpoint_stall,

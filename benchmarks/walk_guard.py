@@ -1,0 +1,147 @@
+"""CI regression guard for the speculative metadata prefetch pipeline
+(PR 5).  Emits ``BENCH_pr5.json`` and FAILS (exit 1) when the pipelined
+cold walk regressed:
+
+1. **Roundtrip bound** — a cold walk of the ``cold_walk`` manifest must
+   complete in at most ``ceil(dirs / batch) + depth`` LatencyBackend
+   roundtrips (plus a small race slack): one vectored
+   ``readdir_plus_vec`` per frontier batch, plus the walker's one sync
+   miss per level of its depth-first spine before the pipeline catches
+   up.  Without the prefetcher every directory is one sync roundtrip, so
+   the bound is derived from the manifest (dirs, depth, batch width) and
+   holds at any ``REPRO_BENCH_SCALE`` — a fixed threshold tuned at one
+   scale would go vacuous (or spuriously red) at another.
+
+2. **Virtual-time speedup** — the same walk with ``prefetch=False``
+   (the ablation) must cost >= ``MIN_SPEEDUP``x the prefetch-on run's
+   virtual I/O time (the latency model's total injected service,
+   deterministic at zero jitter: op-count x RTT).
+
+Latency is paced-virtual (``PacedVirtualClock``): the measure is
+virtual, but each roundtrip also pays a scaled real sleep so the
+speculative batches *genuinely* overlap the walker in wall time — on a
+pure virtual clock the walker could drain the tree before the first
+batch landed and the guard would flake on scheduling luck.
+
+    PYTHONPATH=src REPRO_BENCH_SCALE=0.1 python -m benchmarks.walk_guard
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+from repro.core import (CannyFS, InMemoryBackend, LatencyBackend,
+                        LatencyModel, PrefetchPolicy)
+
+from .workloads import (ColdTreeSpec, PacedVirtualClock, cold_walk,
+                        populate_cold_tree)
+
+MIN_SPEEDUP = 3.0
+BATCH = 16          # fixed width so the manifest-derived bound is exact
+META_MS = 40.0      # paced to 4 ms real per roundtrip: solid vs overhead
+PACE = 0.1
+# beyond one batch per ceil(dirs/BATCH) and one spine miss per level,
+# tolerate a few duplicate fetches where the walker's sync miss raced a
+# batch already carrying the same directory
+OP_SLACK = 6
+
+
+def run_walk(spec: ColdTreeSpec, *, prefetch: bool) -> dict:
+    inner = InMemoryBackend()
+    dirs = populate_cold_tree(inner, spec)
+    clock = PacedVirtualClock(pace=PACE)
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=META_MS, data_ms=META_MS,
+                            jitter_sigma=0.0, seed=5), clock=clock)
+    policy = (PrefetchPolicy(adaptive_batch=False, max_batch=BATCH)
+              if prefetch else False)
+    fs = CannyFS(remote, workers=8, echo_errors=False, prefetch=policy)
+    visited = cold_walk(fs, spec.root)
+    walk_ops = remote.op_count          # before close() lands stragglers
+    fs.close()
+    st = fs.stats
+    return {
+        "visited_dirs": visited,
+        "manifest_dirs": len(dirs),
+        "backend_ops_walk": walk_ops,
+        "backend_ops_total": remote.op_count,
+        "virtual_io_s": clock.now(),
+        "prefetch_issued": st.prefetch_issued,
+        "prefetch_batches": st.prefetch_batches,
+        "prefetch_hits": st.prefetch_hits,
+        "prefetch_wasted": st.prefetch_wasted,
+        "prefetch_cancelled": st.prefetch_cancelled,
+        "overlay_readdirs": st.overlay_readdirs,
+        "ledger": len(fs.ledger),
+    }
+
+
+def main() -> int:
+    spec = ColdTreeSpec().scaled()
+    n_dirs = spec.n_dirs()
+    on = run_walk(spec, prefetch=True)
+    off = run_walk(spec, prefetch=False)
+    # the manifest-derived bound: batches + one spine miss per level
+    # (the root's miss is level 0) + race slack
+    max_ops = math.ceil(n_dirs / BATCH) + spec.depth + 1 + OP_SLACK
+    speedup = (off["virtual_io_s"] / on["virtual_io_s"]
+               if on["virtual_io_s"] else 0.0)
+    report = {
+        "cold_walk": {
+            "spec": {"fanout": spec.fanout, "depth": spec.depth,
+                     "files_per_dir": spec.files_per_dir,
+                     "n_dirs": n_dirs, "batch": BATCH},
+            "prefetch_on": on,
+            "prefetch_off": off,
+            "max_ops": max_ops,
+            "speedup_virtual": speedup,
+            "min_speedup": MIN_SPEEDUP,
+        },
+    }
+    with open("BENCH_pr5.json", "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"cold_walk: dirs={n_dirs} depth={spec.depth} batch={BATCH}  "
+          f"on: ops={on['backend_ops_total']} (bound {max_ops}) "
+          f"virtual={on['virtual_io_s']:.2f}s  "
+          f"off: ops={off['backend_ops_total']} "
+          f"virtual={off['virtual_io_s']:.2f}s  speedup={speedup:.2f}x "
+          f"(batches={on['prefetch_batches']} hits={on['prefetch_hits']} "
+          f"wasted={on['prefetch_wasted']})")
+    ok = True
+    for name, r in (("prefetch-on", on), ("prefetch-off", off)):
+        if r["visited_dirs"] != n_dirs:
+            print(f"FAIL: {name} walk visited {r['visited_dirs']} dirs, "
+                  f"manifest lists {n_dirs} — traversal lost entries",
+                  file=sys.stderr)
+            ok = False
+        if r["ledger"]:
+            print(f"FAIL: {name} run left {r['ledger']} deferred errors "
+                  "on a read-only walk", file=sys.stderr)
+            ok = False
+    if on["backend_ops_total"] > max_ops:
+        print(f"FAIL: {on['backend_ops_total']} roundtrips for a cold "
+              f"walk of {n_dirs} dirs exceeds the manifest-derived bound "
+              f"ceil(dirs/batch)+depth+slack = {max_ops} — the prefetch "
+              "pipeline fell behind its consumer", file=sys.stderr)
+        ok = False
+    if on["prefetch_batches"] == 0:
+        print("FAIL: prefetch_batches == 0 — the pipeline never issued a "
+              "vectored batch on a cold walk", file=sys.stderr)
+        ok = False
+    if off["backend_ops_total"] < n_dirs:
+        print(f"FAIL: the ablation walked {n_dirs} cold dirs in only "
+              f"{off['backend_ops_total']} roundtrips — prefetch leaked "
+              "into the prefetch=False run and the speedup below is "
+              "meaningless", file=sys.stderr)
+        ok = False
+    if speedup < MIN_SPEEDUP:
+        print(f"FAIL: prefetch-on virtual I/O time is only {speedup:.2f}x "
+              f"better than the ablation (need >= {MIN_SPEEDUP}x)",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

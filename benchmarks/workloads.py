@@ -19,11 +19,35 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import (CannyFS, EagerFlags, InMemoryBackend, LatencyBackend,
-                        LatencyModel)
+                        LatencyModel, VirtualClock)
 
 
 def bench_scale() -> float:
     return float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+
+class PacedVirtualClock(VirtualClock):
+    """Virtual accounting plus a real sleep scaled down by ``pace``.
+
+    The throughput *measure* stays virtual (per-thread makespan / total
+    ``now()``), but a zero-real-cost op stream would leave the worker
+    distribution to the OS scheduler: one GIL-holding worker can drain
+    every shard before the parked ones wake, collapsing a measured
+    speedup to ~1x on a bad scheduling roll — and a pipelined prefetch
+    would never genuinely overlap its consumer.  The scaled real sleep
+    makes each op genuinely block (releasing the GIL), so pools actually
+    interleave and pipelines actually run ahead — at 1/20th real time, a
+    1 ms modelled roundtrip costs 50 us of wall clock.  (Shared by
+    dispatch_guard and walk_guard.)"""
+
+    def __init__(self, pace: float = 0.05):
+        super().__init__()
+        self.pace = pace
+
+    def sleep(self, dt: float) -> None:
+        super().sleep(dt)
+        if dt > 0:
+            time.sleep(dt * self.pace)
 
 
 @dataclass(frozen=True)
@@ -130,6 +154,69 @@ def populate_tree(backend, dirs, files, payload_bytes: int = 64) -> int:
     for path, data in files:
         backend.create(path)
         backend.write_at(path, 0, data[:payload_bytes])
+        n += 1
+    return n
+
+
+@dataclass(frozen=True)
+class ColdTreeSpec:
+    """A balanced cold tree for the ``cold_walk`` workload: ``fanout``
+    subdirectories per directory to ``depth`` levels, ``files_per_dir``
+    files in each.  The manifest (dirs, depth) is the source of truth
+    for walk_guard's roundtrip bounds, so it must be exact."""
+
+    fanout: int = 4
+    depth: int = 4
+    files_per_dir: int = 2
+    root: str = "cold"
+
+    def scaled(self) -> "ColdTreeSpec":
+        # scale the fanout, keep the depth: the guard's pipelining story
+        # is about breadth-per-level batches racing a depth-first walker
+        s = bench_scale()
+        return ColdTreeSpec(max(int(round(self.fanout * s)), 3),
+                            self.depth, self.files_per_dir, self.root)
+
+    def n_dirs(self) -> int:
+        """Directories including the root: 1 + f + f^2 + ... + f^depth."""
+        return sum(self.fanout ** k for k in range(self.depth + 1))
+
+
+def synth_cold_tree(spec: ColdTreeSpec) -> list[str]:
+    """The manifest: every directory path, parents before children."""
+    level = [spec.root]
+    dirs = [spec.root]
+    for _ in range(spec.depth):
+        nxt = []
+        for parent in level:
+            for i in range(spec.fanout):
+                nxt.append(f"{parent}/s{i}")
+        dirs.extend(nxt)
+        level = nxt
+    return dirs
+
+
+def populate_cold_tree(backend, spec: ColdTreeSpec) -> list[str]:
+    """Materialize the cold tree directly on a backend (no engine, no
+    latency) — the pre-existing state a cold walk must discover."""
+    dirs = synth_cold_tree(spec)
+    for d in dirs:
+        backend.mkdir(d)
+        for j in range(spec.files_per_dir):
+            backend.create(f"{d}/f{j}")
+    return dirs
+
+
+def cold_walk(fs: CannyFS, root: str = "cold") -> int:
+    """Full traversal of a tree the mount has never observed — the cold
+    metadata walk that opens both of the paper's model tasks.  Without
+    the prefetch pipeline every directory costs one synchronous
+    ``readdir_plus`` roundtrip, serialized by the recursion; with it the
+    discovered frontier is fetched in batched ``readdir_plus_vec`` reads
+    ahead of the walker.  Returns the number of directories visited (the
+    caller cross-checks it against the manifest — no silent truncation)."""
+    n = 0
+    for _d, _subdirs, _files in fs.walk(root):
         n += 1
     return n
 

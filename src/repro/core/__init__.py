@@ -54,10 +54,18 @@ FusionPolicy(...))`` or ``fusion=False``) / namespace overlay
 (``core/namespace.py``: the write-back directory-tree delta that answers
 ``readdir``/``stat``/``exists``/``walk`` from pending state without
 sealing chains, cached listings LRU-bounded; control via
-``CannyFS(overlay=OverlayPolicy(...))`` or ``overlay=False``) / executor
-(``core/executor.py``: pool | thread_per_op).  Fault rules fire per
-*fused* backend call (one ``write_vec`` or ``remove_tree`` of N engine
-ops is a single match), and torn writes surface as ``ShortWriteError``.
+``CannyFS(overlay=OverlayPolicy(...))`` or ``overlay=False``) /
+prefetcher (``core/prefetch.py``: the speculative metadata-prefetch
+pipeline for *cold* trees — a readdir/walk miss seeds a bounded BFS
+frontier fetched in batched ``readdir_plus_vec`` reads, ONE roundtrip
+per batch sized to ~2x the measured BDP, installed into the overlay
+without sealing and cancelled by racing mutations so semantics stay
+byte-identical; control via ``CannyFS(prefetch=PrefetchPolicy(...))``
+or ``prefetch=False``) / executor (``core/executor.py``: pool |
+thread_per_op).  Fault rules fire per *fused* backend call (one
+``write_vec``, ``readdir_plus_vec`` or ``remove_tree`` of N engine ops
+is a single match — speculative batch faults are advisory and never
+reach the ledger), and torn writes surface as ``ShortWriteError``.
 """
 from .backend import (Clock, InMemoryBackend, LatencyBackend, LatencyModel,
                       LocalBackend, RealClock, StatResult, StorageBackend,
@@ -71,7 +79,9 @@ from .faults import (FaultInjectingBackend, FaultPlan, FaultRule,
 from .flags import EagerFlags, N_FLAGS
 from .fs import CannyFS, CannyFile
 from .fusion import FusionPolicy
-from .namespace import NamespaceOverlay, OverlayPolicy, RemoveWitness
+from .namespace import (NamespaceOverlay, OverlayPolicy, RemoveWitness,
+                        SpeculationTicket)
+from .prefetch import MetadataPrefetcher, PrefetchPolicy
 from .transaction import Transaction, run_transaction
 
 __all__ = [
@@ -79,10 +89,12 @@ __all__ = [
     "EagerIOEngine", "EngineStats", "EnginePoisonedError", "ErrorLedger",
     "FaultInjectingBackend", "FaultPlan", "FaultRule", "FusionPolicy",
     "InMemoryBackend",
-    "LatencyBackend", "LatencyModel", "LedgerEntry", "LocalBackend", "N_FLAGS",
-    "NamespaceOverlay", "OpCancelledError", "OverlayPolicy", "QuotaBackend",
+    "LatencyBackend", "LatencyModel", "LedgerEntry", "LocalBackend",
+    "MetadataPrefetcher", "N_FLAGS",
+    "NamespaceOverlay", "OpCancelledError", "OverlayPolicy",
+    "PrefetchPolicy", "QuotaBackend",
     "RealClock", "RemoveWitness", "RollbackLeakError",
-    "ShortWriteError", "StatResult",
+    "ShortWriteError", "SpeculationTicket", "StatResult",
     "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
     "is_under", "make_fault", "norm_path", "parent_of", "run_transaction",
 ]

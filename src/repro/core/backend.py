@@ -149,6 +149,29 @@ class StorageBackend:
                 out.append((name, None))
         return out
 
+    def readdir_plus_vec(
+            self, paths: list[str],
+    ) -> dict[str, list[tuple[str, Optional[StatResult]]]]:
+        """Vectored READDIRPLUS: list several directories in one backend
+        call — the speculative metadata prefetch pipeline's primitive
+        (``core/prefetch.py``).  Returns ``{path: listing}`` keyed by the
+        normalized path.  Per-*directory* failures are advisory (a
+        directory that cannot be listed — removed, permission-denied — is
+        simply omitted from the result), mirroring ``readdir_plus``'s
+        per-entry tolerance: the whole batch is a speculative read and
+        must never fail a caller.  The default is a loop over
+        ``readdir_plus`` so every backend (and every test double
+        overriding ``readdir``/``stat``) composes; decorator backends
+        override it to pay their cost once per *fused* batch."""
+        out: dict[str, list[tuple[str, Optional[StatResult]]]] = {}
+        for p in paths:
+            p = norm_path(p)
+            try:
+                out[p] = self.readdir_plus(p)
+            except OSError:
+                pass
+        return out
+
 
 # ---------------------------------------------------------------------------
 
@@ -293,6 +316,9 @@ class LocalBackend(StorageBackend):
                 except OSError:
                     out.append((de.name, None))
         return sorted(out)
+
+    # readdir_plus_vec: the StorageBackend loop default already pays one
+    # scandir pass per directory through this class's readdir_plus
 
     def remove_tree(self, path):
         # one bottom-up walk instead of one syscall chain per engine op —
@@ -750,6 +776,13 @@ class LatencyBackend(StorageBackend):
         # the overlay's whole-directory warm-up costs one op, not 1+N
         self._delay("readdir")
         return self.inner.readdir_plus(p)
+    def readdir_plus_vec(self, paths):
+        # ONE roundtrip for the whole batch of listings — the prefetch
+        # pipeline's win: a cold walk pays dirs/batch RTTs, not dirs.
+        # (The *batch width* is sized by the prefetcher from this
+        # backend's live RTT/bandwidth EWMAs via bdp_bytes().)
+        self._delay("readdir")
+        return self.inner.readdir_plus_vec(paths)
     def remove_tree(self, p):
         # one roundtrip for the whole fused subtree removal — this is the
         # cross-path bulk-remove win (cf. write_vec for coalesced writes)

@@ -1,5 +1,5 @@
 """The CannyFS eager-I/O engine: scheduler / optimizer / namespace
-overlay / executor.
+overlay / prefetcher / executor.
 
 Architecture (one op's life, left to right)::
 
@@ -9,7 +9,9 @@ Architecture (one op's life, left to right)::
         |  OpScheduler (core/scheduler.py)                        |
         |  per-path FIFO + cross-path DAG edges; submission state |
         |  AND ready queues sharded by path hash; in-flight       |
-        |  budget; poison/close                                   |
+        |  budget; poison/close; per-shard LOW-PRIORITY lane for  |
+        |  speculative ops (submit_speculative: no DAG edges,     |
+        |  drained only when the normal lanes are dry)            |
         +---------------+-----------------------------------------+
                         | pending tip / chain, under shard+op locks
         +---------------v-----------------------------------------+
@@ -30,13 +32,24 @@ Architecture (one op's life, left to right)::
         | Overlay     |     |  (core/executor.py)                 |
         | (namespace  |     |  worker i of W owns shards s with   |
         |  .py)       |     |  s % W == i, steals from the rest   |
-        +-------------+     |  when dry, parks when all empty;    |
+        +------^------+     |  when dry, parks when all empty;    |
           mirrors every     |  completion releases dependents     |
           admitted op as a  +-------------------------------------+
           directory-tree delta; readdir/stat/exists/walk answered
           here never seal a chain; cached listings are LRU-bounded
           (OverlayPolicy.max_cached_listings; eviction demotes
           completeness only, never pending membership)
+               |
+        +------v---------------------------------------------------+
+        |  MetadataPrefetcher (core/prefetch.py)                   |
+        |  speculative pipeline for COLD trees: a readdir/walk miss|
+        |  seeds a bounded BFS frontier; batched readdir_plus_vec  |
+        |  reads (ONE roundtrip per batch, width ~2x BDP) install  |
+        |  listings into the overlay at LRU-cold recency without   |
+        |  sealing; SpeculationTickets cancel on racing mutations; |
+        |  consumers latch onto in-flight batches (demand          |
+        |  promotion) instead of duplicating the fetch             |
+        +----------------------------------------------------------+
 
 Semantics (paper §2–§3):
 
@@ -67,8 +80,10 @@ Semantics (paper §2–§3):
   ``bulk_removes`` (cross-path removal collapses),
   ``bulk_reverify_promoted``/``bulk_reverify_demoted`` (fused removals
   confirmed / fallen back at execution time), ``steals``/``parks``
-  (dispatch-layer load balancing) and ``adaptive_max_bytes`` (the
-  latest BDP-derived coalescing clamp).
+  (dispatch-layer load balancing), ``adaptive_max_bytes`` (the latest
+  BDP-derived coalescing clamp) and
+  ``prefetch_{issued,batches,hits,wasted,cancelled}`` (the speculative
+  metadata-prefetch pipeline's accounting).
 * Failures of background ops land in the ErrorLedger; optional
   abort_on_error poisons the engine.  ``max_inflight`` bounds queued ops
   (fused absorptions don't consume new slots — coalescing is also
@@ -87,6 +102,7 @@ from .executor import make_executor
 from .flags import EagerFlags
 from .fusion import Fuser, FusionPolicy, MetaPayload, WritePayload
 from .namespace import NamespaceOverlay, OverlayPolicy
+from .prefetch import MetadataPrefetcher, PrefetchPolicy
 from .scheduler import NEEDS_CHILDREN, STRUCTURAL, OpScheduler, _Op
 
 
@@ -118,6 +134,14 @@ class EngineStats:
     # -- dispatch counters (sharded ready queues + work stealing) ----------
     steals: int = 0              # ops popped from a non-owned shard's deque
     parks: int = 0               # worker waits in the all-shards-empty lot
+    # -- speculative metadata prefetch (core/prefetch.py) ------------------
+    prefetch_issued: int = 0     # dirs sent in speculative batches
+    prefetch_batches: int = 0    # vectored readdir_plus_vec calls submitted
+    prefetch_hits: int = 0       # overlay reads served by a speculative
+    #                              listing (first consumption per dir)
+    prefetch_wasted: int = 0     # fetched but uninstallable (failed batch,
+    #                              stale vs a sync miss, evicted at insert)
+    prefetch_cancelled: int = 0  # invalidated by racing mutations/teardown
     # -- adaptive fusion sizing --------------------------------------------
     adaptive_max_bytes: int = 0  # latest BDP-derived write-coalescing clamp
     # -- fault / trace counters (chaos + error-path observability) --------
@@ -210,6 +234,7 @@ class EagerIOEngine:
                  ledger: ErrorLedger | None = None,
                  fusion: FusionPolicy | bool | None = None,
                  overlay: OverlayPolicy | bool | None = None,
+                 prefetch: PrefetchPolicy | bool | None = None,
                  work_stealing: bool = True):
         self.backend = backend
         self.flags = flags or EagerFlags()
@@ -247,6 +272,19 @@ class EagerIOEngine:
         bdp = getattr(backend, "bdp_bytes", None)
         self._fuser = Fuser(self.fusion, self.stats,
                             bdp_source=bdp if callable(bdp) else None)
+        # the speculative metadata prefetcher pipelines cold-tree walks
+        # through batched readdir_plus_vec reads; it rides the overlay's
+        # speculation tickets, so it exists only when the overlay does
+        if prefetch is None or prefetch is True:
+            pf_policy = PrefetchPolicy()
+        elif prefetch is False:
+            pf_policy = PrefetchPolicy.off()
+        else:
+            pf_policy = prefetch
+        self.prefetch_policy = pf_policy
+        self.prefetcher: MetadataPrefetcher | None = (
+            MetadataPrefetcher(self, pf_policy)
+            if pf_policy.enabled and self.overlay is not None else None)
         self._closed = False
         self._executor = executor
         self._exec = make_executor(executor, self._sched, self._execute,
@@ -399,8 +437,18 @@ class EagerIOEngine:
             op.done.wait()
 
     def drain(self) -> None:
-        """Global barrier: wait for the whole DAG to execute."""
-        self._sched.drain()
+        """Global barrier: wait for the whole DAG to execute.  The
+        speculative prefetcher is quiesced first (frontier dropped,
+        in-flight batches allowed to land) so the barrier doesn't chase a
+        self-refilling pipeline, and resumed after."""
+        pf = self.prefetcher
+        if pf is not None:
+            pf.quiesce()
+        try:
+            self._sched.drain()
+        finally:
+            if pf is not None:
+                pf.resume()
 
     # ------------------------------------------------------------------
     # error / lifecycle
@@ -462,8 +510,9 @@ class EagerIOEngine:
             # a cancelled eager op was ACKed but never executed — without a
             # ledger entry a transaction commit (region-tagged) or the
             # checkpoint manager's path scan (untagged) would conclude the
-            # I/O landed when it was silently dropped
-            if op.eager:
+            # I/O landed when it was silently dropped.  Speculative ops
+            # were never ACKed to anyone — dropping them is their contract
+            if op.eager and not op.speculative:
                 self.ledger.record(op.seq, op.kind, op.paths, op.error,
                                    region=op.region)
         elif elided:
@@ -481,21 +530,32 @@ class EagerIOEngine:
                     if self.abort_on_error:
                         self._sched.poison()
         op.finished_at = time.monotonic()
-        if op.error is not None:
+        if op.error is not None and not op.speculative:
             # the write-through cache and the namespace overlay recorded
             # this op's effect at ACK time; it never materialized (failed
             # or cancelled), so every claim is wrong — drop them and let
-            # the backend answer again
+            # the backend answer again.  (A speculative op claimed
+            # nothing at admission: nothing to invalidate.)  Overlay
+            # FIRST: its invalidate cancels speculation tickets under its
+            # own lock — where speculative installs also warm the stat
+            # cache — so by the time the cache is cleared below, no late
+            # warming write can race back in behind the invalidation.
             for p in op.paths:
-                self.stat_cache.invalidate(p)
                 if self.overlay is not None:
                     self.overlay.invalidate(p)
+                self.stat_cache.invalidate(p)
         if self.overlay is not None:
             # a fused removal's re-verification witness is spent once the
             # op is done (ran, fell back, was elided into a parent, failed
             # or was cancelled) — unhook it from the overlay's watchers
             self.overlay.release_witness(getattr(op.payload, "witness",
                                                  None))
+        if op.cancelled and op.payload is not None:
+            # a speculative batch cancelled before it ran still holds its
+            # overlay tickets and an in-flight-window slot — release them
+            cb = getattr(op.payload, "on_cancelled", None)
+            if cb is not None:
+                cb()
         with self._sched._ctl:   # exact counters (see scheduler lock note)
             self.stats.exec_latency_s += op.finished_at - op.started_at
             self.stats.executed += 1

@@ -317,6 +317,16 @@ class FaultInjectingBackend(StorageBackend):
         self._gate("readdir", p)
         return self.inner.readdir_plus(p)
 
+    def readdir_plus_vec(self, paths):
+        # per-fused-call semantics, mirroring write_vec/remove_tree: one
+        # vectored batch of N listings is ONE matching "readdir" call,
+        # gated on the batch's first path.  The caller (the speculative
+        # prefetcher) treats a fired fault as advisory — the batch is
+        # dropped and the walk falls back per-directory; nothing lands in
+        # the ledger and no region is condemned.
+        self._gate("readdir", paths[0] if paths else "")
+        return self.inner.readdir_plus_vec(paths)
+
     def remove_tree(self, p):
         # per-fused-op semantics, mirroring write_vec: N collapsed
         # unlinks/rmdirs are ONE matching "remove_tree" call
@@ -528,6 +538,9 @@ class QuotaBackend(StorageBackend):
         # must delegate whole: the base loop would re-enter this
         # decorator's per-entry ops instead of the inner fused call
         return self.inner.readdir_plus(p)
+
+    def readdir_plus_vec(self, paths):
+        return self.inner.readdir_plus_vec(paths)
 
     def remove_tree(self, path):
         """Bulk removal releases every byte and inode charge under the

@@ -19,6 +19,7 @@ from .errors import ErrorLedger, ShortWriteError
 from .flags import EagerFlags
 from .fusion import FusionPolicy, MetaPayload, WritePayload
 from .namespace import OverlayPolicy
+from .prefetch import PrefetchPolicy
 
 
 class CannyFile:
@@ -101,13 +102,15 @@ class CannyFS:
                  echo_errors: bool = True,
                  fusion: FusionPolicy | bool | None = None,
                  overlay: OverlayPolicy | bool | None = None,
+                 prefetch: PrefetchPolicy | bool | None = None,
                  work_stealing: bool = True):
         self.flags = flags or EagerFlags()
         self.engine = EagerIOEngine(
             backend, flags=self.flags, max_inflight=max_inflight,
             workers=workers, executor=executor, abort_on_error=abort_on_error,
             ledger=ErrorLedger(echo=echo_errors), fusion=fusion,
-            overlay=overlay, work_stealing=work_stealing)
+            overlay=overlay, prefetch=prefetch,
+            work_stealing=work_stealing)
         self.backend = backend
         self._txn_lock = threading.Lock()
         self._txn = None  # active Transaction (set by Transaction.__enter__)
@@ -465,27 +468,53 @@ class CannyFS:
     def exists(self, path: str) -> bool:
         return self.stat(path).exists
 
+    def _overlay_readdir_hit(self, ov, path: str) -> list[str] | None:
+        """One overlay readdir attempt with its hit accounting, or None
+        on a miss (shared by the fast path and the post-latch re-try)."""
+        names = ov.readdir(path)
+        if names is None:
+            return None
+        stats = self.engine.stats
+        stats.overlay_readdirs += 1
+        if self.engine._sched.has_pending_under(path):
+            stats.overlay_seals_avoided += 1
+        if (self.engine.prefetcher is not None
+                and ov.was_speculative(path)):
+            stats.prefetch_hits += 1
+        return names
+
     def readdir(self, path: str) -> list[str]:
         """Readdir consults the namespace overlay first: when the
         directory's membership is fully determined by the transaction's
         own writes (created in-window) or a cached backend listing, the
         answer comes from pending state and the chains beneath stay
-        rewritable (no seal, no backend roundtrip).  A miss executes ONE
-        vectored ``readdir_plus`` call — names plus attributes, the NFS
-        READDIRPLUS analogue — installing the listing into the overlay
-        and warming the stat cache, and seals as any sync op does."""
+        rewritable (no seal, no backend roundtrip).  A miss with a
+        speculative batch already in flight for the path latches onto
+        that batch (``MetadataPrefetcher.wait_for`` — one shared
+        roundtrip, demand-promoting a frontier-queued path) and re-tries
+        the overlay; only then does it execute ONE vectored
+        ``readdir_plus`` call — names plus attributes, the NFS
+        READDIRPLUS analogue — installing the listing into the overlay,
+        warming the stat cache, seeding the prefetch frontier with the
+        discovered subdirectories, and sealing as any sync op does."""
         path = norm_path(path)
         ov = self.engine.overlay
         b = self.backend
         if ov is not None:
             if ov.policy.readdir_overlay:
-                names = ov.readdir(path)
+                names = self._overlay_readdir_hit(ov, path)
                 if names is not None:
-                    stats = self.engine.stats
-                    stats.overlay_readdirs += 1
-                    if self.engine._sched.has_pending_under(path):
-                        stats.overlay_seals_avoided += 1
                     return names
+                # consumer latch: a speculative batch already carrying
+                # this directory is in flight — wait for its install
+                # instead of issuing a duplicate roundtrip, then re-try
+                # the overlay (a cancelled/failed batch falls through to
+                # the sync path exactly as before)
+                pf = self.engine.prefetcher
+                if pf is not None and pf.wait_for(path):
+                    names = self._overlay_readdir_hit(ov, path)
+                    if names is not None:
+                        return names
             cache = self.engine.stat_cache
             warm = ov.policy.prefetch
 
@@ -498,6 +527,12 @@ class CannyFS:
                             cache.put(child, st)
                             self.engine.stats.prefetched_stats += 1
                 ov.install_listing(path, listing)
+                # a cold miss is the prefetch pipeline's trigger: the
+                # subdirectories this listing discovered are enqueued for
+                # batched speculative fetching ahead of the consumer
+                pf = self.engine.prefetcher
+                if pf is not None:
+                    pf.seed_children(path, listing)
                 return [name for name, _ in listing]
 
             return self.engine.submit("readdir", (path,), fn, eager=False)
@@ -570,6 +605,9 @@ class CannyFS:
                 stats.overlay_readdirs += 1
                 if self.engine._sched.has_pending_under(path):
                     stats.overlay_seals_avoided += 1
+                if (self.engine.prefetcher is not None
+                        and ov.was_speculative(path)):
+                    stats.prefetch_hits += 1
                 yield path, dirs, files
                 for d in dirs:
                     child = f"{path}/{d}" if path else d

@@ -105,15 +105,43 @@ class _DirState:
     not: until the backend confirms the mkdir created the directory, a
     pre-existing directory with unknown contents is possible, and a fused
     ``remove_tree`` would silently delete data an unfused execution
-    would have preserved behind ENOTEMPTY."""
+    would have preserved behind ENOTEMPTY.
 
-    __slots__ = ("children", "absent", "complete", "provisional")
+    ``speculative`` marks a completeness installed by the metadata
+    prefetch pipeline (``install_speculative``) that no consumer has read
+    yet — purely observability (``prefetch_hits``); the listing itself is
+    executed backend truth, exactly like a sync readdir miss's."""
+
+    __slots__ = ("children", "absent", "complete", "provisional",
+                 "speculative")
 
     def __init__(self):
         self.children: dict[str, str | None] = {}
         self.absent: set[str] = set()
         self.complete = False
         self.provisional = False
+        self.speculative = False
+
+
+class SpeculationTicket:
+    """One in-flight speculative listing's validity token.
+
+    Registered by ``speculation_wanted`` when the prefetcher enqueues a
+    directory; any racing *admitted* mutation that could make the fetched
+    listing stale — rmdir/remove_tree/rename at or above the directory, a
+    mkdir over it, an op failure invalidating it or its parent's
+    membership, a transaction rollback — flips ``cancelled`` under the
+    overlay lock, and ``install_speculative`` then refuses the listing.
+    This is what keeps the prefetch pipeline *advisory*: a speculative
+    read can warm the overlay only while nothing has moved underneath it,
+    so observed semantics stay byte-identical to the unprefetched
+    engine."""
+
+    __slots__ = ("path", "cancelled")
+
+    def __init__(self, path: str):
+        self.path = path
+        self.cancelled = False
 
 
 class RemoveWitness:
@@ -152,6 +180,8 @@ class NamespaceOverlay:
         self._listed: OrderedDict[str, None] = OrderedDict()
         # exec-time re-verification: provisional dir -> watching witnesses
         self._watchers: dict[str, list[RemoveWitness]] = {}
+        # speculative prefetch tickets: path -> the (single) live ticket
+        self._specs: dict[str, SpeculationTicket] = {}
 
     # ------------------------------------------------------------------
     # write side: mirror the op stream (called from submit's on_admit)
@@ -165,21 +195,33 @@ class NamespaceOverlay:
 
     # -- cached-listing LRU (all under self._lock) ---------------------
 
-    def _touch_listing(self, path: str) -> None:
-        """Mark a cached-listing dir most-recently-used and evict past the
-        policy bound.  Eviction demotes completeness only: the membership
-        delta (pending entries created/removed through the mount) stays."""
+    def _touch_listing(self, path: str, *, cold: bool = False) -> None:
+        """Mark a cached-listing dir most-recently-used — or, with
+        ``cold``, least-recently-used — and evict past the policy bound.
+        Eviction demotes completeness only: the membership delta (pending
+        entries created/removed through the mount) stays.
+
+        ``cold`` is the speculative-install recency: a prefetched listing
+        enters at the LRU-cold end, so at capacity speculation evicts
+        other speculation (or itself) and can never demote the hot
+        in-use window; a dir already cached hot keeps its recency."""
         bound = self.policy.max_cached_listings
         if bound <= 0:
             return
-        self._listed[path] = None
-        self._listed.move_to_end(path)
+        if cold:
+            if path not in self._listed:
+                self._listed[path] = None
+                self._listed.move_to_end(path, last=False)
+        else:
+            self._listed[path] = None
+            self._listed.move_to_end(path)
         while len(self._listed) > bound:
             victim, _ = self._listed.popitem(last=False)
             st = self._dirs.get(victim)
             if st is not None:
                 st.complete = False
                 st.provisional = False
+                st.speculative = False
 
     def _drop_listed(self, path: str) -> None:
         self._listed.pop(path, None)
@@ -191,6 +233,22 @@ class NamespaceOverlay:
             if is_under(k, path):
                 for w in ws:
                     w.demoted = True
+
+    # -- speculative-prefetch tickets (all under self._lock) -----------
+
+    def _cancel_specs_under(self, path: str) -> None:
+        """A structural mutation at ``path``: every in-flight speculative
+        listing at/under it would be stale on arrival — cancel them."""
+        if not self._specs:
+            return
+        for k, t in self._specs.items():
+            if is_under(k, path):
+                t.cancelled = True
+
+    def _cancel_spec_at(self, path: str) -> None:
+        t = self._specs.get(path)
+        if t is not None:
+            t.cancelled = True
 
     def _add(self, dirpath: str, name: str, kind: str | None) -> None:
         st = self._state(dirpath)
@@ -214,6 +272,9 @@ class NamespaceOverlay:
         with self._lock:
             if kind == "mkdir":
                 p = paths[0]
+                # a mkdir over a dir being speculatively listed changes
+                # what the listing should say — the in-flight fetch loses
+                self._cancel_spec_at(p)
                 par, name = self._split(p)
                 self._add(par, name, _DIR)
                 # intended effect: a freshly created directory is empty,
@@ -238,11 +299,13 @@ class NamespaceOverlay:
                 self._remove(*self._split(paths[0]))
             elif kind == "rmdir":
                 p = paths[0]
+                self._cancel_specs_under(p)
                 self._remove(*self._split(p))
                 self._dirs.pop(p, None)
                 self._drop_listed(p)
             elif kind == "remove_tree":
                 root = paths[0]
+                self._cancel_specs_under(root)
                 self._remove(*self._split(root))
                 for k in [k for k in self._dirs if is_under(k, root)]:
                     del self._dirs[k]
@@ -250,6 +313,10 @@ class NamespaceOverlay:
                     del self._listed[k]
             elif kind == "rename":
                 src, dst = paths
+                # in-flight listings anywhere under either endpoint would
+                # land at paths that no longer mean the same directory
+                self._cancel_specs_under(src)
+                self._cancel_specs_under(dst)
                 kind_src = None
                 sp, sn = self._split(src)
                 st = self._dirs.get(sp)
@@ -269,39 +336,133 @@ class NamespaceOverlay:
             elif kind == "fallocate":
                 # backends disagree on whether fallocate creates a missing
                 # file (LocalBackend does, InMemory does not) — membership
-                # under its parent is no longer provable
+                # under its parent is no longer provable, and a listing of
+                # the parent already in flight must not re-prove it
+                self._cancel_spec_at(parent_of(paths[0]))
                 st = self._dirs.get(parent_of(paths[0]))
                 if st is not None:
                     st.complete = False
 
+    def _merge_listing_locked(self, path: str, listing) -> _DirState:
+        """Merge a backend listing into ``path``'s base membership (names
+        the overlay already has a delta for keep it — their ops are
+        ordered around the listing and the listing agrees with every op
+        ordered before it) and mark the dir complete."""
+        st = self._state(path)
+        for name, stt in listing:
+            if name in st.children or name in st.absent:
+                continue
+            st.children[name] = (None if stt is None
+                                 else _DIR if stt.is_dir
+                                 else _LINK if stt.is_symlink
+                                 else _FILE)
+        st.complete = True
+        st.provisional = False   # backend truth, not an intent claim
+        return st
+
+    def _removed_behind_locked(self, path: str) -> bool:
+        """True when a rmdir/remove_tree/rename admitted after a listing
+        of ``path`` was taken already popped the dir's state and marked
+        it absent in its parent — installing the (older) listing would
+        resurrect a complete overlay entry for a directory that no
+        longer exists."""
+        if not path:
+            return False
+        par, name = self._split(path)
+        pst = self._dirs.get(par)
+        return pst is not None and name in pst.absent
+
     def install_listing(self, path: str,
                         listing: list[tuple[str, StatResult | None]]) -> None:
-        """Install a backend listing (from an executed readdir miss) as the
-        directory's base membership.  Names the overlay already has a
-        delta for keep it — their ops are ordered around the readdir and
-        the listing agrees with every op ordered before it."""
+        """Install a backend listing (from an executed readdir miss) as
+        the directory's base membership, at hot LRU recency."""
         with self._lock:
-            if path:
-                # a rmdir/remove_tree admitted after this readdir was
-                # submitted already popped the dir's state and marked it
-                # absent in its parent — installing the (older) listing
-                # would resurrect a complete overlay entry for a
-                # directory that no longer exists
-                par, name = self._split(path)
-                pst = self._dirs.get(par)
-                if pst is not None and name in pst.absent:
-                    return
-            st = self._state(path)
-            for name, stt in listing:
-                if name in st.children or name in st.absent:
-                    continue
-                st.children[name] = (None if stt is None
-                                     else _DIR if stt.is_dir
-                                     else _LINK if stt.is_symlink
-                                     else _FILE)
-            st.complete = True
-            st.provisional = False   # backend truth, not an intent claim
+            if self._removed_behind_locked(path):
+                return
+            self._merge_listing_locked(path, listing)
             self._touch_listing(path)
+
+    # ------------------------------------------------------------------
+    # speculative prefetch (core/prefetch.py rides these)
+    # ------------------------------------------------------------------
+
+    def speculation_wanted(self, path: str) -> SpeculationTicket | None:
+        """Register intent to speculatively list ``path``; None when a
+        fetch would be pointless (already complete, already being
+        fetched, or pending removal/rename marked it absent)."""
+        path = norm_path(path)
+        if not self.policy.enabled:
+            return None
+        with self._lock:
+            if path in self._specs:
+                return None
+            st = self._dirs.get(path)
+            if st is not None and st.complete:
+                return None
+            if self._removed_behind_locked(path):
+                return None
+            t = SpeculationTicket(path)
+            self._specs[path] = t
+            return t
+
+    def end_speculation(self, ticket: SpeculationTicket | None) -> None:
+        """Unregister a ticket without installing (idempotent) — the
+        fetch failed, was dropped, or its batch was cancelled."""
+        if ticket is None:
+            return
+        with self._lock:
+            if self._specs.get(ticket.path) is ticket:
+                del self._specs[ticket.path]
+
+    def install_speculative(self, ticket: SpeculationTicket,
+                            listing, warm=None) -> str:
+        """Install a speculatively fetched listing, atomically re-checking
+        the ticket under the overlay lock.  ``warm`` (if given) runs
+        *inside* the critical section on a successful install — the
+        prefetcher warms the stat cache there, so a racing op-failure
+        invalidation (which takes this lock first, then clears the stat
+        cache) can never lose to a late warming write.  Returns the
+        verdict:
+
+        * ``"installed"`` — the listing is now the dir's base membership,
+          inserted at LRU-*cold* recency (it can never evict the hot
+          in-use window; see ``_touch_listing``);
+        * ``"cancelled"`` — a racing admitted mutation invalidated the
+          fetch (the prefetcher counts it, nothing was installed);
+        * ``"stale"``     — the dir was already complete (a sync miss beat
+          the speculation) or a pending removal marked it absent;
+        * ``"evicted"``   — installed but immediately evicted by the
+          cached-listings bound (the cache is full of hotter entries)."""
+        path = ticket.path
+        with self._lock:
+            if self._specs.get(path) is ticket:
+                del self._specs[path]
+            if ticket.cancelled:
+                return "cancelled"
+            if self._removed_behind_locked(path):
+                return "stale"
+            st = self._dirs.get(path)
+            if st is not None and st.complete:
+                return "stale"
+            st = self._merge_listing_locked(path, listing)
+            st.speculative = True
+            if warm is not None:
+                warm()
+            self._touch_listing(path, cold=True)
+            if not st.complete:
+                st.speculative = False
+                return "evicted"
+            return "installed"
+
+    def was_speculative(self, path: str) -> bool:
+        """True exactly once per consumed speculative listing: the first
+        overlay read answered from it clears the flag (prefetch_hits)."""
+        with self._lock:
+            st = self._dirs.get(path)
+            if st is not None and st.speculative:
+                st.speculative = False
+                return True
+            return False
 
     # ------------------------------------------------------------------
     # read side
@@ -478,7 +639,13 @@ class NamespaceOverlay:
         re-verification watches a directory in that subtree."""
         path = norm_path(path)
         with self._lock:
+            # a failed op's effects are unknown (a torn write may have
+            # created the file after all): an in-flight listing of the
+            # parent fetched before the failure must not re-prove its
+            # membership, and nothing under the path can be trusted
+            self._cancel_specs_under(path)
             if path:
+                self._cancel_spec_at(parent_of(path))
                 par, name = self._split(path)
                 st = self._dirs.get(par)
                 if st is not None:
@@ -498,10 +665,12 @@ class NamespaceOverlay:
         removal watching this directory loses its proof."""
         path = norm_path(path)
         with self._lock:
+            self._cancel_spec_at(path)
             st = self._dirs.get(path)
             if st is not None:
                 st.complete = False
                 st.provisional = False
+                st.speculative = False
             for w in self._watchers.get(path, ()):
                 w.demoted = True
 
@@ -531,6 +700,12 @@ class NamespaceOverlay:
                 for w in ws:
                     w.demoted = True
             self._watchers.clear()
+            # ...and no speculative listing fetched before the window
+            # closed may install afterwards
+            for t in self._specs.values():
+                t.cancelled = True
+            self._specs.clear()
 
 
-__all__ = ["NamespaceOverlay", "OverlayPolicy", "RemoveWitness"]
+__all__ = ["NamespaceOverlay", "OverlayPolicy", "RemoveWitness",
+           "SpeculationTicket"]

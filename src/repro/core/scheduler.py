@@ -26,6 +26,13 @@ ops now live in per-shard deques aligned to the path-hash shards:
 * a worker whose owned shards are dry *steals* from the tail of a victim
   shard's deque (``stats.steals``); stealing is what keeps uneven per-shard
   load balanced across the pool;
+* each shard additionally carries a **low-priority lane** (``rq_lo``) for
+  *speculative* ops — the metadata-prefetch pipeline's advisory batch
+  reads (``submit_speculative``): budget-counted and drained like any
+  other op (poison/close/drain all see them), but taking and granting no
+  DAG edges, popped (and stolen) only when every normal lane in reach is
+  dry, and never recorded in the ledger — prefetch work fills
+  otherwise-idle workers and nothing else;
 * only when every shard is empty does a worker fall back to the single
   parking lot — one condition variable on the control lock
   (``stats.parks``).  Producers take the control lock only to wake parked
@@ -71,7 +78,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Optional
 
-from .backend import norm_path, parent_of
+from .backend import is_under, norm_path, parent_of
 from .errors import EnginePoisonedError
 
 # ops that change the namespace under their parent directory — a readdir /
@@ -92,7 +99,7 @@ class _Op:
                  "remaining_deps", "dependents", "cancelled", "submitted_at",
                  "started_at", "finished_at", "eager", "region",
                  "flock", "completed", "claimed", "sealed", "elided",
-                 "payload", "prev_same_path", "wired")
+                 "payload", "prev_same_path", "wired", "speculative")
 
     def __init__(self, seq: int, kind: str, paths: tuple[str, ...],
                  fn: Callable[[], Any], eager: bool = True,
@@ -126,10 +133,14 @@ class _Op:
         # point at ops with a smaller stamp — every edge then strictly
         # decreases the stamp, which keeps the DAG acyclic (0 = unwired).
         self.wired = 0
+        # speculative (advisory) op: rides the low-priority ready deques,
+        # takes and grants no DAG edges, never lands in the ledger
+        self.speculative = False
 
 
 class _Shard:
-    __slots__ = ("lock", "last_op", "pending_children", "rlock", "rq")
+    __slots__ = ("lock", "last_op", "pending_children", "rlock", "rq",
+                 "rq_lo")
 
     def __init__(self):
         self.lock = threading.Lock()
@@ -139,6 +150,9 @@ class _Shard:
         # the shard's ready deque: owner pops the head, thieves the tail
         self.rlock = threading.Lock()
         self.rq: deque[_Op] = deque()
+        # low-priority lane: speculative (prefetch) ops, drained only when
+        # rq is dry — real work always dispatches first
+        self.rq_lo: deque[_Op] = deque()
 
 
 class OpScheduler:
@@ -242,7 +256,6 @@ class OpScheduler:
                     d.sealed = True
             deps.append(d)
 
-        kid_paths: set[str] = set()
         shards = self._lock_shards(relevant)
         try:
             for p in paths:
@@ -259,15 +272,6 @@ class OpScheduler:
                     kids = self._shard_of(p).pending_children.get(p, {})
                     for d in list(kids.values()):
                         add_dep(d)
-                        if kind == "rename":
-                            # a rename moves *content*: it must also wait
-                            # for the non-structural tails (writes, meta)
-                            # chained behind each structural child — their
-                            # shards are outside this op's lock set, so
-                            # they are wired in the pass below
-                            kid_paths.update(
-                                kp for kp in d.paths
-                                if kp not in relevant and kp != p)
             for p in paths:
                 self._shard_of(p).last_op[p] = op
             if kind in STRUCTURAL:
@@ -278,35 +282,31 @@ class OpScheduler:
             op.wired = next(self._wire_seq)   # stamped inside the region
         finally:
             self._unlock_shards(shards)
-        # rename chain-tip pass: BFS over the renamed subtree's pending
-        # structural ops, depending on every discovered path's pending
-        # *tip* (transitively the whole chain) — a create two levels down
-        # (s/a/f under pending mkdir s/a) is reached through s/a's
-        # pending_children, so deep write chains are ordered before the
-        # rename too, not just the direct children.  One shard lock at a
-        # time; only ops wired strictly before this one are eligible — a
-        # tip wired later may already depend on this op through the
-        # parent-directory edge, and the stamp guard is what keeps the
-        # DAG acyclic (see _Op.wired).  (Known gap, pre-existing: a
-        # non-structural op on a path with no pending structural anchor —
-        # e.g. chmod of a file that pre-existed the window — has no
-        # pending_children entry to discover it through.)
-        visited: set[str] = set(relevant)
-        frontier = sorted(kid_paths)
-        while frontier:
-            deeper: set[str] = set()
-            for kp in frontier:
-                visited.add(kp)
-                sh = self._shard_of(kp)
+        # rename subtree-tail pass: a rename moves *content*, so it must
+        # run after every pending op anywhere under either endpoint —
+        # structural or not.  Sweep each shard's last_op map for paths
+        # under the rename's roots and depend on every eligible pending
+        # chain tip (transitively the whole chain).  This replaces PR 4's
+        # BFS over pending_children, which discovered paths only through
+        # pending *structural* anchors and therefore could not reach a
+        # non-structural op on a pre-window path (the known gap: chmod of
+        # a file three levels down whose create drained before the
+        # window).  One shard lock at a time; only ops wired strictly
+        # before this one are eligible — a tip wired later may already
+        # depend on this op through the parent-directory edge, and the
+        # stamp guard is what keeps the DAG acyclic (see _Op.wired).
+        if kind == "rename":
+            for sh in self._shards:
                 with sh.lock:
-                    cur = sh.last_op.get(kp)
-                    while cur is not None and not 0 < cur.wired < op.wired:
-                        cur = cur.prev_same_path
-                    add_dep(cur)
-                    for d in sh.pending_children.get(kp, {}).values():
-                        if 0 < d.wired < op.wired:
-                            deeper.update(d.paths)
-            frontier = sorted(deeper - visited)
+                    for kp, tip in list(sh.last_op.items()):
+                        if kp in relevant:
+                            continue
+                        if not any(is_under(kp, r) for r in paths):
+                            continue
+                        cur = tip
+                        while cur is not None and not 0 < cur.wired < op.wired:
+                            cur = cur.prev_same_path
+                        add_dep(cur)
         # publish the dep count last: deps completing mid-wiring have
         # already decremented remaining_deps below zero, so the sum
         # lands on the true outstanding count exactly once
@@ -317,15 +317,42 @@ class OpScheduler:
             self._push_ready(op)
         return op
 
+    def submit_speculative(self, kind: str, paths: tuple[str, ...],
+                           fn: Callable[[], Any],
+                           payload: object = None) -> Optional[_Op]:
+        """Admit one *advisory* op: budget-counted and drained like any
+        other, but it takes no DAG edges, publishes nothing to the
+        per-path maps, and rides the low-priority ready lane — real work
+        always dispatches first and never waits on it (racing-mutation
+        correctness is the overlay's speculation tickets' job, not the
+        scheduler's).  Returns None — never blocks, never raises — when
+        the engine is poisoned/closed or the in-flight budget is full:
+        speculation yields instead of backpressuring the caller."""
+        with self._ctl:
+            if (self._poisoned or self._closed
+                    or self._inflight >= self.max_inflight):
+                return None
+            seq = next(self._seq)
+            self._inflight += 1
+            self.stats.submitted += 1
+            self.stats.op_counts[kind] = self.stats.op_counts.get(kind, 0) + 1
+            self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                             self._inflight)
+        op = _Op(seq, kind, paths, fn, eager=True, payload=payload)
+        op.speculative = True
+        self._push_ready(op)
+        return op
+
     def _home_shard(self, op: _Op) -> _Shard:
         return self._shards[hash(op.paths[0]) % self._nshards]
 
     def _enqueue_ready(self, op: _Op) -> None:
         """Append to the op's home-shard ready deque (rlock is the deepest
-        leaf: never held while taking any other lock)."""
+        leaf: never held while taking any other lock).  Speculative ops
+        land on the low-priority lane."""
         sh = self._home_shard(op)
         with sh.rlock:
-            sh.rq.append(op)
+            (sh.rq_lo if op.speculative else sh.rq).append(op)
 
     def _notify_ready(self, n: int) -> None:
         """Wake parked workers for ``n`` newly enqueued ops.  Caller holds
@@ -431,8 +458,11 @@ class OpScheduler:
         return range(worker % workers, n, workers)
 
     def _pop_ready(self, worker: int, workers: int) -> Optional[_Op]:
-        """Non-blocking pop: owned shards FIFO first, then (with stealing
-        on) the tail of the first non-empty victim shard."""
+        """Non-blocking pop: owned shards FIFO first (normal lane, then
+        the low-priority speculative lane), then (with stealing on) the
+        tail of the first non-empty victim shard — again normal lanes
+        before any speculative one, so prefetch work only ever fills
+        otherwise-idle workers."""
         shards = self._shards
         owned = self._owned_shards(worker, workers)
         for s in owned:
@@ -440,6 +470,11 @@ class OpScheduler:
             with sh.rlock:
                 if sh.rq:
                     return sh.rq.popleft()
+        for s in owned:
+            sh = shards[s]
+            with sh.rlock:
+                if sh.rq_lo:
+                    return sh.rq_lo.popleft()
         if not self.work_stealing:
             return None
         mine = set(owned)
@@ -451,6 +486,17 @@ class OpScheduler:
             sh = shards[s]
             with sh.rlock:
                 op = sh.rq.pop() if sh.rq else None
+            if op is not None:
+                with self._slock:
+                    self.stats.steals += 1
+                return op
+        for k in range(n):
+            s = (worker + k) % n
+            if s in mine:
+                continue
+            sh = shards[s]
+            with sh.rlock:
+                op = sh.rq_lo.pop() if sh.rq_lo else None
             if op is not None:
                 with self._slock:
                     self.stats.steals += 1
@@ -550,6 +596,7 @@ class OpScheduler:
             for sh in self._shards:
                 with sh.rlock:
                     queued.extend(sh.rq)
+                    queued.extend(sh.rq_lo)
         for op in queued:
             op.cancelled = True
 

@@ -707,13 +707,16 @@ def test_walk_served_from_overlay_without_sealing():
 
 def test_walk_falls_back_per_directory_on_incomplete_dirs():
     """A never-listed pre-existing subdir forces the sync fallback for
-    that directory only; overlay-known levels still fast-path."""
+    that directory only; overlay-known levels still fast-path.
+    (prefetch=False: with the speculative prefetcher on, mix/old would
+    be overlay-complete before the walk reaches it — that pipelined path
+    has its own suite in test_prefetch.py; this test pins the fallback.)"""
     inner = InMemoryBackend()
     inner.mkdir("mix")
     inner.mkdir("mix/old")        # pre-existing, never observed
     inner.create("mix/old/f")
     be = Boundary(inner)
-    fs = CannyFS(be, echo_errors=False)
+    fs = CannyFS(be, echo_errors=False, prefetch=False)
     assert fs.readdir("mix") == ["old"]   # miss: installs mix's listing
     fs.mkdir("mix/fresh")                 # in-window: overlay-complete
     walked = {d: (tuple(sub), tuple(files))

@@ -1,0 +1,520 @@
+"""Speculative metadata-prefetch pipeline tests (PR 5).
+
+Covers the pipelined cold walk (batched ``readdir_plus_vec``, fewer
+backend roundtrips than directories), per-*fused*-batch fault gating and
+its advisory semantics (no ledger entry, no poison, per-directory
+fallback), racing-mutation ticket invalidation (deterministic via a
+gateable vectored backend, plus an 8-worker hammer with stealing on and
+off), the LRU-cold insertion rule for speculative listings (prefetch can
+never demote the hot in-use window), adaptive batch sizing from the
+latency backend's measured BDP, and the PR 4 known-gap regression: a
+rename must wait for non-structural ops on paths with no pending
+structural anchor (chmod of a pre-window file three levels down)."""
+import threading
+import time
+from collections import Counter
+
+import pytest
+
+from repro.core import (CannyFS, EagerFlags, FaultInjectingBackend,
+                        FaultPlan, FaultRule, InMemoryBackend,
+                        LatencyBackend, LatencyModel, NamespaceOverlay,
+                        OverlayPolicy, PrefetchPolicy, VirtualClock)
+
+BOUNDARY_OPS = frozenset({
+    "mkdir", "rmdir", "create", "unlink", "rename", "symlink", "link",
+    "readlink", "write_at", "write_vec", "read_at", "truncate", "fallocate",
+    "fsync", "chmod", "chown", "utimens", "setxattr", "removexattr", "stat",
+    "readdir", "readdir_plus", "readdir_plus_vec", "remove_tree",
+})
+
+
+class Boundary:
+    """Counts ops the *engine* issues; inner-loop calls stay invisible."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.counts = Counter()
+
+    def __getattr__(self, name):
+        attr = getattr(self.inner, name)
+        if name in BOUNDARY_OPS:
+            def wrap(*a, **k):
+                self.counts[name] += 1
+                return attr(*a, **k)
+            return wrap
+        return attr
+
+
+class VecGate(InMemoryBackend):
+    """Blocks every vectored speculative fetch on a gate so racing
+    mutations can be admitted deterministically while the batch is in
+    flight."""
+
+    def __init__(self):
+        super().__init__()
+        self.gate = threading.Event()
+        self.entered = threading.Event()
+
+    def readdir_plus_vec(self, paths):
+        self.entered.set()
+        self.gate.wait()
+        return super().readdir_plus_vec(paths)
+
+
+def build_cold_tree(backend, n_subdirs=6, files_per_dir=2, root="cold",
+                    grandchildren=0):
+    """A tree the mount has never observed, directly on the backend."""
+    dirs = [root] + [f"{root}/d{i}" for i in range(n_subdirs)]
+    for i in range(grandchildren):
+        dirs.append(f"{root}/d0/g{i}")
+    for d in dirs:
+        backend.mkdir(d)
+    for d in dirs:
+        for j in range(files_per_dir):
+            backend.create(f"{d}/f{j}")
+    return dirs
+
+
+# ---------------------------------------------------------------------------
+# the pipelined cold walk
+# ---------------------------------------------------------------------------
+
+def test_cold_walk_costs_fewer_roundtrips_than_dirs():
+    """The tentpole: a cold walk's metadata no longer costs one roundtrip
+    per directory — discovered subdirectories are fetched in batched
+    speculative reads ahead of the consumer."""
+    inner = InMemoryBackend()
+    dirs = build_cold_tree(inner, n_subdirs=8, grandchildren=4)
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=5.0, data_ms=5.0, jitter_sigma=0.0,
+                            seed=1))
+    fs = CannyFS(remote, workers=8, echo_errors=False)
+    walked = {d: (tuple(s), tuple(f)) for d, s, f in fs.walk("cold")}
+    fs.close()
+    st = fs.stats
+    assert set(walked) == set(dirs)              # complete, nothing skipped
+    assert walked["cold"][0] == tuple(f"d{i}" for i in range(8))
+    assert walked["cold/d0"][0] == tuple(f"g{i}" for i in range(4))
+    for d in dirs:
+        assert walked[d][1] == ("f0", "f1")
+    assert st.prefetch_batches >= 1
+    assert st.prefetch_hits >= 1
+    assert remote.op_count < len(dirs), (remote.op_count, len(dirs))
+    assert len(fs.ledger) == 0
+
+
+def test_cold_readdir_seeds_children_one_vec_call_per_batch():
+    """One frontier batch is ONE backend call: the vectored
+    readdir_plus_vec covers every discovered subdirectory."""
+    inner = InMemoryBackend()
+    build_cold_tree(inner, n_subdirs=5, files_per_dir=1)
+    be = Boundary(inner)
+    fs = CannyFS(be, workers=4, echo_errors=False)
+    assert fs.readdir("cold") == sorted(
+        [f"d{i}" for i in range(5)] + ["f0"])
+    fs.engine._sched.drain()     # let the batch land without quiescing
+    st = fs.stats
+    assert be.counts["readdir_plus"] == 1        # the cold miss
+    assert be.counts["readdir_plus_vec"] == 1    # ONE fused call, 5 dirs
+    assert st.prefetch_batches == 1
+    assert st.prefetch_issued == 5
+    # every subdir is now overlay-complete: readdirs are hits, no backend
+    for i in range(5):
+        assert fs.readdir(f"cold/d{i}") == ["f0"]
+    assert be.counts["readdir_plus"] == 1
+    assert st.prefetch_hits == 5
+    # ...and the listings warmed the stat cache
+    assert be.counts["stat"] == 0
+    assert fs.stat("cold/d3/f0").exists
+    assert be.counts["stat"] == 0
+    fs.close()
+
+
+def test_prefetch_off_restores_per_directory_walk():
+    inner = InMemoryBackend()
+    dirs = build_cold_tree(inner, n_subdirs=4)
+    be = Boundary(inner)
+    fs = CannyFS(be, echo_errors=False, prefetch=False)
+    assert fs.engine.prefetcher is None
+    walked = list(fs.walk("cold"))
+    fs.close()
+    assert len(walked) == len(dirs)
+    assert be.counts["readdir_plus_vec"] == 0
+    assert be.counts["readdir_plus"] == len(dirs)   # one sync miss per dir
+    assert fs.stats.prefetch_batches == 0
+
+
+def test_overlay_off_disables_prefetcher():
+    fs = CannyFS(InMemoryBackend(), overlay=False, echo_errors=False,
+                 workers=2)
+    assert fs.engine.prefetcher is None
+    fs.close()
+
+
+def test_speculative_reads_never_seal_pending_chains():
+    """A speculative listing is not an observation: elision under the
+    prefetched tree still fires afterwards."""
+    inner = InMemoryBackend()
+    build_cold_tree(inner, n_subdirs=2, files_per_dir=0)
+    fs = CannyFS(inner, workers=4, echo_errors=False)
+    fs.readdir("cold")               # miss -> seeds cold/d0, cold/d1
+    fs.engine._sched.drain()
+    assert fs.stats.prefetch_issued == 2
+    # write+unlink in the same window under a *prefetched* dir: the
+    # chain elides exactly as it would without prefetch
+    fs.write_file("cold/d0/tmp", b"x" * 64)
+    fs.unlink("cold/d0/tmp")
+    assert fs.stats.elided_ops >= 2
+    assert fs.stats.bytes_elided >= 64
+    fs.drain()
+    assert "cold/d0/tmp" not in inner.snapshot()["files"]
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# faults: per-fused-batch gating, strictly advisory
+# ---------------------------------------------------------------------------
+
+def test_fault_fires_once_per_fused_batch_and_stays_advisory():
+    """A FaultRule matching the vectored batch fires ONCE for the whole
+    fused call (not once per directory), nothing lands in the ledger, the
+    engine is not poisoned even with abort_on_error, and the walk falls
+    back per-directory to the correct answer."""
+    inner = InMemoryBackend()
+    dirs = build_cold_tree(inner, n_subdirs=6, files_per_dir=1)
+    # match 1 = the cold sync readdir_plus of "cold"; match 2 = the one
+    # fused batch (6 dirs, still a single match); later sync fallbacks
+    # find max_failures exhausted
+    plan = FaultPlan([FaultRule(error="EIO", ops=("readdir",),
+                                after_count=1, max_failures=1)])
+    fs = CannyFS(FaultInjectingBackend(inner, plan), workers=4,
+                 echo_errors=False, abort_on_error=True)
+    assert "d0" in fs.readdir("cold")
+    fs.engine._sched.drain()          # the faulted batch lands (dropped)
+    assert plan.injected == 1                     # ONE match for 6 dirs
+    assert plan.fire_counts[0] == 1
+    assert fs.stats.prefetch_wasted == 6          # the whole batch dropped
+    assert not fs.poisoned                        # advisory: no poison
+    assert len(fs.ledger) == 0                    # ...and no ledger entry
+    # nothing speculative was installed: the walk falls back per-dir
+    ov = fs.engine.overlay
+    for i in range(6):
+        assert ov.readdir(f"cold/d{i}") is None
+    walked = {d for d, _, _ in fs.walk("cold")}
+    assert walked == set(dirs)
+    fs.close()
+
+
+def test_injected_faults_on_real_ops_still_ledger_with_prefetch_on():
+    """Prefetch must not absorb real ops' faults: a write fault under a
+    prefetched tree defers to the ledger exactly as before."""
+    inner = InMemoryBackend()
+    build_cold_tree(inner, n_subdirs=2, files_per_dir=0)
+    plan = FaultPlan([FaultRule(error="EIO", ops=("write",),
+                                path_glob="cold/d0/*")])
+    fs = CannyFS(FaultInjectingBackend(inner, plan), workers=4,
+                 echo_errors=False)
+    fs.readdir("cold")
+    fs.engine._sched.drain()
+    fs.write_file("cold/d0/out", b"x")
+    fs.drain()
+    assert plan.injected == 1
+    assert fs.stats.deferred_errors == 1
+    assert len(fs.ledger) == 1
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# racing mutations: tickets cancel, nothing stale installs
+# ---------------------------------------------------------------------------
+
+def test_racing_rmdir_cancels_inflight_speculative_listing():
+    """A rmdir admitted while the batch is wedged mid-fetch: the fetched
+    listing must not resurrect overlay state for the removed directory."""
+    be = VecGate()
+    be.mkdir("pre")
+    be.mkdir("pre/d0")                # empty: the racing rmdir succeeds
+    be.mkdir("pre/d1")
+    fs = CannyFS(be, workers=4, echo_errors=False)
+    fs.readdir("pre")                 # miss -> seeds d0, d1 -> batch
+    assert be.entered.wait(5.0)       # batch provably mid-fetch
+    fs.rmdir("pre/d0")                # racing admitted mutation
+    be.gate.set()
+    fs.drain()
+    ov = fs.engine.overlay
+    assert ov.readdir("pre/d0") is None           # not resurrected
+    assert ov.lookup("pre/d0") is False
+    # the fetch was either cancelled by the ticket or found the dir gone
+    # (wasted) — either way nothing installed
+    st = fs.stats
+    assert st.prefetch_cancelled + st.prefetch_wasted >= 1
+    assert "pre/d0" not in be.snapshot()["dirs"]  # really removed
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+def test_racing_rename_cancels_inflight_speculative_listing():
+    be = VecGate()
+    be.mkdir("pre")
+    be.mkdir("pre/d0")
+    be.create("pre/d0/f")
+    fs = CannyFS(be, workers=4, echo_errors=False)
+    fs.readdir("pre")
+    assert be.entered.wait(5.0)
+    fs.rename("pre", "moved")         # whole-prefix move mid-fetch
+    be.gate.set()
+    fs.drain()
+    ov = fs.engine.overlay
+    # no state may survive at the old prefix
+    assert ov.readdir("pre") is None
+    assert ov.readdir("pre/d0") is None
+    st = fs.stats
+    assert st.prefetch_cancelled + st.prefetch_wasted >= 1
+    snap = be.snapshot()
+    assert "moved/d0" in snap["dirs"] and "pre" not in snap["dirs"]
+    assert fs.readdir("moved/d0") == ["f"]        # fresh truth, not stale
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+@pytest.mark.parametrize("stealing", [True, False])
+def test_racing_invalidation_hammer_8_workers(stealing):
+    """Satellite chaos: cold walks racing rmtree/rename under an 8-worker
+    pool with stealing on/off.  Invariants: no deadlock, engine ends
+    quiescent with executed == submitted, and post-drain answers match
+    backend truth (no stale speculative state)."""
+    for trial in range(8):
+        inner = InMemoryBackend()
+        clock = VirtualClock()
+        remote = LatencyBackend(
+            inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.3,
+                                seed=trial), clock=clock)
+        dirs = build_cold_tree(inner, n_subdirs=6, files_per_dir=2,
+                               grandchildren=3)
+        fs = CannyFS(remote, workers=8, echo_errors=False,
+                     work_stealing=stealing)
+        errors: list[BaseException] = []
+
+        def walker():
+            try:
+                for _ in fs.walk("cold"):
+                    pass
+            except OSError:
+                pass            # racing removal: legitimate sync surfacing
+            except BaseException as e:  # pragma: no cover
+                errors.append(e)
+
+        def mutator():
+            try:
+                if trial % 2 == 0:
+                    fs.rmtree("cold/d0")
+                else:
+                    fs.rename("cold/d1", "cold/moved")
+            except OSError:
+                pass
+            except BaseException as e:  # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=walker),
+                   threading.Thread(target=mutator),
+                   threading.Thread(target=walker)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        fs.drain()
+        assert not errors, errors
+        assert fs.engine._inflight == 0
+        st = fs.stats
+        assert st.executed == st.submitted
+        snap = inner.snapshot()
+        if trial % 2 == 0:
+            assert "cold/d0" not in snap["dirs"]
+            assert not fs.exists("cold/d0")
+        else:
+            assert "cold/d1" not in snap["dirs"]
+            assert "cold/moved" in snap["dirs"]
+            assert not fs.exists("cold/d1")
+        # post-drain: overlay answers agree with the backend for every
+        # surviving directory (stale speculative state would diverge)
+        for d in sorted(snap["dirs"]):
+            if d:
+                assert sorted(fs.readdir(d)) == inner.readdir(d), d
+        fs.close()
+
+
+# ---------------------------------------------------------------------------
+# LRU-cold insertion: speculation cannot demote the hot window
+# ---------------------------------------------------------------------------
+
+def test_cancelled_ticket_refuses_install_unit():
+    """Unit: every racing admitted mutation class flips the ticket and
+    install_speculative then refuses the listing atomically."""
+    cases = [
+        ("rmdir", ("pre/d0",)),
+        ("remove_tree", ("pre",)),
+        ("rename", ("pre", "moved")),
+        ("mkdir", ("pre/d0",)),
+    ]
+    for kind, paths in cases:
+        ov = NamespaceOverlay(OverlayPolicy())
+        t = ov.speculation_wanted("pre/d0")
+        assert t is not None
+        ov.on_op(kind, paths)
+        assert t.cancelled, kind
+        assert ov.install_speculative(t, [("f", None)]) == "cancelled"
+    # op-failure invalidation of a child cancels the parent's ticket too
+    # (a torn write may have created the child after the fetch)
+    ov = NamespaceOverlay(OverlayPolicy())
+    t = ov.speculation_wanted("pre/d0")
+    ov.invalidate("pre/d0/f")
+    assert t.cancelled
+    # rollback clears the window: everything cancels
+    ov = NamespaceOverlay(OverlayPolicy())
+    t = ov.speculation_wanted("pre/d0")
+    ov.clear()
+    assert t.cancelled
+    assert ov.install_speculative(t, [("f", None)]) == "cancelled"
+
+
+def test_speculative_listings_insert_lru_cold():
+    """Unit: at the cached-listings bound, speculative installs evict
+    other speculation (or refuse themselves), never the hot listing."""
+    ov = NamespaceOverlay(OverlayPolicy(max_cached_listings=2))
+    ov.install_listing("hot", [("x", None)])      # hot end of the LRU
+    installed = evicted = 0
+    for i in range(50):
+        t = ov.speculation_wanted(f"spec{i}")
+        assert t is not None
+        verdict = ov.install_speculative(t, [("y", None)])
+        assert verdict in ("installed", "evicted")
+        installed += verdict == "installed"
+        evicted += verdict == "evicted"
+    # the hot listing survived fifty speculative inserts at capacity
+    assert ov.readdir("hot") == ["x"]
+    assert installed >= 1 and evicted >= 1
+
+
+def test_prefetch_storm_cannot_demote_hot_or_in_window_listings():
+    """Integration (the 10k-dir shape, scaled): prefetching a wide tree
+    under a tiny max_cached_listings bound must not evict the hot cached
+    listing the consumer is using, nor touch in-window completeness."""
+    inner = InMemoryBackend()
+    n = 24
+    inner.mkdir("w")
+    for i in range(n):
+        inner.mkdir(f"w/d{i}")
+        inner.create(f"w/d{i}/base")
+    be = Boundary(inner)
+    fs = CannyFS(be, workers=4, echo_errors=False,
+                 overlay=OverlayPolicy(max_cached_listings=3))
+    fs.mkdir("inwin")                 # in-window completeness: not LRU'd
+    fs.readdir("w")                   # miss -> hot cached + seeds the storm
+    fs.engine._sched.drain()          # the speculative storm lands
+    st = fs.stats
+    assert st.prefetch_issued == n
+    n_lists = be.counts["readdir_plus"]
+    assert n_lists == 1
+    # the hot listing survived: still an overlay hit
+    assert len(fs.readdir("w")) == n
+    assert be.counts["readdir_plus"] == n_lists
+    # in-window completeness survived the storm too
+    assert fs.engine.overlay.readdir("inwin") == []
+    # and the storm bounded itself: at most the LRU bound's worth of
+    # speculative listings stuck (the rest evicted each other, cold end)
+    stuck = sum(fs.engine.overlay.readdir(f"w/d{i}") is not None
+                for i in range(n))
+    assert stuck <= 3
+    assert st.prefetch_wasted >= n - 3
+    fs.drain()
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# adaptive batch sizing (bdp_bytes plumbing)
+# ---------------------------------------------------------------------------
+
+def test_batch_width_sized_from_live_bdp():
+    inner = InMemoryBackend()
+    clock = VirtualClock()
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=4.0, data_ms=4.0, jitter_sigma=0.0,
+                            bandwidth_mb_s=100.0, seed=2), clock=clock)
+    fs = CannyFS(remote, workers=2, echo_errors=False,
+                 prefetch=PrefetchPolicy(min_batch=2, max_batch=64))
+    pf = fs.engine.prefetcher
+    assert pf.batch_width() == 64     # no RTT sample yet: policy cap
+    fs.mkdir("warm")                  # one metadata roundtrip calibrates
+    fs.drain()
+    w = pf.batch_width()
+    # 2x BDP (~4ms x 100MB/s = 400kB) / 256B clamps to the policy cap;
+    # with a tiny cap the adaptive value must land inside the bounds
+    assert 2 <= w <= 64
+    fs2 = CannyFS(remote, workers=2, echo_errors=False,
+                  prefetch=PrefetchPolicy(adaptive_batch=False, max_batch=7))
+    assert fs2.engine.prefetcher.batch_width() == 7
+    fs.close()
+    fs2.close()
+
+
+def test_full_inflight_budget_makes_speculation_yield():
+    """Speculation never blocks: with the budget nearly exhausted the
+    pump drops batches instead of wedging a worker or the caller."""
+    inner = InMemoryBackend()
+    build_cold_tree(inner, n_subdirs=8)
+    fs = CannyFS(inner, workers=2, max_inflight=2, echo_errors=False)
+    walked = list(fs.walk("cold"))
+    fs.close()
+    assert len(walked) == 9           # correct despite dropped speculation
+    assert fs.engine._inflight == 0
+
+
+def test_close_does_not_chase_unbounded_frontier():
+    """drain/close quiesce the pipeline: teardown terminates promptly
+    even when the frontier still holds unfetched levels."""
+    inner = InMemoryBackend()
+    for i in range(40):
+        inner.mkdir(f"wide{i}" if i < 20 else f"wide0/sub{i}")
+    fs = CannyFS(inner, workers=2, echo_errors=False,
+                 prefetch=PrefetchPolicy(max_batch=2, max_inflight_batches=1))
+    fs.readdir("")                    # seeds 20+ dirs, batches of 2
+    t0 = time.monotonic()
+    fs.close()
+    assert time.monotonic() - t0 < 5.0
+    st = fs.stats
+    assert st.executed == st.submitted
+    assert fs.engine._inflight == 0
+
+
+# ---------------------------------------------------------------------------
+# PR 4 known-gap regression (satellite): anchorless non-structural tails
+# ---------------------------------------------------------------------------
+
+def test_rename_waits_for_anchorless_nonstructural_ops_3_deep():
+    """A chmod of a *pre-window* file three levels down has no pending
+    structural anchor — the old pending_children BFS could not discover
+    it, so the rename could win the race and the chmod would ENOENT at
+    the old path.  The per-prefix last_op sweep must order the rename
+    after it.  Hammered across a real-latency pool where dispatch is
+    genuinely concurrent."""
+    for trial in range(20):
+        inner = InMemoryBackend()
+        remote = LatencyBackend(
+            inner, LatencyModel(meta_ms=3.0, data_ms=3.0, jitter_sigma=0.0,
+                                seed=trial))
+        fs = CannyFS(remote, workers=8, echo_errors=False)
+        fs.makedirs(f"s{trial}/a")
+        fs.write_file(f"s{trial}/a/f", b"deep")
+        fs.drain()                    # pre-window: no structural anchors
+        fs.chmod(f"s{trial}/a/f", 0o600)      # anchorless, pending
+        fs.utimens(f"s{trial}/a/f", 1.0, 2.0)  # ...and a second tail op
+        fs.rename(f"s{trial}", f"t{trial}")
+        fs.drain()
+        assert len(fs.ledger) == 0, \
+            (trial, [(e.kind, e.paths, e.error) for e in fs.ledger.entries()])
+        snap = inner.snapshot()
+        assert snap["files"].get(f"t{trial}/a/f") == b"deep", trial
+        fs.close()
