@@ -1,56 +1,64 @@
 """CI regression guard for the speculative metadata prefetch pipeline
 (PR 5).  Emits ``BENCH_pr5.json`` and FAILS (exit 1) when the pipelined
-cold walk regressed:
+cold walk regressed.
+
+Default mode is the **discrete-event simulation** (``SimClock``): the
+walker and pool workers are actors of a cooperative event-queue
+simulation, so whether a speculative batch lands before the walker's
+next sync miss is decided by *modelled* latencies in token order — a
+pure function of the manifest and the model's seed — instead of by OS
+scheduling luck.  The guard therefore runs at ``REPRO_BENCH_SCALE=1.0``
+in milliseconds of wall time, with **zero slack** on the roundtrip
+bound and a speedup floor *derived from that bound*:
 
 1. **Roundtrip bound** — a cold walk of the ``cold_walk`` manifest must
-   complete in at most ``ceil(dirs / batch) + depth`` LatencyBackend
-   roundtrips (plus a small race slack): one vectored
-   ``readdir_plus_vec`` per frontier batch, plus the walker's one sync
-   miss per level of its depth-first spine before the pipeline catches
-   up.  Without the prefetcher every directory is one sync roundtrip, so
-   the bound is derived from the manifest (dirs, depth, batch width) and
-   holds at any ``REPRO_BENCH_SCALE`` — a fixed threshold tuned at one
-   scale would go vacuous (or spuriously red) at another.
+   complete in at most ``ceil(dirs / batch) + depth + 1`` LatencyBackend
+   roundtrips: one vectored ``readdir_plus_vec`` per frontier batch,
+   plus (worst case) one sync miss per level of the walker's
+   depth-first spine before the pipeline catches up.  No race slack —
+   the simulated schedule either meets the bound or regressed.
 
 2. **Virtual-time speedup** — the same walk with ``prefetch=False``
-   (the ablation) must cost >= ``MIN_SPEEDUP``x the prefetch-on run's
-   virtual I/O time (the latency model's total injected service,
-   deterministic at zero jitter: op-count x RTT).
+   (the ablation) costs exactly one roundtrip per directory, so the
+   total injected service must improve by at least
+   ``n_dirs / max_ops`` — the op-count collapse the bound guarantees.
 
-Latency is paced-virtual (``PacedVirtualClock``): the measure is
-virtual, but each roundtrip also pays a scaled real sleep so the
-speculative batches *genuinely* overlap the walker in wall time — on a
-pure virtual clock the walker could drain the tree before the first
-batch landed and the guard would flake on scheduling luck.
+``--paced`` switches to the legacy paced-real smoke
+(``PacedVirtualClock``: each roundtrip pays a scaled real sleep so the
+batches genuinely overlap the walker in wall time): loose slack, fixed
+3x floor — keep it as a non-blocking cross-check that the pipeline
+still overlaps under real threading, not as the blocking guard.
 
-    PYTHONPATH=src REPRO_BENCH_SCALE=0.1 python -m benchmarks.walk_guard
+    PYTHONPATH=src REPRO_BENCH_SCALE=1.0 python -m benchmarks.walk_guard
+    PYTHONPATH=src REPRO_BENCH_SCALE=0.1 python -m benchmarks.walk_guard --paced
 """
 from __future__ import annotations
 
+import argparse
 import json
 import math
 import sys
 
 from repro.core import (CannyFS, InMemoryBackend, LatencyBackend,
-                        LatencyModel, PrefetchPolicy)
+                        LatencyModel, PrefetchPolicy, SimClock)
 
 from .workloads import (ColdTreeSpec, PacedVirtualClock, cold_walk,
                         populate_cold_tree)
 
-MIN_SPEEDUP = 3.0
+MIN_SPEEDUP_PACED = 3.0
 BATCH = 16          # fixed width so the manifest-derived bound is exact
-META_MS = 40.0      # paced to 4 ms real per roundtrip: solid vs overhead
+META_MS = 40.0      # paced mode: 4 ms real per roundtrip; sim: pure virtual
 PACE = 0.1
-# beyond one batch per ceil(dirs/BATCH) and one spine miss per level,
-# tolerate a few duplicate fetches where the walker's sync miss raced a
-# batch already carrying the same directory
-OP_SLACK = 6
+# paced mode only: tolerate a few duplicate fetches where the walker's
+# sync miss raced a batch already carrying the same directory.  The sim
+# schedule has no such races — its slack is zero.
+OP_SLACK = {"sim": 0, "paced": 6}
 
 
-def run_walk(spec: ColdTreeSpec, *, prefetch: bool) -> dict:
+def run_walk(spec: ColdTreeSpec, *, prefetch: bool, mode: str) -> dict:
     inner = InMemoryBackend()
     dirs = populate_cold_tree(inner, spec)
-    clock = PacedVirtualClock(pace=PACE)
+    clock = SimClock() if mode == "sim" else PacedVirtualClock(pace=PACE)
     remote = LatencyBackend(
         inner, LatencyModel(meta_ms=META_MS, data_ms=META_MS,
                             jitter_sigma=0.0, seed=5), clock=clock)
@@ -61,12 +69,20 @@ def run_walk(spec: ColdTreeSpec, *, prefetch: bool) -> dict:
     walk_ops = remote.op_count          # before close() lands stragglers
     fs.close()
     st = fs.stats
+    # total injected service: every roundtrip's modelled latency summed
+    # over whichever thread paid it — PacedVirtualClock accumulates it
+    # globally, SimClock per actor
+    virtual_io = (sum(clock.thread_seconds().values()) if mode == "sim"
+                  else clock.now())
     return {
         "visited_dirs": visited,
         "manifest_dirs": len(dirs),
         "backend_ops_walk": walk_ops,
         "backend_ops_total": remote.op_count,
-        "virtual_io_s": clock.now(),
+        "virtual_io_s": virtual_io,
+        # sim only: the schedule's true critical path (idle included) —
+        # how long the walk *takes*, not how much service it buys
+        "makespan_virtual_s": clock.makespan(),
         "prefetch_issued": st.prefetch_issued,
         "prefetch_batches": st.prefetch_batches,
         "prefetch_hits": st.prefetch_hits,
@@ -77,17 +93,24 @@ def run_walk(spec: ColdTreeSpec, *, prefetch: bool) -> dict:
     }
 
 
-def main() -> int:
+def build_report(mode: str = "sim") -> dict:
+    """Run the prefetch-on walk and its ablation; return the payload (no
+    I/O).  The determinism regression test calls this twice and asserts
+    the sim payloads serialize byte-identically."""
     spec = ColdTreeSpec().scaled()
     n_dirs = spec.n_dirs()
-    on = run_walk(spec, prefetch=True)
-    off = run_walk(spec, prefetch=False)
+    on = run_walk(spec, prefetch=True, mode=mode)
+    off = run_walk(spec, prefetch=False, mode=mode)
     # the manifest-derived bound: batches + one spine miss per level
-    # (the root's miss is level 0) + race slack
-    max_ops = math.ceil(n_dirs / BATCH) + spec.depth + 1 + OP_SLACK
+    # (the root's miss is level 0) + mode-dependent race slack
+    max_ops = math.ceil(n_dirs / BATCH) + spec.depth + 1 + OP_SLACK[mode]
+    # the ablation pays one roundtrip per dir, the pipeline at most
+    # max_ops — so the sim speedup floor IS the op-count collapse
+    min_speedup = (n_dirs / max_ops if mode == "sim" else MIN_SPEEDUP_PACED)
     speedup = (off["virtual_io_s"] / on["virtual_io_s"]
                if on["virtual_io_s"] else 0.0)
-    report = {
+    return {
+        "mode": mode,
         "cold_walk": {
             "spec": {"fanout": spec.fanout, "depth": spec.depth,
                      "files_per_dir": spec.files_per_dir,
@@ -96,51 +119,76 @@ def main() -> int:
             "prefetch_off": off,
             "max_ops": max_ops,
             "speedup_virtual": speedup,
-            "min_speedup": MIN_SPEEDUP,
+            "min_speedup": min_speedup,
         },
     }
-    with open("BENCH_pr5.json", "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
-    print(f"cold_walk: dirs={n_dirs} depth={spec.depth} batch={BATCH}  "
-          f"on: ops={on['backend_ops_total']} (bound {max_ops}) "
-          f"virtual={on['virtual_io_s']:.2f}s  "
-          f"off: ops={off['backend_ops_total']} "
-          f"virtual={off['virtual_io_s']:.2f}s  speedup={speedup:.2f}x "
-          f"(batches={on['prefetch_batches']} hits={on['prefetch_hits']} "
-          f"wasted={on['prefetch_wasted']})")
-    ok = True
+
+
+def check(report: dict) -> list[str]:
+    """Return the list of FAIL strings for a report (empty == pass)."""
+    cw = report["cold_walk"]
+    on, off = cw["prefetch_on"], cw["prefetch_off"]
+    n_dirs, max_ops = cw["spec"]["n_dirs"], cw["max_ops"]
+    failures = []
     for name, r in (("prefetch-on", on), ("prefetch-off", off)):
         if r["visited_dirs"] != n_dirs:
-            print(f"FAIL: {name} walk visited {r['visited_dirs']} dirs, "
-                  f"manifest lists {n_dirs} — traversal lost entries",
-                  file=sys.stderr)
-            ok = False
+            failures.append(
+                f"{name} walk visited {r['visited_dirs']} dirs, manifest "
+                f"lists {n_dirs} — traversal lost entries")
         if r["ledger"]:
-            print(f"FAIL: {name} run left {r['ledger']} deferred errors "
-                  "on a read-only walk", file=sys.stderr)
-            ok = False
+            failures.append(
+                f"{name} run left {r['ledger']} deferred errors on a "
+                "read-only walk")
     if on["backend_ops_total"] > max_ops:
-        print(f"FAIL: {on['backend_ops_total']} roundtrips for a cold "
-              f"walk of {n_dirs} dirs exceeds the manifest-derived bound "
-              f"ceil(dirs/batch)+depth+slack = {max_ops} — the prefetch "
-              "pipeline fell behind its consumer", file=sys.stderr)
-        ok = False
+        failures.append(
+            f"{on['backend_ops_total']} roundtrips for a cold walk of "
+            f"{n_dirs} dirs exceeds the manifest-derived bound "
+            f"ceil(dirs/batch)+depth+1+slack = {max_ops} — the prefetch "
+            "pipeline fell behind its consumer")
     if on["prefetch_batches"] == 0:
-        print("FAIL: prefetch_batches == 0 — the pipeline never issued a "
-              "vectored batch on a cold walk", file=sys.stderr)
-        ok = False
+        failures.append(
+            "prefetch_batches == 0 — the pipeline never issued a vectored "
+            "batch on a cold walk")
     if off["backend_ops_total"] < n_dirs:
-        print(f"FAIL: the ablation walked {n_dirs} cold dirs in only "
-              f"{off['backend_ops_total']} roundtrips — prefetch leaked "
-              "into the prefetch=False run and the speedup below is "
-              "meaningless", file=sys.stderr)
-        ok = False
-    if speedup < MIN_SPEEDUP:
-        print(f"FAIL: prefetch-on virtual I/O time is only {speedup:.2f}x "
-              f"better than the ablation (need >= {MIN_SPEEDUP}x)",
-              file=sys.stderr)
-        ok = False
-    return 0 if ok else 1
+        failures.append(
+            f"the ablation walked {n_dirs} cold dirs in only "
+            f"{off['backend_ops_total']} roundtrips — prefetch leaked into "
+            "the prefetch=False run and the speedup is meaningless")
+    if cw["speedup_virtual"] < cw["min_speedup"]:
+        failures.append(
+            f"prefetch-on virtual I/O time is only "
+            f"{cw['speedup_virtual']:.2f}x better than the ablation "
+            f"(need >= {cw['min_speedup']:.2f}x)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--paced", action="store_true",
+                    help="legacy paced-real smoke mode (nondeterministic, "
+                         "loose bounds) instead of the simulation")
+    args = ap.parse_args(argv)
+    mode = "paced" if args.paced else "sim"
+    report = build_report(mode)
+    with open("BENCH_pr5.json", "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    cw = report["cold_walk"]
+    on, off = cw["prefetch_on"], cw["prefetch_off"]
+    print(f"[{mode}] cold_walk: dirs={cw['spec']['n_dirs']} "
+          f"depth={cw['spec']['depth']} batch={BATCH}  "
+          f"on: ops={on['backend_ops_total']} (bound {cw['max_ops']}) "
+          f"virtual={on['virtual_io_s']:.2f}s "
+          f"makespan={on['makespan_virtual_s']:.2f}s  "
+          f"off: ops={off['backend_ops_total']} "
+          f"virtual={off['virtual_io_s']:.2f}s  "
+          f"speedup={cw['speedup_virtual']:.2f}x "
+          f"(floor {cw['min_speedup']:.2f}x, "
+          f"batches={on['prefetch_batches']} hits={on['prefetch_hits']} "
+          f"wasted={on['prefetch_wasted']})")
+    failures = check(report)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

@@ -9,6 +9,30 @@ within CI budget, and replay it through three storage modes:
     direct  — the same operation stream executed synchronously (NFS mode)
     staging — write to fast local store, then sequential copy-out
               (the tmpfs + rsync out-staging workflow)
+
+Measurement harness (PR 6)
+--------------------------
+
+The guards measure on the **discrete-event simulation clock**
+(``SimClock``, ``core/simclock.py``) by default: the driver and every
+pool worker become actors of a cooperative event-queue simulation, so
+the whole schedule — makespans, steal/park counts, per-worker loads,
+fault firings — is a pure function of the workload manifest and the
+latency model's seed.  Seed discipline therefore carries the entire
+reproducibility story: every ``LatencyModel``/``FaultPlan`` in a
+benchmark pins an explicit ``seed``, jitter is zero wherever a bound is
+asserted, and byte-identical ``BENCH_*.json`` artifacts across
+same-seed runs are themselves a CI regression check (same
+``PYTHONHASHSEED``: the shard map hashes paths).  Sim mode runs at
+``REPRO_BENCH_SCALE=1.0`` in milliseconds of wall time, so guard bounds
+are exact manifest-derived quantities with zero scheduling slack.
+
+``PacedVirtualClock`` remains as the opt-in **paced-real smoke mode**
+(``--paced`` on the guards): scaled real sleeps under real OS
+scheduling.  Use it as a periodic non-blocking cross-check that the
+simulation's story survives contact with genuine threading (the
+``test_sim_guards`` cross-validation automates the comparison at small
+scale); use the simulation for anything that gates CI.
 """
 from __future__ import annotations
 
@@ -27,7 +51,9 @@ def bench_scale() -> float:
 
 
 class PacedVirtualClock(VirtualClock):
-    """Virtual accounting plus a real sleep scaled down by ``pace``.
+    """Virtual accounting plus a real sleep scaled down by ``pace`` —
+    the **opt-in smoke mode** (``--paced`` on the guards) since PR 6;
+    the blocking guards measure on ``SimClock`` instead.
 
     The throughput *measure* stays virtual (per-thread makespan / total
     ``now()``), but a zero-real-cost op stream would leave the worker
@@ -37,8 +63,10 @@ class PacedVirtualClock(VirtualClock):
     would never genuinely overlap its consumer.  The scaled real sleep
     makes each op genuinely block (releasing the GIL), so pools actually
     interleave and pipelines actually run ahead — at 1/20th real time, a
-    1 ms modelled roundtrip costs 50 us of wall clock.  (Shared by
-    dispatch_guard and walk_guard.)"""
+    1 ms modelled roundtrip costs 50 us of wall clock.  That buys
+    realism, not determinism: counts and makespans still vary run to
+    run, which is why its thresholds carry slack and it no longer gates
+    CI (the discrete-event ``SimClock`` does, with exact bounds)."""
 
     def __init__(self, pace: float = 0.05):
         super().__init__()

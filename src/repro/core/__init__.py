@@ -25,7 +25,12 @@ orthogonal behaviour and delegates the rest::
     fs      = CannyFS(chaos, abort_on_error=True)
 
 * ``LatencyBackend``        — per-op latency, bandwidth cap, server slots;
-  pass ``clock=VirtualClock()`` for deterministic, near-instant replay.
+  pass ``clock=VirtualClock()`` for deterministic, near-instant replay, or
+  ``clock=SimClock()`` (``core/simclock.py``) for the discrete-event mode:
+  the engine's driver and pool workers become actors of a cooperative
+  event-queue simulation, every makespan/steal/park count is a pure
+  function of the op stream and the model's seed, and the guards run at
+  full scale in milliseconds (see the benchmarks).
 * ``QuotaBackend``          — byte budget; quota exhaustion (EDQUOT)
   emerges organically mid-write and is *released* by rollback's unlinks.
 * ``FaultInjectingBackend`` — seeded ``FaultPlan`` of ``FaultRule`` clauses
@@ -82,6 +87,7 @@ from .fusion import FusionPolicy
 from .namespace import (NamespaceOverlay, OverlayPolicy, RemoveWitness,
                         SpeculationTicket)
 from .prefetch import MetadataPrefetcher, PrefetchPolicy
+from .simclock import SimClock
 from .transaction import Transaction, run_transaction
 
 __all__ = [
@@ -93,7 +99,7 @@ __all__ = [
     "MetadataPrefetcher", "N_FLAGS",
     "NamespaceOverlay", "OpCancelledError", "OverlayPolicy",
     "PrefetchPolicy", "QuotaBackend",
-    "RealClock", "RemoveWitness", "RollbackLeakError",
+    "RealClock", "RemoveWitness", "RollbackLeakError", "SimClock",
     "ShortWriteError", "SpeculationTicket", "StatResult",
     "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
     "is_under", "make_fault", "norm_path", "parent_of", "run_transaction",

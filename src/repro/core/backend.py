@@ -11,6 +11,7 @@ paper's FUSE layer) and talks to a pluggable ``StorageBackend``:
 """
 from __future__ import annotations
 
+import heapq
 import io
 import os
 import posixpath
@@ -375,12 +376,36 @@ class InMemoryBackend(StorageBackend):
         self._dirs: set[str] = {""}
         self._symlinks: dict[str, str] = {}
         self._meta: dict[str, dict] = {}
+        # derived index: parent dir -> child basenames, kept in lockstep
+        # with the three tables above so readdir/rmdir cost O(children)
+        # instead of a full-table scan — the simulation sweeps walk
+        # 10k-directory trees, where the scan is quadratic in tree size
+        self._children: dict[str, set[str]] = {"": set()}
 
     # -- helpers --
     def _check_parent(self, path: str) -> None:
         par = parent_of(path)
         if par not in self._dirs:
             raise FileNotFoundError(f"no such directory: {par!r}")
+
+    def _add_entry(self, path: str) -> None:
+        self._children.setdefault(parent_of(path), set()).add(
+            posixpath.basename(path))
+
+    def _drop_entry(self, path: str) -> None:
+        kids = self._children.get(parent_of(path))
+        if kids is not None:
+            kids.discard(posixpath.basename(path))
+
+    def _scan_children(self, path: str) -> set[str]:
+        """Brute-force recomputation of one directory's child basenames
+        from the primary tables (tests cross-check the index with this)."""
+        out = set()
+        for pool in (self._files, self._dirs, self._symlinks):
+            for k in pool:
+                if k and parent_of(k) == path:
+                    out.add(posixpath.basename(k))
+        return out
 
     def _exists(self, path: str) -> bool:
         return path in self._files or path in self._dirs or path in self._symlinks
@@ -402,16 +427,19 @@ class InMemoryBackend(StorageBackend):
             if self._exists(path):
                 raise FileExistsError(path)
             self._dirs.add(path)
+            self._add_entry(path)
+            self._children.setdefault(path, set())
 
     def rmdir(self, path):
         with self._lock:
             path = norm_path(path)
             if path not in self._dirs:
                 raise FileNotFoundError(path)
-            if any(parent_of(p) == path for p in
-                   list(self._files) + list(self._dirs - {path}) + list(self._symlinks)):
+            if self._children.get(path):
                 raise OSError(39, "directory not empty", path)
             self._dirs.discard(path)
+            self._children.pop(path, None)
+            self._drop_entry(path)
 
     def create(self, path):
         with self._lock:
@@ -420,6 +448,7 @@ class InMemoryBackend(StorageBackend):
             if path in self._dirs:
                 raise IsADirectoryError(path)
             self._files[path] = bytearray()
+            self._add_entry(path)
 
     def unlink(self, path):
         with self._lock:
@@ -430,6 +459,7 @@ class InMemoryBackend(StorageBackend):
                 del self._files[path]
             else:
                 raise FileNotFoundError(path)
+            self._drop_entry(path)
 
     def rename(self, src, dst):
         with self._lock:
@@ -439,8 +469,12 @@ class InMemoryBackend(StorageBackend):
             self._check_parent(dst)
             if src in self._files:
                 self._files[dst] = self._files.pop(src)
+                self._drop_entry(src)
+                self._add_entry(dst)
             elif src in self._symlinks:
                 self._symlinks[dst] = self._symlinks.pop(src)
+                self._drop_entry(src)
+                self._add_entry(dst)
             else:  # directory rename: move the whole subtree
                 if self._exists(dst):
                     raise FileExistsError(dst)
@@ -451,6 +485,13 @@ class InMemoryBackend(StorageBackend):
                 for d in [d for d in self._dirs if d == src or d.startswith(prefix)]:
                     self._dirs.discard(d)
                     self._dirs.add(dst + d[len(src):])
+                # the children index moves with the subtree: bucket keys
+                # shift wholesale, membership only changes at the roots
+                for k in [k for k in self._children
+                          if k == src or k.startswith(prefix)]:
+                    self._children[dst + k[len(src):]] = self._children.pop(k)
+                self._drop_entry(src)
+                self._add_entry(dst)
 
     def symlink(self, target, path):
         with self._lock:
@@ -459,6 +500,7 @@ class InMemoryBackend(StorageBackend):
             if self._exists(path):
                 raise FileExistsError(path)
             self._symlinks[path] = target
+            self._add_entry(path)
 
     def link(self, src, dst):
         with self._lock:
@@ -467,6 +509,7 @@ class InMemoryBackend(StorageBackend):
                 raise FileNotFoundError(src)
             self._check_parent(dst)
             self._files[dst] = self._files[src]  # shared bytearray = hardlink
+            self._add_entry(dst)
 
     def readlink(self, path):
         with self._lock:
@@ -482,6 +525,7 @@ class InMemoryBackend(StorageBackend):
             if path not in self._files:
                 self._check_parent(path)
                 self._files[path] = bytearray()
+                self._add_entry(path)
             buf = self._files[path]
             if len(buf) < offset:
                 buf.extend(b"\0" * (offset - len(buf)))
@@ -566,12 +610,7 @@ class InMemoryBackend(StorageBackend):
             path = norm_path(path)
             if path not in self._dirs:
                 raise FileNotFoundError(path)
-            out = set()
-            for pool in (self._files, self._dirs, self._symlinks):
-                for k in pool:
-                    if k and parent_of(k) == path:
-                        out.add(posixpath.basename(k))
-            return sorted(out)
+            return sorted(self._children.get(path, ()))
 
 
 # ---------------------------------------------------------------------------
@@ -698,6 +737,15 @@ class LatencyBackend(StorageBackend):
         self._rng = random.Random(self.model.seed)
         self._rng_lock = threading.Lock()
         self._slots = threading.Semaphore(self.model.server_slots)
+        # discrete-event mode (clock.discrete_event, core/simclock.py):
+        # the semaphore would deadlock the cooperative scheduler (the one
+        # running thread real-blocking on slot holders that only advance
+        # when it yields), so server concurrency is modelled on the
+        # virtual timeline instead — a heap of slot busy-until times; a
+        # request arriving with all slots busy starts when the earliest
+        # slot frees (M/G/c queueing, same roofline the semaphore enforced
+        # in real time).  Guarded by _rng_lock like the other accounting.
+        self._slot_heap: list[float] = []
         self.op_count = 0
         self.busy_s = 0.0  # total server-side service time (for utilization)
         self._rtt_ewma: Optional[float] = None   # measured round-trip time
@@ -722,6 +770,22 @@ class LatencyBackend(StorageBackend):
             else:
                 self._rtt_ewma = (lat if self._rtt_ewma is None
                                   else (1 - a) * self._rtt_ewma + a * lat)
+            if getattr(self.clock, "discrete_event", False):
+                now = self.clock.now()
+                heap = self._slot_heap
+                while heap and heap[0] <= now:
+                    heapq.heappop(heap)
+                if len(heap) >= self.model.server_slots:
+                    start = max(now, heapq.heappop(heap))
+                else:
+                    start = now
+                heapq.heappush(heap, start + lat)
+                wait = (start - now) + lat
+            else:
+                wait = -1.0
+        if wait >= 0.0:
+            self.clock.sleep(wait)
+            return
         with self._slots:
             self.clock.sleep(lat)
 

@@ -104,6 +104,7 @@ from .fusion import Fuser, FusionPolicy, MetaPayload, WritePayload
 from .namespace import NamespaceOverlay, OverlayPolicy
 from .prefetch import MetadataPrefetcher, PrefetchPolicy
 from .scheduler import NEEDS_CHILDREN, STRUCTURAL, OpScheduler, _Op
+from .simclock import SimClock
 
 
 @dataclass
@@ -235,7 +236,8 @@ class EagerIOEngine:
                  fusion: FusionPolicy | bool | None = None,
                  overlay: OverlayPolicy | bool | None = None,
                  prefetch: PrefetchPolicy | bool | None = None,
-                 work_stealing: bool = True):
+                 work_stealing: bool = True,
+                 clock=None):
         self.backend = backend
         self.flags = flags or EagerFlags()
         self.max_inflight = int(max_inflight)
@@ -263,8 +265,22 @@ class EagerIOEngine:
             ov_policy = overlay
         self.overlay: NamespaceOverlay | None = (
             NamespaceOverlay(ov_policy) if ov_policy.enabled else None)
+        # discrete-event mode (core/simclock.py): engaged by an explicit
+        # ``clock=SimClock(...)`` or by discovering one on the backend's
+        # decorator stack (LatencyBackend exposes ``.clock``; the fault /
+        # quota decorators delegate unknown attrs inward).  The driver
+        # (this constructing thread) and every pool worker become actors
+        # of the simulation; all blocking waits below are bracketed so
+        # the event queue can advance virtual time past them.
+        clk = clock if clock is not None else getattr(backend, "clock", None)
+        self.sim: SimClock | None = clk if isinstance(clk, SimClock) else None
+        if self.sim is not None and executor != "pool":
+            raise ValueError(
+                "SimClock requires the pool executor: thread_per_op spawns "
+                "an unbounded, timing-dependent thread set the event queue "
+                "cannot schedule deterministically")
         self._sched = OpScheduler(self.stats, max_inflight=self.max_inflight,
-                                  work_stealing=work_stealing)
+                                  work_stealing=work_stealing, sim=self.sim)
         # adaptive fusion sizing: a latency-measuring backend anywhere in
         # the decorator stack exposes its bandwidth-delay product (the
         # decorators delegate unknown attrs inward); without one the
@@ -287,8 +303,19 @@ class EagerIOEngine:
             if pf_policy.enabled and self.overlay is not None else None)
         self._closed = False
         self._executor = executor
+        self._sim_driver_ident = 0
+        if self.sim is not None:
+            # the driver attaches FIRST (token holder from the start), then
+            # the pool spawns and every worker registers before any op is
+            # submitted — the actor set is identical at every driver yield
+            # point, run to run, which is what makes the schedule a pure
+            # function of the op stream and the latency model's seed
+            self.sim.attach()
+            self._sim_driver_ident = threading.get_ident()
         self._exec = make_executor(executor, self._sched, self._execute,
-                                   workers)
+                                   workers, sim=self.sim)
+        if self.sim is not None:
+            self.sim.wait_attached(self._exec.nworkers + 1)
 
     # ------------------------------------------------------------------
     # submission
@@ -321,7 +348,10 @@ class EagerIOEngine:
             self.stats.ack_latency_s += time.monotonic() - t0
             return None
         self.stats.sync_ops += 1
-        op.done.wait()
+        if self.sim is not None:
+            self.sim.wait_event(op.done)
+        else:
+            op.done.wait()
         self.stats.ack_latency_s += time.monotonic() - t0
         if op.error is not None:
             raise op.error
@@ -434,7 +464,10 @@ class EagerIOEngine:
         op = self._sched.seal_path(norm_path(path))
         if op is not None:
             self.stats.barrier_waits += 1
-            op.done.wait()
+            if self.sim is not None:
+                self.sim.wait_event(op.done)
+            else:
+                op.done.wait()
 
     def drain(self) -> None:
         """Global barrier: wait for the whole DAG to execute.  The
@@ -472,6 +505,20 @@ class EagerIOEngine:
         self._closed = True
         self._sched.close()
         self.ledger.report()
+        if self.sim is not None:
+            # quiesce the simulation before anyone reads the clock: every
+            # worker's exit path (final wakeup charge, detach) lands on the
+            # virtual timeline *before* close returns, so makespan reads
+            # are stable and run-to-run identical.  Only the attaching
+            # driver detaches itself; a close from another thread joins
+            # without touching the actor registry.
+            if threading.get_ident() == self._sim_driver_ident:
+                self.sim.block_begin()
+                self._exec.join()
+                self.sim.block_end()
+                self.sim.detach()
+            else:
+                self._exec.join()
 
     def __enter__(self):
         return self

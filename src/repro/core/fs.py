@@ -103,14 +103,15 @@ class CannyFS:
                  fusion: FusionPolicy | bool | None = None,
                  overlay: OverlayPolicy | bool | None = None,
                  prefetch: PrefetchPolicy | bool | None = None,
-                 work_stealing: bool = True):
+                 work_stealing: bool = True,
+                 clock=None):
         self.flags = flags or EagerFlags()
         self.engine = EagerIOEngine(
             backend, flags=self.flags, max_inflight=max_inflight,
             workers=workers, executor=executor, abort_on_error=abort_on_error,
             ledger=ErrorLedger(echo=echo_errors), fusion=fusion,
             overlay=overlay, prefetch=prefetch,
-            work_stealing=work_stealing)
+            work_stealing=work_stealing, clock=clock)
         self.backend = backend
         self._txn_lock = threading.Lock()
         self._txn = None  # active Transaction (set by Transaction.__enter__)

@@ -390,7 +390,14 @@ class MetadataPrefetcher:
                 st.prefetch_issued += len(live)
         if op is None:
             return False
-        op.done.wait()
+        sim = self.engine.sim
+        if sim is not None:
+            # discrete-event mode: the latch is an off-timeline wait (the
+            # covering batch's completion is the wake), bracketed so the
+            # event queue can advance virtual time past this consumer
+            sim.wait_event(op.done)
+        else:
+            op.done.wait()
         return True
 
     # ------------------------------------------------------------------

@@ -161,10 +161,21 @@ class OpScheduler:
     control lock so they stay exact under concurrency."""
 
     def __init__(self, stats, *, max_inflight: int = 300,
-                 shards: int = DEFAULT_SHARDS, work_stealing: bool = True):
+                 shards: int = DEFAULT_SHARDS, work_stealing: bool = True,
+                 sim=None):
         self.stats = stats
         self.max_inflight = int(max_inflight)
         self.work_stealing = bool(work_stealing)
+        # discrete-event mode (core/simclock.py): every real wait in this
+        # class is bracketed with sim.block_begin()/block_end() so the
+        # simulation can advance virtual time past a blocked worker, and
+        # park-wakeup / steal-probe costs are charged on the virtual
+        # timeline.  block_begin is always called while still holding the
+        # condition's underlying lock (no lost wakeups: the next token
+        # holder cannot complete a notify until our wait begins), and
+        # block_end only after releasing it (a token-less thread must not
+        # hold a lock a running thread can contend).
+        self._sim = sim
         self._shards = [_Shard() for _ in range(max(1, int(shards)))]
         self._nshards = len(self._shards)
         self._seq = itertools.count(1)
@@ -216,21 +227,30 @@ class OpScheduler:
         its write-through stat cache there, so a fast-failing op's
         error-path invalidation, which happens at completion, always wins
         over the ACK-time mocked entry)."""
-        with self._ctl:
-            if self._poisoned:
-                raise EnginePoisonedError(
-                    "cannyfs engine poisoned by an earlier deferred error")
-            if self._closed:
-                raise RuntimeError("engine is closed")
-            # budget: block the *caller* — this is the paper's in-flight cap
-            while self._inflight >= self.max_inflight:
+        while True:
+            hooked = False
+            with self._ctl:
+                if self._poisoned:
+                    raise EnginePoisonedError(
+                        "cannyfs engine poisoned by an earlier deferred error")
+                if self._closed:
+                    raise RuntimeError("engine is closed")
+                # budget: block the *caller* — the paper's in-flight cap
+                if self._inflight < self.max_inflight:
+                    seq = next(self._seq)
+                    self._inflight += 1
+                    self.stats.submitted += 1
+                    self.stats.op_counts[kind] = \
+                        self.stats.op_counts.get(kind, 0) + 1
+                    self.stats.max_queue_depth = max(
+                        self.stats.max_queue_depth, self._inflight)
+                    break
+                if self._sim is not None:
+                    self._sim.block_begin(self._budget_cv)
+                    hooked = True
                 self._budget_cv.wait()
-            seq = next(self._seq)
-            self._inflight += 1
-            self.stats.submitted += 1
-            self.stats.op_counts[kind] = self.stats.op_counts.get(kind, 0) + 1
-            self.stats.max_queue_depth = max(self.stats.max_queue_depth,
-                                             self._inflight)
+            if hooked:
+                self._sim.block_end()
         op = _Op(seq, kind, paths, fn, eager=eager, region=region,
                  payload=payload)
         if on_admit is not None:
@@ -363,8 +383,21 @@ class OpScheduler:
         if not self._parked:
             return
         if self.work_stealing:
-            self._ready_cv.notify(n)
+            if self._sim is not None:
+                # sim mode: the parked workers' READY transitions happen
+                # HERE, on the notifier's (token-holding) side, via the
+                # wake channel — a woken worker mutates no sim state
+                # between its real wait returning and its block_end(), so
+                # every handoff lands in deterministic token order
+                woken = self._sim.wake(self._ready_cv, n)
+                self._parked -= woken
+                self._ready_cv.notify(woken)
+            else:
+                self._ready_cv.notify(n)
         else:
+            if self._sim is not None:
+                self._sim.wake(self._ready_cv)
+                self._parked = 0
             self._ready_cv.notify_all()
 
     def _push_ready(self, op: _Op) -> None:
@@ -457,26 +490,30 @@ class OpScheduler:
             return (worker % n,)
         return range(worker % workers, n, workers)
 
-    def _pop_ready(self, worker: int, workers: int) -> Optional[_Op]:
+    def _pop_ready(self, worker: int,
+                   workers: int) -> tuple[Optional[_Op], bool]:
         """Non-blocking pop: owned shards FIFO first (normal lane, then
         the low-priority speculative lane), then (with stealing on) the
         tail of the first non-empty victim shard — again normal lanes
         before any speculative one, so prefetch work only ever fills
-        otherwise-idle workers."""
+        otherwise-idle workers.  Returns ``(op, stolen)`` — the caller
+        charges the steal-probe cost to the virtual timeline, never this
+        method, because the parked-worker rescan runs under the control
+        lock and sleeping there would deadlock the simulation."""
         shards = self._shards
         owned = self._owned_shards(worker, workers)
         for s in owned:
             sh = shards[s]
             with sh.rlock:
                 if sh.rq:
-                    return sh.rq.popleft()
+                    return sh.rq.popleft(), False
         for s in owned:
             sh = shards[s]
             with sh.rlock:
                 if sh.rq_lo:
-                    return sh.rq_lo.popleft()
+                    return sh.rq_lo.popleft(), False
         if not self.work_stealing:
-            return None
+            return None, False
         mine = set(owned)
         n = self._nshards
         for k in range(n):
@@ -489,7 +526,7 @@ class OpScheduler:
             if op is not None:
                 with self._slock:
                     self.stats.steals += 1
-                return op
+                return op, True
         for k in range(n):
             s = (worker + k) % n
             if s in mine:
@@ -500,8 +537,8 @@ class OpScheduler:
             if op is not None:
                 with self._slock:
                     self.stats.steals += 1
-                return op
-        return None
+                return op, True
+        return None, False
 
     def next_ready(self, worker: int = 0, workers: int = 1) -> Optional[_Op]:
         """Blocking pop for pool worker ``worker`` of ``workers``; None once
@@ -509,24 +546,42 @@ class OpScheduler:
         control-lock condition only when all shards are dry; the re-scan
         under the control lock closes the race with producers (who take the
         control lock after enqueueing, so either they see us parked or we
-        see their op)."""
+        see their op).  In sim mode the park is bracketed for the event
+        queue and the wakeup / steal-probe costs are charged to the virtual
+        timeline (outside every lock)."""
+        sim = self._sim
         while True:
-            op = self._pop_ready(worker, workers)
-            if op is not None:
-                return op
-            with self._ctl:
-                # rescan while holding ctl: rlocks nest under the control
-                # lock, so a producer's enqueue either landed before this
-                # scan or its notify comes after our wait begins
-                op = self._pop_ready(worker, workers)
-                if op is not None:
-                    return op
-                if self._closed:
-                    return None
-                self._parked += 1
-                self.stats.parks += 1
-                self._ready_cv.wait()
-                self._parked -= 1
+            op, stolen = self._pop_ready(worker, workers)
+            if op is None:
+                hooked = False
+                with self._ctl:
+                    # rescan while holding ctl: rlocks nest under the
+                    # control lock, so a producer's enqueue either landed
+                    # before this scan or its notify comes after our wait
+                    # begins
+                    op, stolen = self._pop_ready(worker, workers)
+                    if op is None:
+                        if self._closed:
+                            return None
+                        self._parked += 1
+                        self.stats.parks += 1
+                        if sim is not None:
+                            sim.block_begin(self._ready_cv)
+                            hooked = True
+                        self._ready_cv.wait()
+                        if sim is None:
+                            self._parked -= 1
+                        # sim mode: _notify_ready/close already debited
+                        # _parked on the notifier's side (see there)
+                if hooked:
+                    sim.block_end()
+                    if sim.wake_latency_s > 0:
+                        sim.sleep(sim.wake_latency_s)
+                if op is None:
+                    continue
+            if sim is not None and stolen and sim.steal_probe_s > 0:
+                sim.sleep(sim.steal_probe_s)
+            return op
 
     def on_complete(self, op: _Op) -> None:
         """Release dependents, clean the shard maps, retire the budget
@@ -565,10 +620,16 @@ class OpScheduler:
             if newly_ready:
                 self._notify_ready(len(newly_ready))
             self._inflight -= 1
+            if self._sim is not None:
+                self._sim.wake(self._budget_cv, 1)
             self._budget_cv.notify()
             if self._inflight == 0:
+                if self._sim is not None:
+                    self._sim.wake(self._idle_cv)
                 self._idle_cv.notify_all()
         op.done.set()
+        if self._sim is not None:
+            self._sim.wake(op.done)
 
     # ------------------------------------------------------------------
     # barriers / lifecycle
@@ -580,9 +641,18 @@ class OpScheduler:
             return shard.last_op.get(path)
 
     def drain(self) -> None:
-        with self._idle_cv:
-            while self._inflight > 0:
+        sim = self._sim
+        while True:
+            hooked = False
+            with self._idle_cv:
+                if self._inflight == 0:
+                    return
+                if sim is not None:
+                    sim.block_begin(self._idle_cv)
+                    hooked = True
                 self._idle_cv.wait()
+            if hooked:
+                sim.block_end()
 
     @property
     def poisoned(self) -> bool:
@@ -607,6 +677,9 @@ class OpScheduler:
     def close(self) -> None:
         with self._ctl:
             self._closed = True
+            if self._sim is not None:
+                self._sim.wake(self._ready_cv)
+                self._parked = 0   # notifier-side accounting (sim mode)
             self._ready_cv.notify_all()
 
     @property

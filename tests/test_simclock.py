@@ -1,0 +1,285 @@
+"""Unit tests for the measurement clocks: ``VirtualClock`` edge cases
+and the ``SimClock`` discrete-event primitives (PR 6), including the
+modelled park/steal dispatch costs the engine charges on the virtual
+timeline."""
+import threading
+
+import pytest
+
+from repro.core import (CannyFS, InMemoryBackend, LatencyBackend,
+                        LatencyModel, SimClock, VirtualClock)
+
+
+# ----------------------------------------------------------------------
+# VirtualClock edge cases
+# ----------------------------------------------------------------------
+
+def test_virtualclock_no_sleep_threads_absent():
+    clock = VirtualClock()
+
+    def noop():
+        clock.now()         # touching the clock without sleeping
+
+    t = threading.Thread(target=noop)
+    t.start(); t.join()
+    assert clock.thread_seconds() == {}
+    assert clock.makespan() == 0.0
+    assert clock.now() == 0.0
+
+
+def test_virtualclock_zero_and_negative_dt_are_noops():
+    clock = VirtualClock(start=5.0)
+    clock.sleep(0.0)
+    clock.sleep(-1.0)
+    assert clock.now() == 5.0
+    assert clock.thread_seconds() == {}
+    assert clock.makespan() == 0.0
+
+
+def test_virtualclock_concurrent_sleepers_accounted_per_thread():
+    clock = VirtualClock()
+    barrier = threading.Barrier(4)
+
+    def sleeper(dt):
+        barrier.wait()
+        for _ in range(10):
+            clock.sleep(dt)
+
+    threads = [threading.Thread(target=sleeper, args=(dt,))
+               for dt in (0.1, 0.2, 0.3)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    for t in threads:
+        t.join()
+    per = sorted(clock.thread_seconds().values())
+    assert per == pytest.approx([1.0, 2.0, 3.0])
+    assert clock.makespan() == pytest.approx(3.0)   # busiest thread
+    assert clock.now() == pytest.approx(6.0)        # global total
+
+
+# ----------------------------------------------------------------------
+# SimClock primitives
+# ----------------------------------------------------------------------
+
+def test_simclock_zero_and_negative_dt_are_noops():
+    clock = SimClock(start=2.0)
+    clock.sleep(0.0)
+    clock.sleep(-0.5)
+    assert clock.now() == 2.0
+    assert clock.makespan() == 0.0
+    assert clock.thread_seconds() == {}
+    assert not clock.attached()
+
+
+def test_simclock_transient_autoattach_single_thread():
+    clock = SimClock()
+    clock.sleep(1.5)                    # unattached: attach for the call
+    clock.sleep(0.25)
+    assert clock.now() == pytest.approx(1.75)
+    assert clock.makespan() == pytest.approx(1.75)
+    assert not clock.attached()         # transient actor is gone
+    name = threading.current_thread().name
+    assert clock.thread_seconds()[name] == pytest.approx(1.75)
+
+
+def test_simclock_attach_nesting():
+    clock = SimClock()
+    clock.attach("me")
+    clock.attach("me")                  # nested: counted, not duplicated
+    assert clock.attached()
+    clock.detach()
+    assert clock.attached()             # still one level deep
+    clock.detach()
+    assert not clock.attached()
+    clock.detach()                      # never-attached detach is a no-op
+
+
+def test_simclock_concurrent_sleepers_overlap_on_one_timeline():
+    """Two actors each sleeping 1s in parallel => makespan 1s (the sleeps
+    overlap in virtual time), while busy time records 1s apiece."""
+    clock = SimClock()
+    clock.attach("driver")
+
+    def worker():
+        clock.attach("w")
+        try:
+            clock.sleep(1.0)
+        finally:
+            clock.detach()
+
+    t = threading.Thread(target=worker)
+    t.start()
+    clock.wait_attached(2)
+    clock.sleep(1.0)
+    clock.block_begin()                 # off-timeline: let the join finish
+    t.join()
+    clock.block_end()
+    clock.detach()
+    assert clock.makespan() == pytest.approx(1.0)
+    busy = clock.thread_seconds()
+    assert busy["driver"] == pytest.approx(1.0)
+    assert busy["w"] == pytest.approx(1.0)
+
+
+def test_simclock_virtual_time_jumps_to_earliest_deadline():
+    """Sleepers wake in deadline order regardless of start order."""
+    clock = SimClock()
+    clock.attach("driver")
+    order = []
+
+    def sleeper(name, dt):
+        clock.attach(name)
+        try:
+            clock.sleep(dt)
+            order.append((name, clock.now()))
+        finally:
+            clock.detach()
+
+    threads = [threading.Thread(target=sleeper, args=(f"s{i}", dt))
+               for i, dt in enumerate((0.3, 0.1, 0.2))]
+    for t in threads:
+        t.start()
+    clock.wait_attached(4)
+    clock.block_begin()
+    for t in threads:
+        t.join()
+    clock.block_end()
+    clock.detach()
+    assert order == [("s1", pytest.approx(0.1)),
+                     ("s2", pytest.approx(0.2)),
+                     ("s0", pytest.approx(0.3))]
+    assert clock.makespan() == pytest.approx(0.3)
+
+
+def test_simclock_wait_event_blocks_until_token_holder_sets():
+    clock = SimClock()
+    clock.attach("driver")
+    ev = threading.Event()
+    seen = []
+
+    def setter():
+        clock.attach("setter")
+        try:
+            clock.sleep(0.5)
+            ev.set()
+            clock.wake(ev)              # paired with set(): token order
+        finally:
+            clock.detach()
+
+    t = threading.Thread(target=setter)
+    t.start()
+    clock.wait_attached(2)
+    clock.wait_event(ev)                # yields; time advances to 0.5
+    seen.append(clock.now())
+    clock.block_begin()
+    t.join()
+    clock.block_end()
+    clock.detach()
+    assert seen == [pytest.approx(0.5)]
+
+
+def test_simclock_wait_event_already_set_returns_immediately():
+    clock = SimClock()
+    ev = threading.Event()
+    ev.set()
+    clock.wait_event(ev)                # unattached + set: plain return
+    assert clock.now() == 0.0
+
+
+def test_simclock_wake_is_fifo_per_channel():
+    """wake(channel, n) releases the n *oldest* blockers of that channel
+    and leaves other channels' blockers alone."""
+    clock = SimClock()
+    clock.attach("driver")
+    chan_a, chan_b = object(), object()
+    cv = threading.Condition()
+    released = []
+
+    def blocker(name, chan):
+        clock.attach(name)
+        try:
+            with cv:
+                clock.block_begin(chan)
+                cv.wait()
+            clock.block_end()
+            released.append(name)
+            clock.sleep(0.01)
+        finally:
+            clock.detach()
+
+    specs = [("b0", chan_a), ("b1", chan_a), ("b2", chan_b)]
+    threads = []
+    for name, chan in specs:
+        t = threading.Thread(target=blocker, args=(name, chan))
+        t.start()
+        threads.append(t)
+        clock.wait_attached(1 + len(threads))
+        # let the blocker reach its block_begin before starting the next,
+        # so bseq order is b0 < b1 < b2
+        while True:
+            clock.sleep(0.001)
+            with clock._cv:
+                blocked = sum(1 for a in clock._actors.values()
+                              if a.channel is not None)
+            if blocked == len(threads):
+                break
+    assert clock.wake(chan_a, 1) == 1   # only the oldest chan_a blocker
+    with cv:
+        cv.notify(1)                    # paired real wakeup: FIFO == bseq
+    clock.sleep(0.01)
+    assert clock.wake(None, 1) == 0     # nobody blocks on channel None
+    assert clock.wake(chan_a) == 1      # the remaining chan_a blocker
+    assert clock.wake(chan_b) == 1
+    with cv:
+        cv.notify_all()                 # both remaining waiters are READY
+    clock.block_begin()
+    for t in threads:
+        t.join()
+    clock.block_end()
+    clock.detach()
+    assert released[0] == "b0"          # FIFO: oldest blocker first
+    assert sorted(released) == ["b0", "b1", "b2"]
+
+
+# ----------------------------------------------------------------------
+# engine integration: park/steal charges + determinism
+# ----------------------------------------------------------------------
+
+def _run_engine(wake_latency_s, steal_probe_s, workers=4, n=40):
+    clock = SimClock(wake_latency_s=wake_latency_s,
+                     steal_probe_s=steal_probe_s)
+    remote = LatencyBackend(
+        InMemoryBackend(),
+        LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0, seed=2),
+        clock=clock)
+    fs = CannyFS(remote, max_inflight=1000, workers=workers, fusion=False)
+    fs.mkdir("d")
+    for i in range(n):
+        fs.write_file(f"d/f{i:02d}", b"payload")
+    fs.close()
+    return clock, fs.stats
+
+
+def test_simclock_park_and_steal_charges_extend_busy_time():
+    base_clock, base_stats = _run_engine(0.0, 0.0)
+    cost_clock, cost_stats = _run_engine(1e-3, 1e-4)
+    assert cost_stats.parks + cost_stats.steals > 0
+    base_busy = sum(base_clock.thread_seconds().values())
+    cost_busy = sum(cost_clock.thread_seconds().values())
+    # the park handoffs / steal probes are charged on the timeline: the
+    # modelled-cost run pays strictly more total virtual busy time
+    assert cost_busy > base_busy
+    extra = cost_busy - base_busy
+    floor = cost_stats.parks * 1e-3
+    assert extra >= floor or cost_stats.parks == 0
+
+
+def test_simclock_engine_schedule_is_deterministic():
+    runs = []
+    for _ in range(2):
+        clock, stats = _run_engine(1e-6, 1e-7)
+        runs.append((clock.makespan(),
+                     sorted(clock.thread_seconds().items()),
+                     stats.steals, stats.parks, stats.executed))
+    assert runs[0] == runs[1]
