@@ -9,7 +9,8 @@ import numpy as np
 from repro.checkpoint import TransactionalCheckpointManager
 from repro.core import CannyFS, EagerFlags
 
-from .workloads import bench_scale, make_remote_backend
+from .workloads import (RestoreSpec, bench_scale, make_remote_backend,
+                        populate_restore, restore_read)
 
 
 def _fake_state(mb: float) -> dict:
@@ -53,6 +54,43 @@ def checkpoint_stall(state_mb: float = 64.0, steps: int = 8,
                      f"stall_per_save={np.mean(stalls):.3f}s;"
                      f"total={total:.2f}s;saves={n_saves};"
                      f"state_mb={state_mb:.0f}"))
+    return rows
+
+
+def checkpoint_restore(n_shards: int = 16) -> list:
+    """Job-start restore stall: stream a sharded checkpoint back through
+    the read-ahead plane vs one sync roundtrip per chunk.
+
+    The mirror image of ``checkpoint_stall``: saves hide behind deferred
+    writes, but a restore *must* block on every byte — the only lever is
+    pipelining the reads.  The sharded checkpoint sits on the remote
+    backend cold; both modes read it back chunked and verify the same
+    checksum (the plane is an optimization, never a semantics change)."""
+    spec = RestoreSpec(n_shards=n_shards).scaled()
+    rows = []
+    digests = {}
+    for mode in ("cannyfs", "direct"):
+        remote = make_remote_backend(load=1.0, seed=17, jitter=0.0)
+        populate_restore(remote.inner, spec)    # cold state, bypass latency
+        if mode == "cannyfs":
+            fs = CannyFS(remote, max_inflight=4000, workers=16)
+        else:
+            fs = CannyFS(remote, flags=EagerFlags.all_off(), workers=2,
+                         readahead=False)
+        t0 = time.monotonic()
+        nbytes, digest = restore_read(fs, spec)
+        t = time.monotonic() - t0
+        fs.close()
+        digests[mode] = (nbytes, digest)
+        st = fs.stats
+        rows.append((f"ckpt_restore/{mode}",
+                     f"{t / spec.n_shards * 1e6:.0f}",
+                     f"total={t:.2f}s;shards={spec.n_shards};"
+                     f"bytes={nbytes};backend_ops={remote.op_count};"
+                     f"ra_windows={st.readahead_windows};"
+                     f"ra_hits={st.readahead_hits};"
+                     f"ra_wasted={st.readahead_wasted}"))
+    assert digests["cannyfs"] == digests["direct"], digests
     return rows
 
 

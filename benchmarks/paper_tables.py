@@ -282,6 +282,53 @@ def cold_walk_table() -> list:
     return rows
 
 
+def read_ahead_table() -> list:
+    """The read-side data-plane ablation (PR 7): the checkpoint-restore
+    stream under cannyfs vs cannyfs-noreadahead vs direct.
+    ``backend_ops`` is the roundtrip count (one registering sync miss
+    plus one vectored ``read_vec`` window per ~W bytes per shard instead
+    of one roundtrip per chunk), ``service_s`` the latency model's
+    accrued remote cost, and the readahead counters show where the bytes
+    came from.  All three modes must return the same checksum."""
+    import time
+    from repro.core import (EagerFlags, InMemoryBackend, LatencyBackend,
+                            LatencyModel, ReadPolicy)
+
+    from .workloads import RestoreSpec, populate_restore, restore_read
+    spec = RestoreSpec().scaled()
+    modes = (("cannyfs", EagerFlags(),
+              ReadPolicy(adaptive=False, max_bytes=512 << 10)),
+             ("cannyfs-noreadahead", EagerFlags(), False),
+             ("direct", EagerFlags.all_off(), False))
+    rows = []
+    digests = set()
+    for mode, flags, readahead in modes:
+        inner = InMemoryBackend()
+        populate_restore(inner, spec)
+        remote = LatencyBackend(
+            inner, LatencyModel(meta_ms=3.0, data_ms=3.0, jitter_sigma=0.0,
+                                server_slots=8, seed=9))
+        fs = CannyFS(remote, flags=flags, readahead=readahead,
+                     max_inflight=4000, workers=8)
+        t0 = time.monotonic()
+        nbytes, digest = restore_read(fs, spec)
+        fs.close()
+        wall = time.monotonic() - t0
+        st = fs.stats
+        digests.add((nbytes, digest))
+        rows.append((f"read_ahead/{mode}",
+                     f"{remote.busy_s * 1e6:.0f}",
+                     f"service={remote.busy_s:.2f}s;wall={wall:.2f}s;"
+                     f"backend_ops={remote.op_count};"
+                     f"shards={spec.n_shards};bytes={nbytes};"
+                     f"ra_windows={st.readahead_windows};"
+                     f"ra_hits={st.readahead_hits};"
+                     f"ra_latched={st.readahead_latched};"
+                     f"ra_wasted={st.readahead_wasted}"))
+    assert len(digests) == 1, digests
+    return rows
+
+
 def fault_recovery() -> list:
     """The paper's error-path story (§1/§4): a theoretically possible I/O
     error "will frequently warrant the resubmission of a full job" — so the

@@ -1,0 +1,271 @@
+"""CI regression guard for the vectored read-side data plane (PR 7).
+Emits ``BENCH_pr7.json`` and FAILS (exit 1) when the read-ahead
+pipeline regressed.
+
+Default mode is the **discrete-event simulation** (``SimClock``): the
+reader and pool workers are actors of a cooperative event-queue
+simulation, so whether a speculative window lands before the reader's
+next chunk is decided by *modelled* latencies in token order — a pure
+function of the manifest and the model's seed.  The guard runs at
+``REPRO_BENCH_SCALE=1.0`` in milliseconds of wall time, with **zero
+slack** on the roundtrip bounds:
+
+1. **Roundtrip bounds** — streaming a shard of S bytes in C-byte chunks
+   through a fixed W-byte read-ahead window must cost exactly
+   ``1 + ceil((S - C) / W)`` data roundtrips (one sync miss that
+   registers the pipeline, then one vectored ``read_vec`` window per W
+   bytes), against the ablation's ``ceil(S / C)`` — checked for the
+   checkpoint-restore storm (readdir + per-shard streams, stats warmed
+   by the listing) and a single large sequential stream (one cold
+   stat).  Both bounds are exact equalities in sim mode.
+
+2. **Virtual-time speedup** — total injected service with read-ahead on
+   must beat the ``readahead=False`` ablation by >= 3x.
+
+3. **Byte identity** — on and off runs must produce the same byte count
+   and sha256: the buffered plane is an optimization, never a
+   semantics change.
+
+The report also embeds ``sim_sweep.restore_storm()`` — the 64-shard
+interleaved restore at a scale the paced harness could never afford.
+
+``--paced`` switches to the paced-real smoke (``PacedVirtualClock``:
+scaled real sleeps under genuine threading): loose slack, fixed 3x
+floor — a non-blocking cross-check, not the blocking guard.
+
+    PYTHONPATH=src REPRO_BENCH_SCALE=1.0 python -m benchmarks.read_guard
+    PYTHONPATH=src REPRO_BENCH_SCALE=0.25 python -m benchmarks.read_guard --paced
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+from repro.core import (CannyFS, InMemoryBackend, LatencyBackend,
+                        LatencyModel, ReadPolicy, SimClock)
+
+from .sim_sweep import restore_storm
+from .workloads import (PacedVirtualClock, RestoreSpec, StreamSpec,
+                        populate_restore, populate_stream, restore_read,
+                        stream_read)
+
+MIN_SPEEDUP = 3.0
+WINDOW = 512 << 10   # fixed read-ahead window so the bounds are exact
+META_MS = 40.0       # paced mode: 4 ms real per roundtrip; sim: pure virtual
+BW_MB_S = 110.0
+PACE = 0.1
+# paced mode only: tolerate a few duplicate fetches where the reader's
+# sync miss raced a window already carrying the same span.  The sim
+# schedule has no such races — its slack is zero (exact equality).
+OP_SLACK = {"sim": 0, "paced": 8}
+
+
+def _policy(enabled: bool):
+    return (ReadPolicy(adaptive=False, max_bytes=WINDOW) if enabled
+            else False)
+
+
+def _run(populate, body, *, readahead: bool, mode: str) -> dict:
+    inner = InMemoryBackend()
+    populate(inner)
+    clock = SimClock() if mode == "sim" else PacedVirtualClock(pace=PACE)
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=META_MS, data_ms=META_MS,
+                            bandwidth_mb_s=BW_MB_S, jitter_sigma=0.0,
+                            seed=5), clock=clock)
+    fs = CannyFS(remote, workers=8, echo_errors=False,
+                 readahead=_policy(readahead))
+    nbytes, digest = body(fs)
+    read_ops = remote.op_count          # before close() lands stragglers
+    fs.close()
+    st = fs.stats
+    virtual_io = (sum(clock.thread_seconds().values()) if mode == "sim"
+                  else clock.now())
+    return {
+        "bytes": nbytes,
+        "sha256": digest,
+        "backend_ops_read": read_ops,
+        "backend_ops_total": remote.op_count,
+        "virtual_io_s": virtual_io,
+        "makespan_virtual_s": clock.makespan(),
+        "readahead_windows": st.readahead_windows,
+        "readahead_hits": st.readahead_hits,
+        "readahead_latched": st.readahead_latched,
+        "readahead_bytes": st.readahead_bytes,
+        "readahead_wasted": st.readahead_wasted,
+        "readahead_cancelled": st.readahead_cancelled,
+        "ledger": len(fs.ledger),
+    }
+
+
+def _per_stream_ops(size: int, chunk: int) -> tuple[int, int]:
+    """(read-ahead-on, ablation) data roundtrips for one sequential
+    stream of ``size`` bytes in ``chunk``-byte slices under a fixed
+    ``WINDOW``: one registering sync miss + one window per W bytes of
+    remainder, vs one sync read per chunk."""
+    on = 1 + math.ceil((size - chunk) / WINDOW)
+    off = math.ceil(size / chunk)
+    return on, off
+
+
+def build_report(mode: str = "sim") -> dict:
+    """Run both read workloads with the plane on and off; return the
+    payload (no I/O).  The determinism regression test calls this twice
+    and asserts the sim payloads serialize byte-identically."""
+    rspec = RestoreSpec().scaled()
+    sspec = StreamSpec().scaled()
+    r_on = _run(lambda b: populate_restore(b, rspec),
+                lambda fs: restore_read(fs, rspec),
+                readahead=True, mode=mode)
+    r_off = _run(lambda b: populate_restore(b, rspec),
+                 lambda fs: restore_read(fs, rspec),
+                 readahead=False, mode=mode)
+    s_on = _run(lambda b: populate_stream(b, sspec),
+                lambda fs: stream_read(fs, sspec),
+                readahead=True, mode=mode)
+    s_off = _run(lambda b: populate_stream(b, sspec),
+                 lambda fs: stream_read(fs, sspec),
+                 readahead=False, mode=mode)
+    slack = OP_SLACK[mode]
+    shard_on, shard_off = _per_stream_ops(rspec.shard_bytes, rspec.chunk)
+    stream_on, stream_off = _per_stream_ops(sspec.file_bytes, sspec.chunk)
+    report = {
+        "mode": mode,
+        "window_bytes": WINDOW,
+        "restore": {
+            "spec": {"n_shards": rspec.n_shards,
+                     "shard_bytes": rspec.shard_bytes,
+                     "chunk": rspec.chunk,
+                     "total_bytes": rspec.total_bytes()},
+            "readahead_on": r_on,
+            "readahead_off": r_off,
+            # 1 readdir_plus + per-shard streams (stats warmed: 0 RTT)
+            "max_ops": 1 + rspec.n_shards * shard_on + slack,
+            "ablation_ops": 1 + rspec.n_shards * shard_off,
+            "speedup_virtual": (r_off["virtual_io_s"] / r_on["virtual_io_s"]
+                                if r_on["virtual_io_s"] else 0.0),
+            "min_speedup": MIN_SPEEDUP,
+        },
+        "stream": {
+            "spec": {"file_bytes": sspec.file_bytes, "chunk": sspec.chunk},
+            "readahead_on": s_on,
+            "readahead_off": s_off,
+            # 1 cold sync stat + the stream
+            "max_ops": 1 + stream_on + slack,
+            "ablation_ops": 1 + stream_off,
+            "speedup_virtual": (s_off["virtual_io_s"] / s_on["virtual_io_s"]
+                                if s_on["virtual_io_s"] else 0.0),
+            "min_speedup": MIN_SPEEDUP,
+        },
+    }
+    if mode == "sim":
+        # the scale axis: 64 interleaved shard streams, 64 workers —
+        # runs on its own SimClock, deterministic like everything above
+        report["restore_storm"] = restore_storm()
+    return report
+
+
+def _check_workload(name: str, wl: dict, mode: str) -> list[str]:
+    on, off = wl["readahead_on"], wl["readahead_off"]
+    failures = []
+    if (on["bytes"], on["sha256"]) != (off["bytes"], off["sha256"]):
+        failures.append(
+            f"{name}: read-ahead returned {on['bytes']}B sha={on['sha256']}"
+            f" vs ablation {off['bytes']}B sha={off['sha256']} — the "
+            "buffered plane changed the bytes")
+    for label, r in (("readahead-on", on), ("readahead-off", off)):
+        if r["ledger"]:
+            failures.append(
+                f"{name}/{label} left {r['ledger']} deferred errors on a "
+                "read-only workload")
+    if on["backend_ops_total"] > wl["max_ops"]:
+        failures.append(
+            f"{name}: {on['backend_ops_total']} roundtrips exceeds the "
+            f"manifest-derived bound {wl['max_ops']} — the window pipeline "
+            "fell behind its consumer")
+    if mode == "sim" and on["backend_ops_total"] != wl["max_ops"]:
+        failures.append(
+            f"{name}: {on['backend_ops_total']} roundtrips != the exact "
+            f"sim bound {wl['max_ops']} — the schedule drifted (count the "
+            "windows)")
+    if on["readahead_windows"] == 0:
+        failures.append(
+            f"{name}: zero speculative windows issued on a sequential "
+            "stream")
+    if off["backend_ops_total"] < wl["ablation_ops"]:
+        failures.append(
+            f"{name}: ablation paid only {off['backend_ops_total']} of "
+            f"{wl['ablation_ops']} roundtrips — read-ahead leaked into the "
+            "readahead=False run and the speedup is meaningless")
+    if wl["speedup_virtual"] < wl["min_speedup"]:
+        failures.append(
+            f"{name}: virtual I/O improved only "
+            f"{wl['speedup_virtual']:.2f}x over the ablation "
+            f"(need >= {wl['min_speedup']:.2f}x)")
+    return failures
+
+
+def check(report: dict) -> list[str]:
+    """Return the list of FAIL strings for a report (empty == pass)."""
+    failures = []
+    failures += _check_workload("restore", report["restore"], report["mode"])
+    failures += _check_workload("stream", report["stream"], report["mode"])
+    storm = report.get("restore_storm")
+    if storm is not None:
+        if storm["bytes"] != storm["spec"]["total_bytes"]:
+            failures.append(
+                f"restore_storm read {storm['bytes']} of "
+                f"{storm['spec']['total_bytes']} bytes — a shard stream "
+                "was truncated")
+        if storm["backend_ops"] >= storm["ablation_ops"]:
+            failures.append(
+                f"restore_storm took {storm['backend_ops']} roundtrips "
+                f"(ablation floor {storm['ablation_ops']}) — read-ahead "
+                "stopped saving roundtrips at scale")
+        if storm["ledger"]:
+            failures.append(
+                f"restore_storm left {storm['ledger']} deferred errors")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--paced", action="store_true",
+                    help="paced-real smoke mode (nondeterministic, loose "
+                         "bounds) instead of the simulation")
+    args = ap.parse_args(argv)
+    mode = "paced" if args.paced else "sim"
+    report = build_report(mode)
+    with open("BENCH_pr7.json", "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    for name in ("restore", "stream"):
+        wl = report[name]
+        on, off = wl["readahead_on"], wl["readahead_off"]
+        print(f"[{mode}] {name}: on: ops={on['backend_ops_total']} "
+              f"(bound {wl['max_ops']}) virtual={on['virtual_io_s']:.2f}s "
+              f"makespan={on['makespan_virtual_s']:.2f}s "
+              f"windows={on['readahead_windows']} hits={on['readahead_hits']} "
+              f"latched={on['readahead_latched']} "
+              f"wasted={on['readahead_wasted']}  "
+              f"off: ops={off['backend_ops_total']} "
+              f"virtual={off['virtual_io_s']:.2f}s  "
+              f"speedup={wl['speedup_virtual']:.2f}x "
+              f"(floor {wl['min_speedup']:.2f}x)")
+    storm = report.get("restore_storm")
+    if storm is not None:
+        print(f"[sim] restore_storm: shards={storm['spec']['n_shards']} "
+              f"workers={storm['workers']} ops={storm['backend_ops']} "
+              f"(ablation {storm['ablation_ops']}) "
+              f"makespan={storm['makespan_virtual_s']:.2f}s "
+              f"windows={storm['readahead_windows']} "
+              f"hits={storm['readahead_hits']}")
+    failures = check(report)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,9 +27,11 @@ def _tables():
         "rw_switch": paper_tables.rw_switch,
         "fusion": paper_tables.fusion_table,
         "cold_walk": paper_tables.cold_walk_table,
+        "read_ahead": paper_tables.read_ahead_table,
         "fault_recovery": paper_tables.fault_recovery,
         # beyond-paper: the engine inside the training framework
         "checkpoint_stall": io_training.checkpoint_stall,
+        "checkpoint_restore": io_training.checkpoint_restore,
         "metrics_stream": io_training.metrics_stream,
         "staged_data_read": io_training.staged_data_read,
     }

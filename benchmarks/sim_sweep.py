@@ -27,6 +27,13 @@ Phases:
    the ledger as exactly the modelled errno; delay spikes must stretch
    the makespan, not the ledger.
 
+3. **restore_storm** — 64 shards x 1 MiB of sharded checkpoint read
+   back *interleaved* (one chunk per shard per pass, the sharded-loader
+   access pattern) with the read-ahead plane on, 64 workers: every
+   shard keeps its own speculative ``read_vec`` pipeline in flight at
+   once.  Not part of ``BENCH_pr6.json`` — ``read_guard`` embeds it in
+   ``BENCH_pr7.json`` and enforces its roundtrip/byte checks there.
+
 Sizes honor ``REPRO_BENCH_SCALE`` (CI runs 1.0; use 0.1 for a quick
 local smoke).
 
@@ -40,10 +47,11 @@ import sys
 
 from repro.core import (CannyFS, FaultInjectingBackend, FaultPlan, FaultRule,
                         InMemoryBackend, LatencyBackend, LatencyModel,
-                        PrefetchPolicy, SimClock)
+                        PrefetchPolicy, ReadPolicy, SimClock)
 
-from .workloads import (ColdTreeSpec, TreeSpec, cold_walk, extract_tree,
-                        populate_cold_tree, synth_tree)
+from .workloads import (ColdTreeSpec, RestoreSpec, TreeSpec, cold_walk,
+                        extract_tree, populate_cold_tree, populate_restore,
+                        restore_read_interleaved, synth_tree)
 
 WORKERS = 64
 WALK_BATCH = 64
@@ -137,7 +145,53 @@ def storm() -> dict:
     }
 
 
+def restore_storm() -> dict:
+    """64 interleaved 1 MiB shard streams through the read-ahead plane.
+
+    Deterministic like the other phases, but *embedded by read_guard
+    into* ``BENCH_pr7.json`` rather than recorded here — BENCH_pr6's
+    fingerprint predates the read plane and must stay byte-stable."""
+    import math
+
+    spec = RestoreSpec(n_shards=64).scaled()
+    inner = InMemoryBackend()
+    populate_restore(inner, spec)
+    clock = SimClock()
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=WALK_META_MS, data_ms=WALK_META_MS,
+                            jitter_sigma=0.0, seed=12), clock=clock)
+    window = 512 << 10
+    fs = CannyFS(remote, workers=WORKERS, echo_errors=False,
+                 readahead=ReadPolicy(adaptive=False, max_bytes=window,
+                                      max_files=max(spec.n_shards, 64)))
+    nbytes, digest = restore_read_interleaved(fs, spec)
+    read_ops = remote.op_count
+    fs.close()
+    st = fs.stats
+    per_shard_off = math.ceil(spec.shard_bytes / spec.chunk)
+    return {
+        "spec": {"n_shards": spec.n_shards,
+                 "shard_bytes": spec.shard_bytes,
+                 "chunk": spec.chunk, "window": window,
+                 "total_bytes": spec.total_bytes()},
+        "workers": WORKERS,
+        "bytes": nbytes,
+        "sha256": digest,
+        "backend_ops": read_ops,
+        "ablation_ops": 1 + spec.n_shards * per_shard_off,
+        "makespan_virtual_s": clock.makespan(),
+        "readahead_windows": st.readahead_windows,
+        "readahead_hits": st.readahead_hits,
+        "readahead_latched": st.readahead_latched,
+        "readahead_wasted": st.readahead_wasted,
+        "load": _load_stats(clock),
+        "ledger": len(fs.ledger),
+    }
+
+
 def build_report() -> dict:
+    # restore_storm() is intentionally absent: read_guard embeds it in
+    # BENCH_pr7.json, keeping this artifact's fingerprint unchanged
     return {"workers": WORKERS, "walk10k": walk10k(), "storm": storm()}
 
 

@@ -36,6 +36,7 @@ scale); use the simulation for anything that gates CI.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import time
 from dataclasses import dataclass
@@ -233,6 +234,147 @@ def populate_cold_tree(backend, spec: ColdTreeSpec) -> list[str]:
         for j in range(spec.files_per_dir):
             backend.create(f"{d}/f{j}")
     return dirs
+
+
+@dataclass(frozen=True)
+class RestoreSpec:
+    """A sharded checkpoint for the restore-read workloads: ``n_shards``
+    files of ``shard_bytes`` each under ``root``, read back in ``chunk``-
+    byte sequential slices.  The manifest (shards x bytes / chunk /
+    window) is the source of truth for read_guard's roundtrip bounds, so
+    it must be exact."""
+
+    n_shards: int = 16
+    shard_bytes: int = 1 << 20
+    chunk: int = 64 << 10
+    root: str = "ckpt"
+
+    def scaled(self) -> "RestoreSpec":
+        # scale the shard count, keep the per-shard stream: the guard's
+        # pipelining story is windows racing ahead within each shard
+        s = bench_scale()
+        return RestoreSpec(max(int(round(self.n_shards * s)), 4),
+                           self.shard_bytes, self.chunk, self.root)
+
+    def total_bytes(self) -> int:
+        return self.n_shards * self.shard_bytes
+
+
+def _shard_payload(index: int, nbytes: int) -> bytes:
+    """Deterministic, shard-distinct content (cross-shard mixups change
+    the checksum)."""
+    block = bytes((index * 131 + j) & 0xFF for j in range(256))
+    return (block * (nbytes // 256 + 1))[:nbytes]
+
+
+def populate_restore(backend, spec: RestoreSpec) -> list[str]:
+    """Materialize the sharded checkpoint directly on a backend (no
+    engine, no latency) — the cold state a restore must read back."""
+    backend.mkdir(spec.root)
+    paths = []
+    for i in range(spec.n_shards):
+        p = f"{spec.root}/shard_{i:04d}.bin"
+        backend.create(p)
+        backend.write_at(p, 0, _shard_payload(i, spec.shard_bytes))
+        paths.append(p)
+    return paths
+
+
+def restore_read(fs: CannyFS, spec: RestoreSpec) -> tuple[int, str]:
+    """The checkpoint-restore read storm: readdir the checkpoint dir,
+    then stream every shard back in exact-size sequential chunks.  The
+    per-shard size comes from ``stat`` (warmed by the readdir_plus
+    listing — zero extra roundtrips) and the reader never reads past
+    EOF, so the sync-path op count is a pure function of the manifest.
+    Returns (total bytes, sha256 over shards in sorted order) — the
+    caller cross-checks both against the ablation, byte for byte."""
+    h = hashlib.sha256()
+    total = 0
+    for name in sorted(fs.readdir(spec.root)):
+        p = f"{spec.root}/{name}"
+        remaining = fs.stat(p).size
+        with fs.open(p, "rb") as f:
+            while remaining > 0:
+                piece = f.read(min(spec.chunk, remaining))
+                if not piece:
+                    break
+                h.update(piece)
+                total += len(piece)
+                remaining -= len(piece)
+    return total, h.hexdigest()
+
+
+def restore_read_interleaved(fs: CannyFS, spec: RestoreSpec,
+                             rounds_limit: int | None = None) -> tuple[int,
+                                                                       str]:
+    """The restore *storm* access pattern: one driver round-robins a
+    chunk from every shard per pass (what a sharded loader restoring N
+    parameter shards concurrently looks like to the filesystem).  Each
+    shard's stream stays sequential, so every shard keeps its own
+    read-ahead pipeline in flight at once."""
+    names = sorted(fs.readdir(spec.root))
+    sizes = {n: fs.stat(f"{spec.root}/{n}").size for n in names}
+    offsets = dict.fromkeys(names, 0)
+    hashes = {n: hashlib.sha256() for n in names}
+    total, live = 0, list(names)
+    while live:
+        nxt = []
+        for n in live:
+            take = min(spec.chunk, sizes[n] - offsets[n])
+            piece = fs.pread(f"{spec.root}/{n}", offsets[n], take)
+            if not piece:
+                continue
+            hashes[n].update(piece)
+            offsets[n] += len(piece)
+            total += len(piece)
+            if offsets[n] < sizes[n]:
+                nxt.append(n)
+        live = nxt
+        if rounds_limit is not None:
+            rounds_limit -= 1
+            if rounds_limit <= 0:
+                break
+    combined = hashlib.sha256()
+    for n in names:
+        combined.update(hashes[n].digest())
+    return total, combined.hexdigest()
+
+
+@dataclass(frozen=True)
+class StreamSpec:
+    """One large sequential file for the shard-stream workload."""
+
+    file_bytes: int = 8 << 20
+    chunk: int = 64 << 10
+    path: str = "stream/seq.bin"
+
+    def scaled(self) -> "StreamSpec":
+        s = bench_scale()
+        return StreamSpec(max(int(self.file_bytes * s), 1 << 20),
+                          self.chunk, self.path)
+
+
+def populate_stream(backend, spec: StreamSpec) -> None:
+    backend.mkdir(spec.path.rsplit("/", 1)[0])
+    backend.create(spec.path)
+    backend.write_at(spec.path, 0, _shard_payload(7, spec.file_bytes))
+
+
+def stream_read(fs: CannyFS, spec: StreamSpec) -> tuple[int, str]:
+    """Sequential whole-file stream in exact-size chunks (one cold sync
+    stat for the size, then never past EOF)."""
+    h = hashlib.sha256()
+    total = 0
+    remaining = fs.stat(spec.path).size
+    with fs.open(spec.path, "rb") as f:
+        while remaining > 0:
+            piece = f.read(min(spec.chunk, remaining))
+            if not piece:
+                break
+            h.update(piece)
+            total += len(piece)
+            remaining -= len(piece)
+    return total, h.hexdigest()
 
 
 def cold_walk(fs: CannyFS, root: str = "cold") -> int:

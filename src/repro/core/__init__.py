@@ -66,11 +66,19 @@ frontier fetched in batched ``readdir_plus_vec`` reads, ONE roundtrip
 per batch sized to ~2x the measured BDP, installed into the overlay
 without sealing and cancelled by racing mutations so semantics stay
 byte-identical; control via ``CannyFS(prefetch=PrefetchPolicy(...))``
-or ``prefetch=False``) / executor (``core/executor.py``: pool |
-thread_per_op).  Fault rules fire per *fused* backend call (one
-``write_vec``, ``readdir_plus_vec`` or ``remove_tree`` of N engine ops
-is a single match — speculative batch faults are advisory and never
-reach the ledger), and torn writes surface as ``ShortWriteError``.
+or ``prefetch=False``) / read-side data plane (``core/readahead.py``:
+a sequential reader's first sync ``pread`` registers a ticketed
+per-file page buffer and pipelines speculative ``read_vec`` windows
+sized to ~2x the measured BDP ahead of the consumer — page hits skip
+the backend, racing admitted mutations cancel the run — while the
+transactional write path's journaling existence probes fuse into ONE
+speculative ``stat_vec`` per batch with a sync-stat fallback; control
+via ``CannyFS(readahead=ReadPolicy(...))`` or ``readahead=False``) /
+executor (``core/executor.py``: pool | thread_per_op).  Fault rules
+fire per *fused* backend call (one ``write_vec``, ``readdir_plus_vec``,
+``stat_vec``, ``read_vec`` or ``remove_tree`` of N engine ops is a
+single match — speculative batch faults are advisory and never reach
+the ledger), and torn writes surface as ``ShortWriteError``.
 """
 from .backend import (Clock, InMemoryBackend, LatencyBackend, LatencyModel,
                       LocalBackend, RealClock, StatResult, StorageBackend,
@@ -87,6 +95,7 @@ from .fusion import FusionPolicy
 from .namespace import (NamespaceOverlay, OverlayPolicy, RemoveWitness,
                         SpeculationTicket)
 from .prefetch import MetadataPrefetcher, PrefetchPolicy
+from .readahead import ReadAheadManager, ReadPolicy, StatVecBatcher
 from .simclock import SimClock
 from .transaction import Transaction, run_transaction
 
@@ -99,8 +108,9 @@ __all__ = [
     "MetadataPrefetcher", "N_FLAGS",
     "NamespaceOverlay", "OpCancelledError", "OverlayPolicy",
     "PrefetchPolicy", "QuotaBackend",
-    "RealClock", "RemoveWitness", "RollbackLeakError", "SimClock",
-    "ShortWriteError", "SpeculationTicket", "StatResult",
+    "ReadAheadManager", "ReadPolicy", "RealClock", "RemoveWitness",
+    "RollbackLeakError", "SimClock",
+    "ShortWriteError", "SpeculationTicket", "StatResult", "StatVecBatcher",
     "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
     "is_under", "make_fault", "norm_path", "parent_of", "run_transaction",
 ]

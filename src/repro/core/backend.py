@@ -173,6 +173,41 @@ class StorageBackend:
                 pass
         return out
 
+    def stat_vec(self, paths: list[str]) -> dict[str, StatResult]:
+        """Vectored stat: attributes for several paths in one backend
+        call — the existence-batching primitive behind ``makedirs``
+        parent probes and the write path's journaling stats
+        (``core/readahead.py``).  Returns ``{path: StatResult}`` keyed by
+        the normalized path.  Per-path failures are advisory (a path
+        whose stat raises is simply omitted), mirroring
+        ``readdir_plus_vec``: the whole batch is a speculative probe and
+        must never fail a caller — a missing entry means "ask
+        synchronously".  The default is a loop over ``stat`` so every
+        backend (and every test double overriding ``stat``) composes;
+        decorator backends override it to pay their cost once per
+        *fused* batch."""
+        out: dict[str, StatResult] = {}
+        for p in paths:
+            p = norm_path(p)
+            try:
+                out[p] = self.stat(p)
+            except OSError:
+                pass
+        return out
+
+    def read_vec(self, path: str, spans: list[tuple[int, int]]) -> list[bytes]:
+        """Vectored read: fetch (offset, size) extents of one file in a
+        single backend call — the read-ahead layer's primitive (the
+        read-side mirror of ``write_vec``, after WTF's file-slice
+        composition).  Returns one ``bytes`` per span, in order; a span
+        past EOF comes back short or empty exactly as ``read_at`` would
+        return it.  Unlike the speculative ``*_vec`` probes this CAN
+        raise (a missing file is a real error the caller must see).  The
+        default is a loop over ``read_at`` so every backend composes;
+        decorator backends override it to pay their cost once per fused
+        batch."""
+        return [self.read_at(path, off, size) for off, size in spans]
+
 
 # ---------------------------------------------------------------------------
 
@@ -241,9 +276,41 @@ class LocalBackend(StorageBackend):
                         break
                     chunks.append(c)
                 return b"".join(chunks)
-            return os.read(fd, size)
+            # a single os.read may return short of ``size`` (pipe-buffer
+            # sized chunks on some filesystems) — accumulate until EOF or
+            # the request is satisfied, like the size < 0 branch
+            chunks = []
+            remaining = size
+            while remaining > 0:
+                c = os.read(fd, min(remaining, 1 << 20))
+                if not c:
+                    break
+                chunks.append(c)
+                remaining -= len(c)
+            return b"".join(chunks)
         finally:
             os.close(fd)
+
+    def read_vec(self, path, spans):
+        # one open per fused batch instead of one per read — the local
+        # analogue of the single-roundtrip win on remote backends
+        fd = os.open(self._abs(path), os.O_RDONLY)
+        out = []
+        try:
+            for off, size in spans:
+                chunks = []
+                remaining = size
+                while remaining > 0:
+                    c = os.pread(fd, min(remaining, 1 << 20), off)
+                    if not c:
+                        break
+                    chunks.append(c)
+                    off += len(c)
+                    remaining -= len(c)
+                out.append(b"".join(chunks))
+        finally:
+            os.close(fd)
+        return out
 
     def truncate(self, path, size):
         with open(self._abs(path), "r+b") as f:
@@ -847,6 +914,20 @@ class LatencyBackend(StorageBackend):
         # backend's live RTT/bandwidth EWMAs via bdp_bytes().)
         self._delay("readdir")
         return self.inner.readdir_plus_vec(paths)
+    def stat_vec(self, paths):
+        # ONE roundtrip for the whole batch of stats — the existence
+        # batcher's win: a manifest-driven extract pays files/batch RTTs
+        # for its journaling probes, not files (cf. readdir_plus_vec)
+        self._delay("stat")
+        return self.inner.stat_vec(paths)
+    def read_vec(self, p, spans):
+        # one roundtrip for the whole fused extent vector: per-op latency
+        # once, bandwidth for the payload actually returned — the
+        # read-side mirror of write_vec (ordering matches read_at: the
+        # inner read resolves the true sizes, then the delay is paid)
+        out = self.inner.read_vec(p, spans)
+        self._delay("read", sum(len(b) for b in out))
+        return out
     def remove_tree(self, p):
         # one roundtrip for the whole fused subtree removal — this is the
         # cross-path bulk-remove win (cf. write_vec for coalesced writes)

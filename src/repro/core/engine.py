@@ -49,6 +49,19 @@ Architecture (one op's life, left to right)::
         |  sealing; SpeculationTickets cancel on racing mutations; |
         |  consumers latch onto in-flight batches (demand          |
         |  promotion) instead of duplicating the fetch             |
+        +------+---------------------------------------------------+
+               |
+        +------v---------------------------------------------------+
+        |  Read-side data plane (core/readahead.py)                |
+        |  ReadAheadManager: a sequential pread registers a        |
+        |  ticketed per-file page buffer and pipelines speculative |
+        |  read_vec windows (~2x BDP) ahead of the consumer —      |
+        |  page hits skip the backend, an outrun consumer latches  |
+        |  onto the in-flight window, racing admitted mutations    |
+        |  cancel the run.  StatVecBatcher: transactional          |
+        |  create/write existence probes fuse into ONE speculative |
+        |  stat_vec per batch, consumed single-shot at execution   |
+        |  time with a sync-stat fallback                          |
         +----------------------------------------------------------+
 
 Semantics (paper §2–§3):
@@ -81,9 +94,14 @@ Semantics (paper §2–§3):
   ``bulk_reverify_promoted``/``bulk_reverify_demoted`` (fused removals
   confirmed / fallen back at execution time), ``steals``/``parks``
   (dispatch-layer load balancing), ``adaptive_max_bytes`` (the latest
-  BDP-derived coalescing clamp) and
+  BDP-derived coalescing clamp),
   ``prefetch_{issued,batches,hits,wasted,cancelled}`` (the speculative
-  metadata-prefetch pipeline's accounting).
+  metadata-prefetch pipeline's accounting),
+  ``readahead_{windows,hits,latched,bytes,wasted,cancelled}`` and
+  ``stat_{batches,probes,probe_hits,probe_fallbacks}`` (the vectored
+  read-side data plane, ``core/readahead.py``, controlled by
+  ``ReadPolicy`` via the ``readahead=`` argument — same
+  policy/True/None/False convention).
 * Failures of background ops land in the ErrorLedger; optional
   abort_on_error poisons the engine.  ``max_inflight`` bounds queued ops
   (fused absorptions don't consume new slots — coalescing is also
@@ -103,6 +121,8 @@ from .flags import EagerFlags
 from .fusion import Fuser, FusionPolicy, MetaPayload, WritePayload
 from .namespace import NamespaceOverlay, OverlayPolicy
 from .prefetch import MetadataPrefetcher, PrefetchPolicy
+from .readahead import (INVALIDATING_KINDS, ReadAheadManager, ReadPolicy,
+                        StatVecBatcher)
 from .scheduler import NEEDS_CHILDREN, STRUCTURAL, OpScheduler, _Op
 from .simclock import SimClock
 
@@ -143,6 +163,17 @@ class EngineStats:
     prefetch_wasted: int = 0     # fetched but uninstallable (failed batch,
     #                              stale vs a sync miss, evicted at insert)
     prefetch_cancelled: int = 0  # invalidated by racing mutations/teardown
+    # -- vectored read-side data plane (core/readahead.py) -----------------
+    readahead_windows: int = 0   # speculative read_vec windows submitted
+    readahead_hits: int = 0      # preads served from installed pages
+    readahead_latched: int = 0   # consumers that waited on an in-flight window
+    readahead_bytes: int = 0     # bytes landed into page buffers
+    readahead_wasted: int = 0    # windows fetched but uninstallable
+    readahead_cancelled: int = 0  # page runs dropped by racing mutations
+    stat_batches: int = 0        # speculative stat_vec batches submitted
+    stat_probes: int = 0         # write-path existence probes enqueued
+    stat_probe_hits: int = 0     # probes consumed with a landed answer
+    stat_probe_fallbacks: int = 0  # probes that fell back to a sync stat
     # -- adaptive fusion sizing --------------------------------------------
     adaptive_max_bytes: int = 0  # latest BDP-derived write-coalescing clamp
     # -- fault / trace counters (chaos + error-path observability) --------
@@ -236,6 +267,7 @@ class EagerIOEngine:
                  fusion: FusionPolicy | bool | None = None,
                  overlay: OverlayPolicy | bool | None = None,
                  prefetch: PrefetchPolicy | bool | None = None,
+                 readahead: "ReadPolicy | bool | None" = None,
                  work_stealing: bool = True,
                  clock=None):
         self.backend = backend
@@ -301,6 +333,29 @@ class EagerIOEngine:
         self.prefetcher: MetadataPrefetcher | None = (
             MetadataPrefetcher(self, pf_policy)
             if pf_policy.enabled and self.overlay is not None else None)
+        # the vectored read-side data plane (core/readahead.py): BDP-sized
+        # speculative read-ahead for sequential consumers plus stat_vec
+        # batching for the write path's journaling existence probes
+        if readahead is None or readahead is True:
+            ra_policy = ReadPolicy()
+        elif readahead is False:
+            ra_policy = ReadPolicy.off()
+        else:
+            ra_policy = readahead
+        self.read_policy = ra_policy
+        # admissions-in-flight guard: on_admit (the cancellation hook) runs
+        # BEFORE the scheduler publishes the op to the per-path maps, so a
+        # speculation registering in that window would see a quiescent path
+        # whose cancellation hook has already fired.  Registration declines
+        # while any invalidating admission is mid-flight (see
+        # _admitting_invalidators / readahead.py's registration checks).
+        self._adm_lock = threading.Lock()
+        self._admitting = 0
+        self.readahead: ReadAheadManager | None = (
+            ReadAheadManager(self, ra_policy) if ra_policy.enabled else None)
+        self.stat_batcher: StatVecBatcher | None = (
+            StatVecBatcher(self, ra_policy)
+            if ra_policy.enabled and ra_policy.stat_batching else None)
         self._closed = False
         self._executor = executor
         self._sim_driver_ident = 0
@@ -334,15 +389,34 @@ class EagerIOEngine:
         # after the budget admits the op but before the DAG publishes it,
         # so a fast-failing op's error-path invalidation (at completion,
         # strictly later) always wins over the ACK-time mocked entry
-        if cache_kw is None:
+        ra, sb = self.readahead, self.stat_batcher
+        if cache_kw is None and ra is None and sb is None:
             on_admit = None
         else:
             def on_admit():
-                self.stat_cache.on_op(kind, paths, **cache_kw)
-                if self.overlay is not None:
-                    self.overlay.on_op(kind, paths, **cache_kw)
-        op = self._sched.submit(kind, paths, fn, eager=eager, region=region,
-                                payload=payload, on_admit=on_admit)
+                if cache_kw is not None:
+                    self.stat_cache.on_op(kind, paths, **cache_kw)
+                    if self.overlay is not None:
+                        self.overlay.on_op(kind, paths, **cache_kw)
+                # the data plane's speculation is admission-cancelled too:
+                # pages/probes must die before the mutating op can execute
+                if ra is not None:
+                    ra.on_op(kind, paths)
+                if sb is not None:
+                    sb.on_op(kind, paths)
+        guard = ((ra is not None or sb is not None)
+                 and kind in INVALIDATING_KINDS)
+        if guard:
+            with self._adm_lock:
+                self._admitting += 1
+        try:
+            op = self._sched.submit(kind, paths, fn, eager=eager,
+                                    region=region, payload=payload,
+                                    on_admit=on_admit)
+        finally:
+            if guard:
+                with self._adm_lock:
+                    self._admitting -= 1
         if eager:
             self.stats.eager_acks += 1
             self.stats.ack_latency_s += time.monotonic() - t0
@@ -591,6 +665,10 @@ class EagerIOEngine:
                 if self.overlay is not None:
                     self.overlay.invalidate(p)
                 self.stat_cache.invalidate(p)
+                if self.readahead is not None:
+                    self.readahead.invalidate(p)
+                if self.stat_batcher is not None:
+                    self.stat_batcher.invalidate(p)
         if self.overlay is not None:
             # a fused removal's re-verification witness is spent once the
             # op is done (ran, fell back, was elided into a parent, failed
@@ -618,5 +696,5 @@ class EagerIOEngine:
 
 
 __all__ = ["EagerIOEngine", "EngineStats", "FusionPolicy", "MetaPayload",
-           "NamespaceOverlay", "OverlayPolicy", "WritePayload",
+           "NamespaceOverlay", "OverlayPolicy", "ReadPolicy", "WritePayload",
            "NEEDS_CHILDREN", "STRUCTURAL"]

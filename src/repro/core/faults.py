@@ -327,6 +327,21 @@ class FaultInjectingBackend(StorageBackend):
         self._gate("readdir", paths[0] if paths else "")
         return self.inner.readdir_plus_vec(paths)
 
+    def stat_vec(self, paths):
+        # one fused batch of N existence probes is ONE matching "stat"
+        # call, gated on the batch's first path (cf. readdir_plus_vec).
+        # The existence batcher treats a fired fault as advisory: the
+        # batch is dropped and each consumer falls back to its sync stat.
+        self._gate("stat", paths[0] if paths else "")
+        return self.inner.stat_vec(paths)
+
+    def read_vec(self, p, spans):
+        # one fused extent vector is ONE matching "read" call (cf.
+        # write_vec): the read-ahead layer drops a faulted window and the
+        # consumer's sync read re-gates it as its own matching call.
+        self._gate("read", p)
+        return self.inner.read_vec(p, spans)
+
     def remove_tree(self, p):
         # per-fused-op semantics, mirroring write_vec: N collapsed
         # unlinks/rmdirs are ONE matching "remove_tree" call
@@ -541,6 +556,14 @@ class QuotaBackend(StorageBackend):
 
     def readdir_plus_vec(self, paths):
         return self.inner.readdir_plus_vec(paths)
+
+    def stat_vec(self, paths):
+        # must delegate whole: the base loop would re-enter this
+        # decorator per path instead of the inner fused call
+        return self.inner.stat_vec(paths)
+
+    def read_vec(self, p, spans):
+        return self.inner.read_vec(p, spans)
 
     def remove_tree(self, path):
         """Bulk removal releases every byte and inode charge under the

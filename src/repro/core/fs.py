@@ -20,6 +20,7 @@ from .flags import EagerFlags
 from .fusion import FusionPolicy, MetaPayload, WritePayload
 from .namespace import OverlayPolicy
 from .prefetch import PrefetchPolicy
+from .readahead import ReadPolicy
 
 
 class CannyFile:
@@ -103,6 +104,7 @@ class CannyFS:
                  fusion: FusionPolicy | bool | None = None,
                  overlay: OverlayPolicy | bool | None = None,
                  prefetch: PrefetchPolicy | bool | None = None,
+                 readahead: ReadPolicy | bool | None = None,
                  work_stealing: bool = True,
                  clock=None):
         self.flags = flags or EagerFlags()
@@ -110,7 +112,7 @@ class CannyFS:
             backend, flags=self.flags, max_inflight=max_inflight,
             workers=workers, executor=executor, abort_on_error=abort_on_error,
             ledger=ErrorLedger(echo=echo_errors), fusion=fusion,
-            overlay=overlay, prefetch=prefetch,
+            overlay=overlay, prefetch=prefetch, readahead=readahead,
             work_stealing=work_stealing, clock=clock)
         self.backend = backend
         self._txn_lock = threading.Lock()
@@ -204,6 +206,34 @@ class CannyFS:
         parts = norm_path(path).split("/")
         cur = ""
         txn = self._active_txn()
+        # vectored parent probe: in sync-mkdir mode every uncached
+        # component below pays one backend stat roundtrip (the
+        # ``self.exists`` check) — warm the stat cache with ONE
+        # ``stat_vec`` over the whole chain instead, so a deep
+        # manifest-driven extract probes each parent chain in a single
+        # roundtrip.  Advisory: a failed batch falls back per-component.
+        if not self.flags.mkdir and self.engine.readahead is not None:
+            cache = self.engine.stat_cache
+            probe, anc = [], ""
+            for part in parts:
+                anc = f"{anc}/{part}" if anc else part
+                if cache.get(anc) is None:
+                    probe.append(anc)
+            if len(probe) > 1:
+                b = self.backend
+
+                def pfn(probe=tuple(probe)):
+                    try:
+                        res = b.stat_vec(list(probe))
+                    except OSError:
+                        return None
+                    for q in probe:
+                        st = res.get(q)
+                        if st is not None and cache.get(q) is None:
+                            cache.put(q, st)
+                    return None
+
+                self.engine.submit("stat", tuple(probe), pfn, eager=False)
         for part in parts:
             cur = f"{cur}/{part}" if cur else part
             st = self.engine.stat_cache.get(cur)
@@ -255,14 +285,25 @@ class CannyFS:
 
     def create(self, path: str) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
+        # the journaling existence probe below batches: enqueued before
+        # this op's own admission (which consumes the probe's exemption),
+        # it fuses with neighbouring probes into ONE speculative stat_vec
+        sb = self.engine.stat_batcher
+        if txn is not None and sb is not None:
+            sb.enqueue(p, "create")
 
         def fn():
             # create succeeds on an existing file (O_TRUNC) — journal only
             # true creations, or rollback would unlink a pre-transaction
             # file outright.  (Truncated content is not restored: the
             # journal records namespace, not data.)  The extra stat is paid
-            # only inside transactions, by the background worker.
-            existed = txn is not None and b.stat(p).exists
+            # only inside transactions, by the background worker — or not
+            # at all when the batched probe landed.
+            if txn is not None:
+                hit = sb.lookup(p) if sb is not None else None
+                existed = hit.exists if hit is not None else b.stat(p).exists
+            else:
+                existed = False
             b.create(p)
             if txn is not None and not existed:
                 txn._record_create(p, False)
@@ -327,6 +368,14 @@ class CannyFS:
                 p, offset, data, region=txn, cache_kw=cache_kw):
             return
         payload = WritePayload(offset, data)
+        # batch the journaling probe (same conditions fn re-checks at
+        # execution — they cannot flip in between, because enqueue
+        # requires a quiescent path and later same-path admissions are
+        # FIFO-ordered after this op)
+        sb = self.engine.stat_batcher
+        if (sb is not None and txn is not None and not txn._has_created(p)
+                and not txn._is_preexisting(p)):
+            sb.enqueue(p, "write")
 
         def fn():
             # write_vec creates a missing file implicitly; if its create op
@@ -336,7 +385,11 @@ class CannyFS:
             # proven to pre-exist — streamed appends pay one probe total).
             probe = (txn is not None and not txn._has_created(p)
                      and not txn._is_preexisting(p))
-            existed = b.stat(p).exists if probe else True
+            if probe:
+                hit = sb.lookup(p) if sb is not None else None
+                existed = hit.exists if hit is not None else b.stat(p).exists
+            else:
+                existed = True
             expected = payload.nbytes   # frozen once the op is claimed
             out = b.write_vec(p, payload.segments())
             if probe:
@@ -359,11 +412,27 @@ class CannyFS:
             f.write(data)
 
     def pread(self, path: str, offset: int, size: int) -> bytes:
-        """Data reads are never eager (paper §2)."""
+        """Data reads are never eager (paper §2) — but with the read-ahead
+        layer on, a *sequential* reader's bytes are usually already here:
+        the first sync read registers a ticketed page buffer and pipelines
+        speculative ``read_vec`` windows ahead of the consumer, so later
+        preads are served without a backend roundtrip.  A page hit is
+        byte-identical to the sync path (pages register only on quiescent
+        paths and die on any racing admitted mutation); any miss falls
+        through to the sync read below and re-feeds the observer."""
         b = self.backend
-        return self.engine.submit("read", (path,),
-                                  lambda: b.read_at(path, offset, size),
-                                  eager=False)
+        p = norm_path(path)
+        ra = self.engine.readahead
+        if ra is not None and size >= 0:
+            out = ra.read(p, offset, size)
+            if out is not None:
+                return out
+        out = self.engine.submit("read", (p,),
+                                 lambda: b.read_at(p, offset, size),
+                                 eager=False)
+        if ra is not None:
+            ra.observe_sync(p, offset, len(out), size)
+        return out
 
     def read_file(self, path: str) -> bytes:
         return self.pread(path, 0, -1)

@@ -133,6 +133,12 @@ class Transaction:
         ov = self.fs.engine.overlay
         if ov is not None:
             ov.clear()
+        # existence probes are window-scoped ("did the path pre-exist
+        # *this* region") — retire any the drain left unconsumed.  The
+        # read-ahead pages stay: commit mutated nothing behind the engine
+        sb = self.fs.engine.stat_batcher
+        if sb is not None:
+            sb.clear()
         self.committed = True
 
     def rollback(self) -> None:
@@ -190,10 +196,17 @@ class Transaction:
                 leftovers.append(p)
         self.rollback_leftovers = leftovers
         # rollback mutated the backend behind the engine's back (direct
-        # unlinks/rmdirs): every overlay claim is now suspect — clear it
+        # unlinks/rmdirs): every overlay claim is now suspect — clear it,
+        # and every read-ahead page / batched existence probe with it
         ov = self.fs.engine.overlay
         if ov is not None:
             ov.clear()
+        ra = self.fs.engine.readahead
+        if ra is not None:
+            ra.clear()
+        sb = self.fs.engine.stat_batcher
+        if sb is not None:
+            sb.clear()
         # scoped clear: only this region's errors are handled — entries
         # from earlier work or a concurrently-opened region must survive
         self.fs.ledger.clear_region(self)

@@ -86,15 +86,31 @@ def write_shards(fs: CannyFS, directory: str, it: Iterator[dict],
     return paths
 
 
-def read_shards(fs: CannyFS, directory: str) -> Iterator[dict]:
+def read_shards(fs: CannyFS, directory: str,
+                chunk: int = 256 << 10) -> Iterator[dict]:
     """readdir-prefetched shard sweep (the paper's traversal acceleration
-    applies: one readdir prefetches every shard's stat)."""
+    applies: one readdir prefetches every shard's stat).
+
+    Each shard streams back in ``chunk``-byte sequential slices rather
+    than one whole-file read: the stat (warmed by the listing) bounds the
+    stream so the reader never runs past EOF, and the engine's read-ahead
+    plane pipelines speculative ``read_vec`` windows ahead of the
+    consumer — later chunks are served from pages already in flight."""
     import io
     for name in fs.readdir(directory):
         if not name.endswith(".npz"):
             continue
-        raw = fs.read_file(f"{directory}/{name}")
-        with np.load(io.BytesIO(raw)) as z:
+        p = f"{directory}/{name}"
+        remaining = fs.stat(p).size
+        pieces = []
+        with fs.open(p, "rb") as f:
+            while remaining > 0:
+                piece = f.read(min(chunk, remaining))
+                if not piece:
+                    break
+                pieces.append(piece)
+                remaining -= len(piece)
+        with np.load(io.BytesIO(b"".join(pieces))) as z:
             yield {k: z[k] for k in z.files}
 
 

@@ -1,0 +1,307 @@
+"""PR 7 unit tests: the vectored data-plane primitives and their two
+speculative consumers.
+
+* ``stat_vec`` / ``read_vec`` through the backend decorator stack —
+  base loop fallback, Local single-open, Latency ONE-roundtrip-per-
+  batch, Quota whole-delegation, FaultInjecting one advisory rule
+  match per *fused* batch;
+* the ``LocalBackend.read_at`` sized-read accumulation (a single
+  ``os.read`` may return short of the request);
+* ``ReadAheadManager`` — pipelining, byte identity under racing
+  mutations, random-access and EOF teardown, the LRU file bound;
+* ``StatVecBatcher`` — batching + journaling correctness across
+  rollback, single-shot consumption, the exemption rule;
+* ``makedirs`` vectored parent probes.
+"""
+import pytest
+
+from repro.core import (CannyFS, EagerFlags, FaultInjectingBackend, FaultPlan,
+                        FaultRule, InMemoryBackend, LatencyBackend,
+                        LatencyModel, LocalBackend, QuotaBackend, ReadPolicy,
+                        Transaction, VirtualClock)
+
+PAYLOAD = bytes(range(256)) * 64          # 16 KiB, byte-position-coded
+
+
+def _mem(files=(), dirs=("d",)):
+    be = InMemoryBackend()
+    for d in dirs:
+        be.mkdir(d)
+    for p, data in files:
+        be.create(p)
+        be.write_at(p, 0, data)
+    return be
+
+
+def _lat(inner, **kw):
+    kw.setdefault("meta_ms", 1.0)
+    kw.setdefault("data_ms", 1.0)
+    kw.setdefault("jitter_sigma", 0.0)
+    kw.setdefault("seed", 3)
+    return LatencyBackend(inner, LatencyModel(**kw), clock=VirtualClock())
+
+
+# ---------------------------------------------------------------------------
+# backend primitives
+# ---------------------------------------------------------------------------
+
+
+def test_stat_vec_base_loop_normalizes_and_reports_existence():
+    be = _mem(files=[("d/f", b"xyz")])
+    res = be.stat_vec(["d", "d//f", "missing", "d/f/"])
+    assert res["d"].exists and res["d"].is_dir
+    assert res["d/f"].exists and res["d/f"].size == 3
+    assert not res["missing"].exists
+
+
+def test_read_vec_matches_read_at_per_span(tmp_path):
+    for be in (_mem(), LocalBackend(str(tmp_path))):
+        if isinstance(be, LocalBackend):
+            be.mkdir("d")
+        be.create("d/f")
+        be.write_at("d/f", 0, PAYLOAD)
+        spans = [(0, 100), (100, 200), (len(PAYLOAD) - 50, 500), (1 << 20, 4)]
+        got = be.read_vec("d/f", spans)
+        assert got == [be.read_at("d/f", o, s) for o, s in spans]
+        assert got[0] == PAYLOAD[:100]
+        assert got[2] == PAYLOAD[-50:]     # short at EOF, like read_at
+        assert got[3] == b""               # span past EOF
+
+
+def test_local_read_at_sized_request_accumulates_to_eof(tmp_path):
+    be = LocalBackend(str(tmp_path))
+    be.create("f")
+    be.write_at("f", 0, PAYLOAD)
+    assert be.read_at("f", 0, len(PAYLOAD)) == PAYLOAD
+    assert be.read_at("f", 0, len(PAYLOAD) + 999) == PAYLOAD
+    assert be.read_at("f", 100, 64) == PAYLOAD[100:164]
+    assert be.read_at("f", len(PAYLOAD) + 1, 8) == b""
+
+
+def test_latency_backend_vec_ops_cost_one_roundtrip_each():
+    remote = _lat(_mem(files=[("d/f", PAYLOAD)]))
+    base = remote.op_count
+    remote.stat_vec([f"d/p{i}" for i in range(8)] + ["d/f"])
+    assert remote.op_count == base + 1
+    remote.read_vec("d/f", [(0, 64), (64, 64), (4096, 64)])
+    assert remote.op_count == base + 2
+
+
+def test_quota_backend_delegates_vec_ops_whole():
+    remote = _lat(_mem(files=[("d/f", PAYLOAD)]))
+    quota = QuotaBackend(remote, budget_bytes=1 << 20)
+    base = remote.op_count
+    res = quota.stat_vec(["d", "d/f", "nope"])
+    assert remote.op_count == base + 1     # not one inner call per path
+    assert res["d/f"].exists and not res["nope"].exists
+    assert quota.read_vec("d/f", [(0, 10)]) == [PAYLOAD[:10]]
+    assert remote.op_count == base + 2
+
+
+def test_fault_rules_match_once_per_fused_stat_vec_batch():
+    plan = FaultPlan([FaultRule(error="EIO", ops=("stat",),
+                                probability=1.0, max_failures=1)], seed=0)
+    chaos = FaultInjectingBackend(_mem(files=[("d/f", b"x")]), plan)
+    with pytest.raises(OSError):
+        chaos.stat_vec([f"d/p{i}" for i in range(5)])
+    # ONE fused batch of 5 probes consumed exactly ONE rule match
+    assert plan.injected == 1
+    res = chaos.stat_vec(["d/f", "d/g"])
+    assert plan.injected == 1
+    assert res["d/f"].exists and not res["d/g"].exists
+
+
+def test_fault_rules_match_once_per_fused_read_vec():
+    plan = FaultPlan([FaultRule(error="EIO", ops=("read",),
+                                probability=1.0, max_failures=1)], seed=0)
+    chaos = FaultInjectingBackend(_mem(files=[("d/f", PAYLOAD)]), plan)
+    with pytest.raises(OSError):
+        chaos.read_vec("d/f", [(0, 64), (64, 64), (128, 64)])
+    assert plan.injected == 1
+    assert chaos.read_vec("d/f", [(0, 64)]) == [PAYLOAD[:64]]
+
+
+# ---------------------------------------------------------------------------
+# ReadAheadManager
+# ---------------------------------------------------------------------------
+
+RA = ReadPolicy(adaptive=False, min_bytes=256, max_bytes=4096)
+
+
+def test_sequential_stream_pipelines_windows_and_stays_byte_identical():
+    fs = CannyFS(_lat(_mem(files=[("d/f", PAYLOAD)])), workers=4,
+                 readahead=RA, echo_errors=False)
+    assert fs.stat("d/f").size == len(PAYLOAD)   # warms the size
+    out = b"".join(fs.pread("d/f", off, 1024)
+                   for off in range(0, len(PAYLOAD), 1024))
+    fs.close()
+    assert out == PAYLOAD
+    assert fs.stats.readahead_windows > 0
+    assert fs.stats.readahead_hits > 0
+    assert len(fs.ledger) == 0
+
+
+def test_racing_write_cancels_pages_and_reader_sees_new_bytes():
+    fs = CannyFS(_lat(_mem(files=[("d/f", PAYLOAD)])), workers=4,
+                 readahead=RA, echo_errors=False)
+    fs.stat("d/f")                                      # warms the size
+    assert fs.pread("d/f", 0, 1024) == PAYLOAD[:1024]   # registers the run
+    fs.drain()                                          # windows landed
+    new = bytes(reversed(PAYLOAD))
+    fs.write_file("d/f", new)                           # admitted mutation
+    got = fs.pread("d/f", 1024, 1024)
+    fs.close()
+    assert got == new[1024:2048]
+    assert fs.stats.readahead_cancelled >= 1
+
+
+def test_random_access_drops_the_pipeline():
+    fs = CannyFS(_lat(_mem(files=[("d/f", PAYLOAD)])), workers=4,
+                 readahead=RA, echo_errors=False)
+    fs.stat("d/f")
+    assert fs.pread("d/f", 0, 512) == PAYLOAD[:512]
+    assert fs.pread("d/f", 9000, 512) == PAYLOAD[9000:9512]  # non-sequential
+    fs.close()
+    ra = fs.engine.readahead
+    assert "d/f" not in ra._files
+    assert fs.stats.readahead_cancelled >= 1
+
+
+def test_short_sync_read_learns_eof_and_stops_speculating():
+    fs = CannyFS(_lat(_mem(files=[("d/f", PAYLOAD[:100])])), workers=4,
+                 readahead=RA, echo_errors=False)
+    fs.stat("d/f")
+    assert fs.pread("d/f", 0, 64) == PAYLOAD[:64]
+    assert fs.pread("d/f", 64, 64) == PAYLOAD[64:100]   # short: EOF
+    assert fs.pread("d/f", 100, 64) == b""
+    fs.close()
+    assert "d/f" not in fs.engine.readahead._files
+    assert len(fs.ledger) == 0
+
+
+def test_max_files_lru_evicts_oldest_run():
+    files = [(f"d/f{i}", PAYLOAD) for i in range(3)]
+    fs = CannyFS(_lat(_mem(files=files)), workers=4,
+                 readahead=ReadPolicy(adaptive=False, min_bytes=256,
+                                      max_bytes=4096, max_files=1),
+                 echo_errors=False)
+    for p, _ in files:
+        fs.stat(p)
+        assert fs.pread(p, 0, 512) == PAYLOAD[:512]
+    ra = fs.engine.readahead
+    assert len(ra._files) == 1 and "d/f2" in ra._files
+    fs.close()
+    assert fs.stats.readahead_cancelled >= 2
+
+
+def test_whole_file_read_bypasses_the_plane():
+    fs = CannyFS(_lat(_mem(files=[("d/f", PAYLOAD)])), workers=4,
+                 readahead=RA, echo_errors=False)
+    assert fs.read_file("d/f") == PAYLOAD        # size=-1: sync path
+    assert fs.engine.readahead._files == {}
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# StatVecBatcher
+# ---------------------------------------------------------------------------
+
+
+def test_txn_journaling_probes_batch_and_rollback_stays_exact():
+    be = _mem(files=[("d/old", b"keep-me")])
+    fs = CannyFS(be, workers=4,
+                 readahead=ReadPolicy(adaptive=False, stat_batch=4),
+                 echo_errors=False)
+    txn = Transaction(fs)
+    with txn:
+        for i in range(6):
+            fs.write_file(f"d/n{i}", b"fresh-%d" % i)
+        fs.write_file("d/old", b"overwritten")
+    st = fs.stats
+    assert st.stat_probes >= 6
+    assert st.stat_batches >= 1
+    assert st.stat_probe_hits + st.stat_probe_fallbacks == st.stat_probes
+    assert be.read_at("d/old", 0, -1) == b"overwritten"
+    # second region: rollback must remove exactly what IT created —
+    # the probes decide journal membership (pre-existing vs fresh)
+    txn2 = Transaction(fs)
+    with txn2:
+        fs.write_file("d/n0", b"again")      # pre-existing now
+        fs.write_file("d/n9", b"doomed")     # fresh: journaled
+        fs.drain()
+        txn2.rollback()
+    assert be.stat("d/n0").exists            # survived (not re-journaled)
+    assert not be.stat("d/n9").exists        # rolled back
+    fs.close()
+
+
+def test_probe_lookup_is_single_shot():
+    fs = CannyFS(_mem(), workers=2, readahead=ReadPolicy(adaptive=False),
+                 echo_errors=False)
+    sb = fs.engine.stat_batcher
+    txn = Transaction(fs)
+    with txn:
+        fs.write_file("d/p", b"x")           # its fn consumed the probe
+        fs.drain()
+        assert sb.lookup("d/p") is None      # retired: nothing to consume
+    fs.close()
+
+
+def test_probe_exemption_consumed_once_then_foreign_kinds_cancel():
+    fs = CannyFS(_mem(), workers=2, readahead=ReadPolicy(adaptive=False),
+                 echo_errors=False)
+    sb = fs.engine.stat_batcher
+    # a foreign admission before the consumer's own kind cancels
+    sb.enqueue("d/a", "write")
+    sb.on_op("unlink", ("d/a",))
+    assert sb.lookup("d/a") is None
+    # the probed op's own (single) admission is exempt; later same-path
+    # admissions are FIFO-ordered after its execution, hence harmless
+    sb.enqueue("d/b", "write")
+    sb.on_op("write", ("d/b",))              # the consumer itself
+    sb.on_op("unlink", ("d/b",))             # post-exemption: ignored
+    sb.flush()
+    fs.drain()
+    assert sb.lookup("d/b") is not None
+    # tree-structural admissions cancel unconditionally, even post-exempt
+    sb.enqueue("d/c", "write")
+    sb.on_op("write", ("d/c",))
+    sb.on_op("remove_tree", ("d",))
+    assert sb.lookup("d/c") is None
+    fs.close()
+
+
+def test_batcher_inert_outside_transactions():
+    fs = CannyFS(_mem(), workers=2, readahead=ReadPolicy(adaptive=False),
+                 echo_errors=False)
+    fs.write_file("d/x", b"1")
+    fs.create("d/y")
+    fs.drain()
+    assert fs.stats.stat_probes == 0
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# makedirs vectored parent probe
+# ---------------------------------------------------------------------------
+
+
+def test_makedirs_probes_cold_ancestry_in_one_roundtrip():
+    # the probe's domain: a deep chain that mostly PRE-EXISTS on the
+    # backend, unseen by this mount (a fresh chain is already answered
+    # by the overlay's own claims) — sync mode pays one existence stat
+    # per cold component, the probe folds them into ONE stat_vec
+    counts = {}
+    for label, readahead in (("vectored", ReadPolicy(adaptive=False)),
+                             ("sync", False)):
+        inner = InMemoryBackend()
+        for d in ("a", "a/b", "a/b/c"):
+            inner.mkdir(d)
+        remote = _lat(inner)
+        fs = CannyFS(remote, flags=EagerFlags(mkdir=False),
+                     readahead=readahead, workers=2, echo_errors=False)
+        fs.makedirs("a/b/c/d")
+        fs.close()
+        assert inner.stat("a/b/c/d").is_dir
+        counts[label] = remote.op_count
+    assert counts["vectored"] < counts["sync"]
