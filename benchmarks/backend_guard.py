@@ -1,0 +1,337 @@
+"""CI regression guard for the backend zoo + cost-model-driven fusion
+(PR 8).  Emits ``BENCH_pr8.json`` and FAILS (exit 1) when the engine
+stops collapsing work the way each storage medium's cost model demands.
+
+Default mode is the **discrete-event simulation** (``SimClock``): both
+new backends charge deterministic per-request latencies on a virtual
+clock, so every counter below is a pure function of the workload
+manifest and the guard runs at ``REPRO_BENCH_SCALE=1.0`` in
+milliseconds of wall time with **zero slack**:
+
+1. **Whole-object coalescing (object store)** — the chunked extraction
+   must land exactly ONE whole-object PUT per manifest file and ZERO
+   read-modify-write GETs; the fusion=False ablation pays one PUT per
+   chunk plus one RMW GET for every chunk past a file's first (exact,
+   manifest-derived).  On an object store coalescing is mandatory, not
+   an optimization — a regression here multiplies both requests and
+   egress bytes.
+
+2. **Extract→rmtree collapse (object store)** — the same-breath
+   workload must collapse to ``n_dirs`` marker PUTs plus ONE paginated
+   LIST (``ceil(n_dirs / page)`` requests) plus ONE bulk DELETE —
+   **never a DELETE per key**.  The direct ablation (all flags off)
+   pays at least one request per manifest key and at least one DELETE
+   per key, so the report's ``collapse_ratio`` is the paper's headline
+   in request units.
+
+3. **Remote cold walk (SFTP profile)** — the prefetch pipeline must
+   meet walk_guard's manifest-derived roundtrip bound unchanged on
+   ``RemoteStreamBackend``: ``ceil(dirs / batch) + depth + 1``
+   round-trips, one per vectored frontier batch plus (worst case) one
+   sync miss per spine level.  The cost hints size the batches; the
+   vectored ops keep a batch ONE round-trip wide.
+
+``--paced`` switches to the paced-real smoke (``PacedVirtualClock``):
+real threads race, so chunk coalescing may split per file and a few
+file ops may reach the wire before the removal fuses — the bounds relax
+to "strictly beats the ablation" while the *semantic* invariants
+(byte-identical extracted content, empty tree after removal, empty
+ledger) stay exact.  Keep it as a non-blocking cross-check.
+
+    PYTHONPATH=src REPRO_BENCH_SCALE=1.0 python -m benchmarks.backend_guard
+    PYTHONPATH=src REPRO_BENCH_SCALE=0.1 python -m benchmarks.backend_guard --paced
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+from repro.core import CannyFS, EagerFlags, PrefetchPolicy, SimClock
+
+from .workloads import (ColdTreeSpec, PacedVirtualClock, TreeSpec, cold_walk,
+                        extract_then_rm, extract_tree_chunked,
+                        make_object_store, make_remote_stream,
+                        populate_cold_tree, synth_tree)
+
+WORKERS = 8
+CHUNK = 8192    # unzip's streaming write size
+PAGE = 8        # small LIST page so pagination is actually exercised
+BATCH = 16      # fixed prefetch width: the walk bound stays exact
+PACE = 0.1
+# paced mode only: the walker's sync misses can race in-flight batches
+WALK_SLACK = {"sim": 0, "paced": 6}
+
+
+def _store_counters(store) -> dict:
+    return {
+        "op_count": store.op_count,
+        "request_count": store.request_count,
+        "requests_by_class": dict(store.requests_by_class),
+        "whole_object_puts": store.whole_object_puts,
+        "rmw_gets": store.rmw_gets,
+        "busy_s": store.busy_s,
+    }
+
+
+def _clock_for(mode: str):
+    return SimClock() if mode == "sim" else PacedVirtualClock(pace=PACE)
+
+
+def run_extract(dirs, files, *, fusion: bool, mode: str) -> dict:
+    """Chunked extraction onto the object store; returns billing counters
+    plus a byte-for-byte content check against the manifest."""
+    store = make_object_store(clock=_clock_for(mode), list_page_size=PAGE)
+    fs = CannyFS(store, max_inflight=4000, workers=WORKERS,
+                 echo_errors=False, **({} if fusion else {"fusion": False}))
+    extract_tree_chunked(fs, dirs, files, chunk=CHUNK)
+    fs.close()
+    snap = store.snapshot()
+    content_ok = all(snap["files"].get(p) == data for p, data in files)
+    return dict(_store_counters(store),
+                fused_writes=fs.stats.fused_writes,
+                content_ok=content_ok, ledger=len(fs.ledger))
+
+
+def run_extract_rm(dirs, files, *, direct: bool, mode: str) -> dict:
+    """Extraction + readdir-driven rmtree in one breath on the object
+    store — fused, or the direct (all-flags-off) ablation."""
+    store = make_object_store(clock=_clock_for(mode), list_page_size=PAGE)
+    if direct:
+        fs = CannyFS(store, flags=EagerFlags.all_off(), workers=2,
+                     fusion=False, echo_errors=False)
+    else:
+        fs = CannyFS(store, max_inflight=4000, workers=WORKERS,
+                     echo_errors=False)
+    extract_then_rm(fs, dirs, files, chunk=CHUNK)
+    fs.close()
+    snap = store.snapshot()
+    present = set(snap["files"]) | set(snap["dirs"])
+    leftover = [p for p in (*dirs, *(p for p, _ in files)) if p in present]
+    return dict(_store_counters(store),
+                bulk_removes=fs.stats.bulk_removes,
+                elided_ops=fs.stats.elided_ops,
+                leftover=len(leftover), ledger=len(fs.ledger))
+
+
+def run_remote_walk(spec: ColdTreeSpec, *, mode: str) -> dict:
+    """walk_guard's cold-walk workload, re-run on the SFTP-shaped
+    backend: same prefetch policy, same manifest-derived bound."""
+    remote = make_remote_stream(clock=_clock_for(mode))
+    dirs = populate_cold_tree(remote.inner, spec)   # bypass billing
+    fs = CannyFS(remote, workers=WORKERS, echo_errors=False,
+                 prefetch=PrefetchPolicy(adaptive_batch=False,
+                                         max_batch=BATCH))
+    visited = cold_walk(fs, spec.root)
+    walk_ops = remote.op_count          # before close() lands stragglers
+    fs.close()
+    st = fs.stats
+    return {
+        "visited_dirs": visited,
+        "manifest_dirs": len(dirs),
+        "backend_ops_walk": walk_ops,
+        "backend_ops_total": remote.op_count,
+        "busy_s": remote.busy_s,
+        "prefetch_batches": st.prefetch_batches,
+        "prefetch_hits": st.prefetch_hits,
+        "ledger": len(fs.ledger),
+    }
+
+
+def build_report(mode: str = "sim") -> dict:
+    """Run all four workloads and return the payload (no I/O).  The
+    determinism regression test calls this twice and asserts the sim
+    payloads serialize byte-identically."""
+    spec = TreeSpec(n_files=240, n_dirs=24).scaled()
+    dirs, files = synth_tree(spec)
+    n_dirs, n_files = len(dirs), len(files)
+    total_chunks = sum(math.ceil(len(data) / CHUNK) for _, data in files)
+    fused = run_extract(dirs, files, fusion=True, mode=mode)
+    nofusion = run_extract(dirs, files, fusion=False, mode=mode)
+    rm_fused = run_extract_rm(dirs, files, direct=False, mode=mode)
+    rm_direct = run_extract_rm(dirs, files, direct=True, mode=mode)
+    # the same-breath collapse, in wire requests: the mkdirs' marker PUTs
+    # (ordered under the fused removal by exec-time re-verification) plus
+    # the remove_tree's paginated LIST plus ONE bulk DELETE
+    list_pages = math.ceil(n_dirs / PAGE)
+    max_rm_requests = (n_dirs + list_pages + 1 if mode == "sim"
+                       else rm_direct["request_count"] - 1)
+    collapse = (rm_direct["request_count"] / rm_fused["request_count"]
+                if rm_fused["request_count"] else 0.0)
+
+    walk_spec = ColdTreeSpec().scaled()
+    walk = run_remote_walk(walk_spec, mode=mode)
+    max_walk_ops = (math.ceil(walk_spec.n_dirs() / BATCH) + walk_spec.depth
+                    + 1 + WALK_SLACK[mode])
+    return {
+        "mode": mode,
+        "object_store": {
+            "spec": {"n_files": n_files, "n_dirs": n_dirs, "chunk": CHUNK,
+                     "page": PAGE, "total_chunks": total_chunks,
+                     "keys": n_dirs + n_files, "list_pages": list_pages},
+            "extract_fused": fused,
+            "extract_nofusion": nofusion,
+            "extract_rm_fused": rm_fused,
+            "extract_rm_direct": rm_direct,
+            "max_rm_requests": max_rm_requests,
+            "collapse_ratio": collapse,
+        },
+        "remote_walk": {
+            "spec": {"fanout": walk_spec.fanout, "depth": walk_spec.depth,
+                     "n_dirs": walk_spec.n_dirs(), "batch": BATCH},
+            "walk": walk,
+            "max_ops": max_walk_ops,
+        },
+    }
+
+
+def check(report: dict) -> list[str]:
+    """Return the list of FAIL strings for a report (empty == pass)."""
+    mode = report["mode"]
+    os_ = report["object_store"]
+    spec = os_["spec"]
+    fused, nofusion = os_["extract_fused"], os_["extract_nofusion"]
+    rm_f, rm_d = os_["extract_rm_fused"], os_["extract_rm_direct"]
+    failures = []
+
+    for name, r in (("extract-fused", fused), ("extract-nofusion", nofusion),
+                    ("extract-rm-fused", rm_f), ("extract-rm-direct", rm_d)):
+        if r["ledger"]:
+            failures.append(f"{name} left {r['ledger']} deferred errors on "
+                            "a clean workload")
+    for name, r in (("extract-fused", fused), ("extract-nofusion", nofusion)):
+        if not r["content_ok"]:
+            failures.append(f"{name} extracted content diverges from the "
+                            "manifest — whole-object PUT semantics broke")
+
+    # 1. whole-object coalescing
+    if mode == "sim":
+        if fused["whole_object_puts"] != spec["n_files"]:
+            failures.append(
+                f"fused extraction issued {fused['whole_object_puts']} "
+                f"whole-object PUTs for {spec['n_files']} files — the "
+                "cost-sized write coalescing no longer lands one PUT per "
+                "object")
+        if fused["rmw_gets"]:
+            failures.append(
+                f"fused extraction paid {fused['rmw_gets']} read-modify-"
+                "write GETs — a write vector stopped covering its object")
+        if nofusion["whole_object_puts"] != spec["total_chunks"]:
+            failures.append(
+                f"nofusion ablation issued {nofusion['whole_object_puts']} "
+                f"PUTs for {spec['total_chunks']} chunks — the ablation is "
+                "no longer chunk-per-request and the comparison is "
+                "meaningless")
+        if nofusion["rmw_gets"] != spec["total_chunks"] - spec["n_files"]:
+            failures.append(
+                f"nofusion ablation paid {nofusion['rmw_gets']} RMW GETs, "
+                f"expected {spec['total_chunks'] - spec['n_files']} (every "
+                "chunk past a file's first)")
+    else:
+        if not (spec["n_files"] <= fused["whole_object_puts"]
+                < nofusion["whole_object_puts"]):
+            failures.append(
+                f"paced fused extraction issued "
+                f"{fused['whole_object_puts']} PUTs vs the ablation's "
+                f"{nofusion['whole_object_puts']} — coalescing never "
+                "engaged under real threads")
+
+    # 2. extract→rmtree collapse
+    if rm_f["request_count"] > os_["max_rm_requests"]:
+        bound = ("n_dirs + ceil(n_dirs/page) + 1 (marker PUTs + paginated "
+                 "LIST + ONE bulk DELETE)" if mode == "sim"
+                 else "the direct ablation's request count")
+        failures.append(
+            f"same-breath extract_rm issued {rm_f['request_count']} "
+            f"requests, exceeding {bound} = {os_['max_rm_requests']} — "
+            "the removal left the optimization window")
+    if mode == "sim" and rm_f["requests_by_class"]["delete"] != 1:
+        failures.append(
+            f"same-breath extract_rm issued "
+            f"{rm_f['requests_by_class']['delete']} DELETE requests — the "
+            "fused remove_tree must be ONE bulk DELETE, never per-key")
+    if mode == "sim" and rm_f["whole_object_puts"]:
+        failures.append(
+            f"{rm_f['whole_object_puts']} data PUTs reached the wire in "
+            "the same-breath run — file chains stopped eliding")
+    if rm_f["bulk_removes"] == 0:
+        failures.append("bulk_removes == 0 — the removal never fused")
+    if rm_f["leftover"] or rm_d["leftover"]:
+        failures.append(
+            f"manifest entries survived the removal (fused "
+            f"{rm_f['leftover']}, direct {rm_d['leftover']})")
+    if rm_d["request_count"] < spec["keys"]:
+        failures.append(
+            f"direct ablation issued {rm_d['request_count']} requests for "
+            f"{spec['keys']} keys — eager collapse leaked into the "
+            "all-flags-off run and the ratio is meaningless")
+    if rm_d["requests_by_class"]["delete"] < spec["keys"]:
+        failures.append(
+            f"direct ablation issued {rm_d['requests_by_class']['delete']} "
+            f"DELETEs for {spec['keys']} keys — per-key removal expected")
+
+    # 3. remote cold walk
+    rw = report["remote_walk"]
+    walk = rw["walk"]
+    if walk["visited_dirs"] != rw["spec"]["n_dirs"]:
+        failures.append(
+            f"remote walk visited {walk['visited_dirs']} dirs, manifest "
+            f"lists {rw['spec']['n_dirs']} — traversal lost entries")
+    if walk["ledger"]:
+        failures.append(
+            f"remote walk left {walk['ledger']} deferred errors on a "
+            "read-only walk")
+    if walk["backend_ops_total"] > rw["max_ops"]:
+        failures.append(
+            f"{walk['backend_ops_total']} round-trips for a cold walk of "
+            f"{rw['spec']['n_dirs']} dirs exceeds the walk_guard bound "
+            f"ceil(dirs/batch)+depth+1+slack = {rw['max_ops']} on the "
+            "SFTP-shaped backend")
+    if walk["prefetch_batches"] == 0:
+        failures.append(
+            "prefetch_batches == 0 — the pipeline never issued a vectored "
+            "batch on the remote backend")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--paced", action="store_true",
+                    help="paced-real smoke mode (nondeterministic, loose "
+                         "bounds) instead of the simulation")
+    args = ap.parse_args(argv)
+    mode = "paced" if args.paced else "sim"
+    report = build_report(mode)
+    with open("BENCH_pr8.json", "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    os_ = report["object_store"]
+    spec = os_["spec"]
+    fused, nofusion = os_["extract_fused"], os_["extract_nofusion"]
+    rm_f, rm_d = os_["extract_rm_fused"], os_["extract_rm_direct"]
+    rw, walk = report["remote_walk"], report["remote_walk"]["walk"]
+    print(f"[{mode}] object_store extract: files={spec['n_files']} "
+          f"chunks={spec['total_chunks']}  "
+          f"fused: puts={fused['whole_object_puts']} "
+          f"rmw={fused['rmw_gets']} reqs={fused['request_count']}  "
+          f"nofusion: puts={nofusion['whole_object_puts']} "
+          f"rmw={nofusion['rmw_gets']} reqs={nofusion['request_count']}")
+    print(f"[{mode}] extract_rm: keys={spec['keys']}  "
+          f"fused: reqs={rm_f['request_count']} "
+          f"(bound {os_['max_rm_requests']}) "
+          f"deletes={rm_f['requests_by_class']['delete']}  "
+          f"direct: reqs={rm_d['request_count']} "
+          f"deletes={rm_d['requests_by_class']['delete']}  "
+          f"collapse={os_['collapse_ratio']:.1f}x")
+    print(f"[{mode}] remote_walk: dirs={rw['spec']['n_dirs']} "
+          f"batch={BATCH}  ops={walk['backend_ops_total']} "
+          f"(bound {rw['max_ops']}) batches={walk['prefetch_batches']} "
+          f"hits={walk['prefetch_hits']}")
+    failures = check(report)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

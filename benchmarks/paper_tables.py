@@ -241,6 +241,69 @@ def fusion_table() -> list:
     return rows
 
 
+def backend_table() -> list:
+    """The backend-zoo axis (PR 8): the same-breath ``extract_then_rm``
+    workload replayed over three storage media × three engine modes.
+
+    Backends:
+    * ``local``        — the NFS-like ``LatencyBackend`` baseline (native
+      rename, per-op millisecond latency);
+    * ``object_store`` — S3-shaped: whole-object PUT, paginated LIST,
+      rename = COPY+DELETE; ``requests`` counts wire requests and is the
+      column that matters (a request is money);
+    * ``remote``       — SFTP-shaped: every op one high-RTT round-trip,
+      vectored ops pay one.
+
+    Modes: ``cannyfs`` (everything on), ``nofusion`` (eager but no
+    optimizer — the coalescing/elision ablation), ``direct`` (fully
+    synchronous).  ``service_s`` is each backend's own accrued cost
+    model time, so columns are comparable *within* a backend row group;
+    across backends the interesting figure is how much of the naive
+    request stream the engine refuses to send."""
+    import time
+
+    from .workloads import (PacedVirtualClock, make_object_store,
+                            make_remote_stream)
+    spec = TreeSpec(n_files=200, n_dirs=16, mean_kb=24.0).scaled()
+    dirs, files = synth_tree(spec)
+    backends = {
+        "local": lambda: make_remote_backend(jitter=0.0, seed=9,
+                                             clock=PacedVirtualClock(0.1)),
+        "object_store": lambda: make_object_store(
+            clock=PacedVirtualClock(0.1), list_page_size=8),
+        "remote": lambda: make_remote_stream(clock=PacedVirtualClock(0.1)),
+    }
+    modes = (("cannyfs", EagerFlags(), True, 8),
+             ("nofusion", EagerFlags(), False, 8),
+             ("direct", EagerFlags.all_off(), False, 2))
+    rows = []
+    for bname, make in backends.items():
+        for mode, flags, fusion, workers in modes:
+            backend = make()
+            t0 = time.monotonic()
+            fs = CannyFS(backend, flags=flags, fusion=fusion,
+                         max_inflight=4000, workers=workers,
+                         echo_errors=False)
+            extract_then_rm(fs, dirs, files)
+            fs.close()
+            wall = time.monotonic() - t0
+            st = fs.stats
+            derived = (f"service={backend.busy_s:.2f}s;wall={wall:.2f}s;"
+                       f"backend_ops={backend.op_count};"
+                       f"fused_writes={st.fused_writes};"
+                       f"elided_ops={st.elided_ops};"
+                       f"bulk_removes={st.bulk_removes};"
+                       f"retargeted={st.renames_retargeted}")
+            if bname == "object_store":
+                derived += (f";requests={backend.request_count};"
+                            f"puts={backend.whole_object_puts};"
+                            f"rmw={backend.rmw_gets};"
+                            f"deletes={backend.requests_by_class['delete']}")
+            rows.append((f"backend/{bname}/{mode}",
+                         f"{backend.busy_s * 1e6:.0f}", derived))
+    return rows
+
+
 def cold_walk_table() -> list:
     """The speculative metadata-prefetch ablation (PR 5): a cold walk of
     the ``cold_walk`` manifest under cannyfs vs cannyfs-noprefetch vs

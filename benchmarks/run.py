@@ -26,6 +26,7 @@ def _tables():
         "executor_modes": paper_tables.executor_modes,
         "rw_switch": paper_tables.rw_switch,
         "fusion": paper_tables.fusion_table,
+        "backend": paper_tables.backend_table,
         "cold_walk": paper_tables.cold_walk_table,
         "read_ahead": paper_tables.read_ahead_table,
         "fault_recovery": paper_tables.fault_recovery,

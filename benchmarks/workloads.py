@@ -44,7 +44,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import (CannyFS, EagerFlags, InMemoryBackend, LatencyBackend,
-                        LatencyModel, VirtualClock)
+                        LatencyModel, ObjectStoreBackend, ObjectStoreModel,
+                        RemoteStreamBackend, RemoteStreamModel, VirtualClock)
 
 
 def bench_scale() -> float:
@@ -122,6 +123,30 @@ def make_remote_backend(load: float = 1.0, seed: int = 0,
         LatencyModel(meta_ms=1.5, data_ms=1.5, bandwidth_mb_s=110.0,
                      jitter_sigma=jitter, server_slots=64, load=load,
                      seed=seed),
+        clock=clock)
+
+
+def make_object_store(clock=None, *, list_page_size: int = 1000,
+                      rtt_ms: float = 25.0, per_request_ms: float = 2.0,
+                      bandwidth_mb_s: float = 200.0) -> ObjectStoreBackend:
+    """S3-shaped bottom of the stack: flat keyspace, paginated LIST,
+    whole-object PUT, rename = COPY+DELETE.  Deterministic (no RNG) —
+    billing is a pure function of the request stream."""
+    return ObjectStoreBackend(
+        model=ObjectStoreModel(rtt_ms=rtt_ms, per_request_ms=per_request_ms,
+                               bandwidth_mb_s=bandwidth_mb_s,
+                               list_page_size=list_page_size),
+        clock=clock)
+
+
+def make_remote_stream(clock=None, *, rtt_ms: float = 40.0,
+                       per_item_ms: float = 0.5,
+                       bandwidth_mb_s: float = 110.0) -> RemoteStreamBackend:
+    """SFTP/WebDAV-shaped bottom of the stack: one high-RTT roundtrip per
+    op, cheap streaming, native rename, vectored ops pipeline per-item."""
+    return RemoteStreamBackend(
+        model=RemoteStreamModel(rtt_ms=rtt_ms, per_item_ms=per_item_ms,
+                                bandwidth_mb_s=bandwidth_mb_s),
         clock=clock)
 
 

@@ -38,6 +38,47 @@ orthogonal behaviour and delegates the rest::
   ENOSPC, EDQUOT, EIO or connection loss).  Same seed, same schedule —
   fault tests replay bit-identically.
 
+Backend zoo + CostModel protocol
+--------------------------------
+
+The stack can bottom out at a production-shaped storage class instead of
+``Local``/``InMemory`` (both new backends delegate their *state* to an
+internal ``InMemoryBackend`` oracle, so the property suites compare them
+against POSIX byte-for-byte while the *billing* diverges)::
+
+    store  = ObjectStoreBackend(model=ObjectStoreModel(
+                 rtt_ms=25.0, per_request_ms=2.0,
+                 bandwidth_mb_s=200.0, list_page_size=1000))
+    sftp   = RemoteStreamBackend(model=RemoteStreamModel(
+                 rtt_ms=40.0, per_item_ms=0.5, bandwidth_mb_s=110.0))
+
+* ``ObjectStoreBackend`` (``core/objectstore.py``) — S3-style: flat
+  keyspace with paginated ``list_by_prefix`` (S3 continuation tokens)
+  instead of readdir, whole-object PUT (a non-covering ``write_at`` is a
+  read-modify-write GET+PUT, so ``write_vec`` coalescing is mandatory),
+  rename = server-side COPY+DELETE per key, ``remove_tree`` = LIST pages
+  + ONE bulk DELETE, per-request + per-byte billing
+  (``request_count``/``requests_by_class``/``whole_object_puts``/
+  ``rmw_gets`` counters).
+* ``RemoteStreamBackend`` (``core/remote.py``) — SFTP/WebDAV-style:
+  every op is one high-RTT round-trip, payload streaming is cheap,
+  vectored ops pay ONE round-trip plus a per-item pipeline overhead,
+  rename is native.
+
+Every backend answers the **CostModel protocol**: ``cost_hint(op,
+nbytes) -> CostHint(rtt_s, bytes_per_s, per_request_overhead_s) | None``
+(``None`` = no opinion; fixed policy bounds stand).  Decorators delegate
+the question inward, so the hint reflects the storage at the bottom of
+the stack.  Consumers: the fuser sizes write coalescing from the
+"write" class and bulk-remove batching from "remove_tree", arms the
+cost-gated rename-retarget rule by comparing "rename" vs "create"
+(``FusionPolicy.retarget_renames="auto"``, ``rename_cost_ratio``); the
+prefetcher sizes listing batches from "readdir"; the read-ahead window
+from "read"; the stat batcher from "stat" (policy caps always win).
+``LatencyBackend`` answers from its live RTT/bandwidth EWMAs — which are
+seeded from the model's nominal figures, so the very first fused batch
+is already BDP-sized.
+
 Injected failures flow through the normal deferred-error machinery: the
 ErrorLedger records them, ``abort_on_error`` poisons the engine, and
 ``run_transaction`` rolls back (restoring namespace *and* quota) and
@@ -80,9 +121,10 @@ fire per *fused* backend call (one ``write_vec``, ``readdir_plus_vec``,
 single match — speculative batch faults are advisory and never reach
 the ledger), and torn writes surface as ``ShortWriteError``.
 """
-from .backend import (Clock, InMemoryBackend, LatencyBackend, LatencyModel,
-                      LocalBackend, RealClock, StatResult, StorageBackend,
-                      VirtualClock, is_under, norm_path, parent_of)
+from .backend import (Clock, CostHint, InMemoryBackend, LatencyBackend,
+                      LatencyModel, LocalBackend, RealClock, StatResult,
+                      StorageBackend, VirtualClock, is_under, norm_path,
+                      parent_of)
 from .engine import EagerIOEngine, EngineStats
 from .errors import (CannyError, EnginePoisonedError, ErrorLedger,
                      LedgerEntry, OpCancelledError, RollbackLeakError,
@@ -94,20 +136,24 @@ from .fs import CannyFS, CannyFile
 from .fusion import FusionPolicy
 from .namespace import (NamespaceOverlay, OverlayPolicy, RemoveWitness,
                         SpeculationTicket)
+from .objectstore import ObjectStoreBackend, ObjectStoreModel
 from .prefetch import MetadataPrefetcher, PrefetchPolicy
 from .readahead import ReadAheadManager, ReadPolicy, StatVecBatcher
+from .remote import RemoteStreamBackend, RemoteStreamModel
 from .simclock import SimClock
 from .transaction import Transaction, run_transaction
 
 __all__ = [
-    "CannyError", "CannyFS", "CannyFile", "Clock", "EagerFlags",
+    "CannyError", "CannyFS", "CannyFile", "Clock", "CostHint", "EagerFlags",
     "EagerIOEngine", "EngineStats", "EnginePoisonedError", "ErrorLedger",
     "FaultInjectingBackend", "FaultPlan", "FaultRule", "FusionPolicy",
     "InMemoryBackend",
     "LatencyBackend", "LatencyModel", "LedgerEntry", "LocalBackend",
     "MetadataPrefetcher", "N_FLAGS",
-    "NamespaceOverlay", "OpCancelledError", "OverlayPolicy",
+    "NamespaceOverlay", "ObjectStoreBackend", "ObjectStoreModel",
+    "OpCancelledError", "OverlayPolicy",
     "PrefetchPolicy", "QuotaBackend",
+    "RemoteStreamBackend", "RemoteStreamModel",
     "ReadAheadManager", "ReadPolicy", "RealClock", "RemoveWitness",
     "RollbackLeakError", "SimClock",
     "ShortWriteError", "SpeculationTicket", "StatResult", "StatVecBatcher",

@@ -53,6 +53,46 @@ class StatResult:
     mocked: bool = False  # answered from the write-through cache
 
 
+@dataclass(frozen=True)
+class CostHint:
+    """Per-op-class cost estimate a backend advertises to the optimizer.
+
+    The CostModel protocol: ``backend.cost_hint(op, nbytes=0)`` returns a
+    ``CostHint`` (or ``None`` when the backend has no opinion — local and
+    in-memory storage — in which case callers fall back to their fixed
+    policy bounds).  Decorator backends (latency, faults, quota) delegate
+    the question inward so the hint always reflects the storage actually
+    at the bottom of the stack.
+
+    * ``rtt_s``                 — expected round-trip time for one request
+      of this op class, excluding payload transfer.
+    * ``bytes_per_s``           — achievable streaming rate for payload
+      bytes once the request is in flight.
+    * ``per_request_overhead_s``— fixed extra cost charged per wire
+      request beyond the first (pipelined continuation pages, per-key
+      sub-requests of a composite op such as rename-as-copy+delete).
+
+    ``cost_s(nbytes)`` collapses the triple to one number so callers can
+    *compare* op classes (is a rename materially more expensive than a
+    create?) without caring which term dominates.
+    """
+
+    rtt_s: float
+    bytes_per_s: float
+    per_request_overhead_s: float = 0.0
+
+    def cost_s(self, nbytes: int = 0) -> float:
+        c = self.rtt_s + self.per_request_overhead_s
+        if nbytes > 0 and self.bytes_per_s > 0:
+            c += nbytes / self.bytes_per_s
+        return c
+
+    def bdp_bytes(self) -> float:
+        """Bandwidth-delay product implied by this hint: the payload size
+        past which streaming, not latency, dominates one request."""
+        return (self.rtt_s + self.per_request_overhead_s) * self.bytes_per_s
+
+
 class StorageBackend:
     """Synchronous primitive I/O operations (one per eagerness flag)."""
 
@@ -207,6 +247,19 @@ class StorageBackend:
         decorator backends override it to pay their cost once per fused
         batch."""
         return [self.read_at(path, off, size) for off, size in spans]
+
+    def cost_hint(self, op: str, nbytes: int = 0) -> Optional[CostHint]:
+        """The CostModel protocol (see ``CostHint``).  ``op`` is an op
+        *class* name (``"write"``, ``"read"``, ``"rename"``, ``"stat"``,
+        ``"readdir"``, ``"remove_tree"``, ...); ``nbytes`` lets a backend
+        whose cost structure is size-dependent specialize the hint.  The
+        base returns ``None`` — local/in-memory storage has no cost
+        opinion and callers keep their fixed policy bounds.  Decorator
+        backends MUST override this with an explicit inward delegation:
+        because they subclass ``StorageBackend``, this very definition
+        would otherwise shadow their ``__getattr__`` fallthrough and
+        silently hide the wrapped backend's model."""
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -815,8 +868,15 @@ class LatencyBackend(StorageBackend):
         self._slot_heap: list[float] = []
         self.op_count = 0
         self.busy_s = 0.0  # total server-side service time (for utilization)
-        self._rtt_ewma: Optional[float] = None   # measured round-trip time
-        self._bw_ewma: Optional[float] = None    # measured bytes/second
+        # The RTT/bandwidth EWMAs are *seeded* from the model's nominal
+        # figures (the lognormal's median RTT and the advertised payload
+        # rate) rather than starting at None: before the seeding, the
+        # fuser's first adaptive clamp saw a degenerate BDP and under-sized
+        # the first cold fused batch.  Measured samples then pull the
+        # estimate toward reality at BDP_ALPHA per op, exactly as before.
+        self._rtt_ewma: Optional[float] = (
+            self.model.meta_ms * self.model.load / 1e3)
+        self._bw_ewma: Optional[float] = self.model.bandwidth_mb_s * 1e6
 
     def _delay(self, kind: str, nbytes: int = 0):
         a = self.BDP_ALPHA
@@ -857,9 +917,9 @@ class LatencyBackend(StorageBackend):
             self.clock.sleep(lat)
 
     def bdp_bytes(self) -> Optional[float]:
-        """Measured bandwidth-delay product in bytes, or None before the
-        first metadata round-trip has been observed.  Until a data op has
-        calibrated the bandwidth EWMA the model's nominal rate stands in.
+        """Measured bandwidth-delay product in bytes.  The EWMAs are
+        seeded from the model's nominal RTT and rate, so even the first
+        cold call returns a usable estimate; measured samples refine it.
         Lock-free reads: float loads are atomic and a slightly stale EWMA
         only shifts the adaptive clamp by one smoothing step."""
         rtt = self._rtt_ewma
@@ -869,6 +929,23 @@ class LatencyBackend(StorageBackend):
         if bw is None:
             bw = self.model.bandwidth_mb_s * 1e6
         return rtt * bw
+
+    def cost_hint(self, op: str, nbytes: int = 0) -> Optional[CostHint]:
+        """Per-op-class hint from the live EWMAs.  Data-plane classes use
+        the calibrated bandwidth; metadata classes stream nothing.  The
+        wrapped backend gets the first word: if the inner storage has its
+        own cost model (object store behind a latency shaper), its
+        structural costs (rename = copy+delete, paginated listings)
+        dominate the shaper's uniform RTT and are what the fuser must
+        hear about."""
+        inner = getattr(self.inner, "cost_hint", None)
+        if callable(inner):
+            hint = inner(op, nbytes)
+            if hint is not None:
+                return hint
+        rtt = self._rtt_ewma or (self.model.meta_ms * self.model.load / 1e3)
+        bw = self._bw_ewma or (self.model.bandwidth_mb_s * 1e6)
+        return CostHint(rtt_s=rtt, bytes_per_s=bw)
 
     def __getattr__(self, name):  # delegate non-op attrs
         return getattr(self.inner, name)

@@ -18,10 +18,13 @@ Architecture (one op's life, left to right)::
         |  Fuser (core/fusion.py)                                 |
         |  peephole pass over the pending stream:                 |
         |    coalesce write_at -> one vectored write_vec          |
-        |      (cap ~2x the backend's measured bandwidth-delay    |
-        |       product when adaptive, else FusionPolicy.max_bytes)|
+        |      (cap ~2x the backend's per-op-class cost_hint BDP  |
+        |       when adaptive, else FusionPolicy.max_bytes)       |
         |    fold chmod/utimens/truncate to last-wins             |
         |    elide create+write chains unlinked in-window         |
+        |    retarget renames on copy+delete media: a still-      |
+        |      pending source chain replays at the destination    |
+        |      (cost-gated via cost_hint("rename") vs "create")   |
         |    collapse cross-path unlink/rmdir -> one remove_tree  |
         |      (provisional dirs fuse too: the op re-verifies the |
         |       overlay claim at exec via a RemoveWitness)        |
@@ -62,6 +65,25 @@ Architecture (one op's life, left to right)::
         |  create/write existence probes fuse into ONE speculative |
         |  stat_vec per batch, consumed single-shot at execution   |
         |  time with a sync-stat fallback                          |
+        +------+---------------------------------------------------+
+               |
+        +------v---------------------------------------------------+
+        |  Backend zoo + CostModel (core/backend.py,               |
+        |  core/objectstore.py, core/remote.py, core/faults.py)    |
+        |  the StorageBackend decorator stack bottoms out at a     |
+        |  storage class with its own cost structure: Local /      |
+        |  InMemory (no cost opinion), LatencyBackend (measured    |
+        |  RTT+bandwidth EWMAs, seeded from the model's nominals), |
+        |  ObjectStoreBackend (flat keyspace: paginated            |
+        |  list_by_prefix, whole-object PUT, rename=copy+delete,   |
+        |  per-request billing) and RemoteStreamBackend (high RTT, |
+        |  cheap streaming, native rename).  Every backend answers |
+        |  cost_hint(op, nbytes) -> CostHint(rtt_s, bytes_per_s,   |
+        |  per_request_overhead_s) | None; fault/quota decorators  |
+        |  delegate the question inward, so the fuser, prefetcher, |
+        |  read-ahead manager and stat batcher size their batches  |
+        |  and arm cost-gated rules from the storage actually at   |
+        |  the bottom of the stack                                 |
         +----------------------------------------------------------+
 
 Semantics (paper §2–§3):
@@ -88,6 +110,8 @@ Semantics (paper §2–§3):
   ``EngineStats`` reports ``fused_writes`` (writes absorbed into a
   pending vectored op), ``folded_meta`` (last-wins metadata folds),
   ``elided_ops``/``bytes_elided`` (ops/bytes deleted by elision),
+  ``renames_retargeted`` (renames rewritten to build-at-destination on
+  copy+delete media),
   ``overlay_readdirs``/``overlay_seals_avoided`` (namespace reads that
   never reached the backend / that left pending chains rewritable),
   ``bulk_removes`` (cross-path removal collapses),
@@ -145,6 +169,8 @@ class EngineStats:
     folded_meta: int = 0         # chmod/utimens/truncate last-wins folds
     elided_ops: int = 0          # pending ops deleted by unlink/bulk elision
     bytes_elided: int = 0        # write payload bytes that never hit storage
+    renames_retargeted: int = 0  # renames rewritten to build-at-destination
+    #                              (cost-gated: copy+delete media only)
     # -- namespace overlay counters ---------------------------------------
     overlay_readdirs: int = 0    # readdirs answered from the overlay
     overlay_seals_avoided: int = 0  # of those, with pending ops underneath
@@ -313,13 +339,16 @@ class EagerIOEngine:
                 "cannot schedule deterministically")
         self._sched = OpScheduler(self.stats, max_inflight=self.max_inflight,
                                   work_stealing=work_stealing, sim=self.sim)
-        # adaptive fusion sizing: a latency-measuring backend anywhere in
-        # the decorator stack exposes its bandwidth-delay product (the
-        # decorators delegate unknown attrs inward); without one the
-        # fixed FusionPolicy bounds stand
+        # adaptive fusion sizing: the backend's CostModel protocol
+        # (``cost_hint`` — per-op-class RTT/bandwidth/overhead, decorators
+        # delegate it inward) is the preferred signal; the older scalar
+        # ``bdp_bytes`` probe is kept as the fallback for latency-only
+        # stacks.  Without either the fixed FusionPolicy bounds stand.
         bdp = getattr(backend, "bdp_bytes", None)
+        cost = getattr(backend, "cost_hint", None)
         self._fuser = Fuser(self.fusion, self.stats,
-                            bdp_source=bdp if callable(bdp) else None)
+                            bdp_source=bdp if callable(bdp) else None,
+                            cost_source=cost if callable(cost) else None)
         # the speculative metadata prefetcher pipelines cold-tree walks
         # through batched readdir_plus_vec reads; it rides the overlay's
         # speculation tickets, so it exists only when the overlay does
@@ -484,6 +513,26 @@ class EagerIOEngine:
             return None
         return self._fuser.prepare_bulk_remove(self._sched, self.overlay,
                                                norm_path(path), region)
+
+    def rename_retarget_wanted(self) -> bool:
+        """Is the cost-gated rename-retarget rule armed for this backend?
+        (``FusionPolicy.retarget_renames``: "auto" consults the cost
+        model — fires only on copy+delete media like the object store.)"""
+        return (not self._sched.poisoned
+                and self._fuser.rename_retarget_wanted())
+
+    def prepare_rename_retarget(self, src: str, *,
+                                region: object = None) -> list | None:
+        """Capture the source's entire pending chain (all-or-nothing, must
+        bottom at its pending ``create``) so the fs layer can replay the
+        payloads at the destination instead of paying the backend's
+        copy+delete rename.  Returns the captured ops oldest-first (already
+        marked elided), or None when the chain is not fully capturable and
+        the plain backend rename must run."""
+        if self._sched.poisoned:
+            return None
+        return self._fuser.capture_for_rename(self._sched, norm_path(src),
+                                              region)
 
     def run_bulk_remove(self, payload) -> int:
         """Execute one fused removal (called from the fused op's fn on a

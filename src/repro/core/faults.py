@@ -234,6 +234,12 @@ class FaultInjectingBackend(StorageBackend):
     def __getattr__(self, name):  # delegate non-op attrs (snapshot, model…)
         return getattr(self.inner, name)
 
+    def cost_hint(self, op: str, nbytes: int = 0):
+        # explicit inward delegation: the StorageBackend base defines
+        # cost_hint (returning None), which would shadow __getattr__ —
+        # faults add no cost of their own, the wrapped model answers
+        return self.inner.cost_hint(op, nbytes)
+
     def _gate(self, kind: str, path: str) -> OSError | None:
         """Consult the plan.  Raise-outcome faults raise here; a delay
         outcome sleeps and clears; a short outcome is returned as a token
@@ -383,6 +389,10 @@ class QuotaBackend(StorageBackend):
 
     def __getattr__(self, name):
         return getattr(self.inner, name)
+
+    def cost_hint(self, op: str, nbytes: int = 0):
+        # explicit inward delegation (see FaultInjectingBackend.cost_hint)
+        return self.inner.cost_hint(op, nbytes)
 
     @property
     def remaining(self) -> int:

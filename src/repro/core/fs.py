@@ -332,9 +332,62 @@ class CannyFS:
     def rename(self, src: str, dst: str) -> None:
         b = self.backend
         s, d = norm_path(src), norm_path(dst)
+        # optimizer rule 5 (cost-gated): on media where rename is a
+        # server-side copy+delete, a source whose whole backend lifetime
+        # is still pending (create+write+metadata, nothing executed) is
+        # rebuilt at the destination instead — the copy+delete round-trips
+        # never happen.  The capture is all-or-nothing; on any ineligible
+        # op the plain backend rename below runs untouched.
+        if (s != d and self.flags.is_eager("rename")
+                and self.flags.is_eager("create")
+                and self.flags.is_eager("write")
+                and self.flags.is_eager("unlink")
+                and self.engine.rename_retarget_wanted()):
+            txn = self._active_txn()
+            chain = self.engine.prepare_rename_retarget(s, region=txn)
+            if chain is not None:
+                self._replay_retargeted(chain, s, d, txn)
+                return
         self._submit_journaled("rename", (s, d), lambda: b.rename(s, d),
                                lambda t: t._record_rename(s, d),
                                cache_kw={})
+
+    def _replay_retargeted(self, chain, s: str, d: str, txn) -> None:
+        """Re-drive a captured source chain at the destination through the
+        public ops (oldest-first: the create lands before its writes), so
+        journaling, stat-cache/overlay bookkeeping and destination-side
+        fusion all happen exactly as if the caller had built the file at
+        the destination in the first place.  The elided source ops never
+        journalled (their fns never ran), so nothing double-records."""
+        b = self.backend
+        for op in chain:
+            pl = op.payload
+            if op.kind == "create":
+                self.create(d)
+            elif op.kind == "write":
+                for off, data in pl.segments():
+                    self._write_at(d, off, data)
+            elif op.kind == "chmod":
+                self.chmod(d, *pl.args)
+            elif op.kind == "utimens":
+                self.utimens(d, *pl.args)
+            elif op.kind == "truncate":
+                self.truncate(d, *pl.args)
+        # the source still disappears: a pre-existing file at the source
+        # (the elided create would have O_TRUNCed it) must go, and the
+        # overlay/stat-cache must see the path removed.  Submitted
+        # directly — NOT via self.unlink, whose elision pass would find
+        # the already-captured chain gone and leave the op intolerant,
+        # pushing a spurious ENOENT into the ledger when the source was
+        # never materialized.
+
+        def fn():
+            try:
+                b.unlink(s)
+            except FileNotFoundError:
+                pass
+
+        self._submit("unlink", (s,), fn, cache_kw={}, region=txn)
 
     def symlink(self, target: str, path: str) -> None:
         b, p = self.backend, norm_path(path)

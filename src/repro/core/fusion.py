@@ -16,6 +16,17 @@ peephole rules over each path's pending chain:
   unlinked inside the same unobserved window never touches the backend at
   all (the extract-then-rmtree workload); the trailing unlink becomes
   tolerant of the file's absence so the stream stays error-free;
+* **rename retarget** (cost-gated) — on storage where rename is a
+  server-side copy+delete (object stores), a rename whose source's whole
+  backend lifetime is still pending (create+write+metadata chain, all
+  unexecuted) is rewritten to *build the file at the destination
+  instead*: the source chain is captured atomically
+  (``OpScheduler.capture_chain``) and its payloads replayed at the
+  destination path, so the expensive copy+delete never happens.  The
+  rule arms itself from the backend's ``cost_hint`` (``retarget_renames
+  = "auto"``): it fires only when a rename costs at least
+  ``rename_cost_ratio`` times a create, so POSIX-shaped media with a
+  one-roundtrip rename are never rewritten;
 * **bulk remove** (cross-path, keyed by directory prefix) — when an
   ``rmdir`` arrives and the namespace overlay proves its whole subtree is
   known *and* ends empty after the pending removals, those pending
@@ -55,6 +66,13 @@ ELIDABLE_KINDS = frozenset({
 # pending removal ops a bulk remove_tree on an ancestor subsumes: their
 # whole duty transfers to the fused call, so they can leave the stream
 REMOVAL_KINDS = frozenset({"unlink", "rmdir", "remove_tree"})
+
+# pending ops the rename-retarget rule can replay at the destination:
+# their payloads (WritePayload / MetaPayload / the bare create) carry the
+# full arguments.  fallocate/setxattr are elidable-on-unlink but their
+# submitted fns close over their args with no payload — not replayable.
+RETARGET_KINDS = frozenset({"create", "write", "chmod", "utimens",
+                            "truncate"})
 
 
 @dataclass(frozen=True)
@@ -98,6 +116,12 @@ class FusionPolicy:
     min_remove_entries: int = 4096
     # -- exec-time re-verification for provisional subtrees (ROADMAP m) --
     reverify_provisional: bool = True
+    # -- rule 5: cost-gated rename retarget (ROADMAP r) --
+    # "auto": fire iff cost_hint says rename >= rename_cost_ratio x create
+    # (object stores: copy+delete, ratio ~2 -> fires; POSIX media: ~1 ->
+    # never).  True/False force the rule on/off regardless of cost.
+    retarget_renames: object = "auto"
+    rename_cost_ratio: float = 1.5
 
     @classmethod
     def off(cls) -> "FusionPolicy":
@@ -179,26 +203,43 @@ class Fuser:
     """The peephole pass.  Stateless apart from its counters; the
     scheduler provides the locking context (``fuse_tip``/``elide_chain``).
 
-    ``bdp_source`` is the backend's measured bandwidth-delay product
-    (``LatencyBackend.bdp_bytes`` or None when the stack has no latency
-    layer): when present and the policy allows, it sizes the coalescing
-    and bulk-remove clamps adaptively."""
+    ``cost_source`` is the backend's CostModel entry point
+    (``StorageBackend.cost_hint`` — may return None) and is the preferred
+    sizing signal: each clamp asks for its own op *class* ("write",
+    "remove_tree", "rename"), so a backend whose rename is structurally
+    expensive sizes rename elision differently from write coalescing.
+    ``bdp_source`` is the older single-number probe
+    (``LatencyBackend.bdp_bytes``), kept as the fallback for backends
+    predating the protocol."""
 
-    def __init__(self, policy: FusionPolicy, stats, bdp_source=None):
+    def __init__(self, policy: FusionPolicy, stats, bdp_source=None,
+                 cost_source=None):
         self.policy = policy
         self.stats = stats
         self._bdp = bdp_source
+        self._cost = cost_source
         self._slock = threading.Lock()   # exact counters across shards
 
-    # -- adaptive bandwidth-delay sizing -------------------------------
+    # -- adaptive cost-model sizing ------------------------------------
+
+    def _bdp_for(self, op: str):
+        """Bandwidth-delay product for one op class: the cost hint when
+        the backend has one, else the legacy scalar probe, else None."""
+        if self._cost is not None:
+            hint = self._cost(op, 0)
+            if hint is not None:
+                return hint.bdp_bytes()
+        if self._bdp is not None:
+            return self._bdp()
+        return None
 
     def effective_max_bytes(self) -> int:
         """The write-coalescing byte cap for one fused op: ~2x the
         measured BDP, clamped so the policy bounds always win."""
         pol = self.policy
-        if not pol.adaptive_max_bytes or self._bdp is None:
+        if not pol.adaptive_max_bytes:
             return pol.max_bytes
-        bdp = self._bdp()
+        bdp = self._bdp_for("write")
         if not bdp:
             return pol.max_bytes
         eff = max(pol.min_adaptive_bytes,
@@ -210,9 +251,9 @@ class Fuser:
         """How many directory entries one fused ``remove_tree`` may cover:
         ~2x BDP worth of ~256-byte dirents, within the policy bounds."""
         pol = self.policy
-        if not pol.adaptive_max_bytes or self._bdp is None:
+        if not pol.adaptive_max_bytes:
             return pol.max_remove_entries
-        bdp = self._bdp()
+        bdp = self._bdp_for("remove_tree")
         if not bdp:
             return pol.max_remove_entries
         return max(pol.min_remove_entries,
@@ -391,3 +432,48 @@ class Fuser:
             self.stats.bulk_removes += 1
             self.stats.elided_ops += elided
         return BulkRemovePayload(root, sorted(covered), entries, witness)
+
+    # -- rule 5: cost-gated rename retarget ----------------------------
+
+    def rename_retarget_wanted(self) -> bool:
+        """Is the retarget rule armed?  ``retarget_renames=True`` forces
+        it, False disables it; the default ``"auto"`` consults the cost
+        model: fire only when a rename round-trip genuinely costs at
+        least ``rename_cost_ratio`` times a create (copy+delete media)."""
+        pol = self.policy
+        if not (pol.enabled and pol.elide_unlinked):
+            return False
+        if pol.retarget_renames is True:
+            return True
+        if pol.retarget_renames != "auto":
+            return False
+        if self._cost is None:
+            return False
+        rename = self._cost("rename", 0)
+        create = self._cost("create", 0)
+        if rename is None or create is None:
+            return False
+        base = create.cost_s() or 1e-9
+        return rename.cost_s() >= pol.rename_cost_ratio * base
+
+    def capture_for_rename(self, sched, path: str,
+                           region: object) -> list | None:
+        """Capture the source path's entire pending chain for a rename
+        retarget: every pending op must be elidable and same-region, and
+        the chain must bottom at the pending ``create`` (the file's whole
+        backend lifetime is still unexecuted — nothing exists at the
+        source for a backend rename to move).  All-or-nothing via
+        ``OpScheduler.capture_chain``: on success the ops are already
+        marked elided and returned oldest-first for the caller to replay
+        at the destination; on any ineligible op nothing is touched and
+        the plain backend rename proceeds."""
+        def eligible(op) -> bool:
+            return op.kind in RETARGET_KINDS and op.region is region
+
+        chain = sched.capture_chain(path, eligible, anchor_kind="create")
+        if not chain:
+            return None
+        with self._slock:
+            self.stats.renames_retargeted += 1
+            self.stats.elided_ops += len(chain)
+        return chain

@@ -113,6 +113,12 @@ class MetadataPrefetcher:
         self.policy = policy
         bdp = getattr(engine.backend, "bdp_bytes", None)
         self._bdp = bdp if callable(bdp) else None
+        # per-op-class cost hints (CostModel protocol) outrank the scalar
+        # probe: listings are sized by the "readdir" class, so a backend
+        # with paginated LISTs sizes the pipeline from listing costs, not
+        # from data-plane bandwidth
+        cost = getattr(engine.backend, "cost_hint", None)
+        self._cost = cost if callable(cost) else None
         self._lock = threading.Lock()
         self._slock = threading.Lock()     # exact counters (leaf)
         self._frontier: deque = deque()    # (path, ticket)
@@ -125,13 +131,24 @@ class MetadataPrefetcher:
     # sizing
     # ------------------------------------------------------------------
 
+    def _bdp_bytes(self):
+        """Listing-class BDP: the backend's "readdir" cost hint when it
+        has one, else the legacy scalar probe, else None."""
+        if self._cost is not None:
+            hint = self._cost("readdir", 0)
+            if hint is not None:
+                return hint.bdp_bytes()
+        if self._bdp is not None:
+            return self._bdp()
+        return None
+
     def batch_width(self) -> int:
         """Dirs per vectored call: ~2x the measured BDP worth of dirents
         when the backend exposes one, else the policy cap."""
         pol = self.policy
-        if not pol.adaptive_batch or self._bdp is None:
+        if not pol.adaptive_batch:
             return pol.max_batch
-        bdp = self._bdp()
+        bdp = self._bdp_bytes()
         if not bdp:
             return pol.max_batch
         return max(pol.min_batch,

@@ -162,6 +162,11 @@ class ReadAheadManager:
         self.policy = policy
         bdp = getattr(engine.backend, "bdp_bytes", None)
         self._bdp = bdp if callable(bdp) else None
+        # CostModel protocol: the "read" class hint outranks the scalar
+        # probe, so the window is sized from read-request costs even when
+        # the backend's metadata ops are billed differently
+        cost = getattr(engine.backend, "cost_hint", None)
+        self._cost = cost if callable(cost) else None
         self._lock = threading.Lock()
         self._slock = threading.Lock()
         self._files: OrderedDict[str, _FileState] = OrderedDict()
@@ -170,14 +175,23 @@ class ReadAheadManager:
     # sizing
     # ------------------------------------------------------------------
 
+    def _bdp_bytes(self):
+        if self._cost is not None:
+            hint = self._cost("read", 0)
+            if hint is not None:
+                return hint.bdp_bytes()
+        if self._bdp is not None:
+            return self._bdp()
+        return None
+
     def window(self) -> int:
         """Bytes per speculative fetch: ~2x the measured BDP when the
         backend exposes one, else the policy cap — the same clamp
         discipline as ``FusionPolicy.adaptive_max_bytes``."""
         pol = self.policy
-        if not pol.adaptive or self._bdp is None:
+        if not pol.adaptive:
             return pol.max_bytes
-        bdp = self._bdp()
+        bdp = self._bdp_bytes()
         if not bdp:
             return pol.max_bytes
         return max(pol.min_bytes,
@@ -503,10 +517,27 @@ class StatVecBatcher:
     def __init__(self, engine, policy: ReadPolicy):
         self.engine = engine
         self.policy = policy
+        # CostModel protocol: the "stat" class hint sizes the probe batch
+        # (a high-RTT stat pipeline wants wider fusion); the policy's
+        # ``stat_batch`` stays the hard ceiling either way
+        cost = getattr(engine.backend, "cost_hint", None)
+        self._cost = cost if callable(cost) else None
         self._lock = threading.Lock()
         self._slock = threading.Lock()
         self._entries: dict[str, _Probe] = {}
         self._pending: list[_Probe] = []   # enqueued, not yet flushed
+
+    def effective_batch(self) -> int:
+        """Probes per fused ``stat_vec``: ~2x the "stat" class BDP worth
+        of ~256-byte attr records, floored at 4 and capped by the policy
+        bound (which always wins, so cost-blind stacks are unchanged)."""
+        pol = self.policy
+        if self._cost is not None:
+            hint = self._cost("stat", 0)
+            if hint is not None:
+                adaptive = max(4, int(2.0 * hint.bdp_bytes() / 256))
+                return min(pol.stat_batch, adaptive)
+        return pol.stat_batch
 
     # ------------------------------------------------------------------
     # producer side (fs.create / fs._write_at, at submission time)
@@ -540,7 +571,7 @@ class StatVecBatcher:
             probe = _Probe(path, exempt_kind)
             self._entries[path] = probe
             self._pending.append(probe)
-            if len(self._pending) >= self.policy.stat_batch:
+            if len(self._pending) >= self.effective_batch():
                 flush = self._pending
                 self._pending = []
         with self._slock:

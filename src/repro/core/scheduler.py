@@ -449,6 +449,52 @@ class OpScheduler:
                 cur = nxt
         return out
 
+    def capture_chain(self, path: str, eligible: Callable[[_Op], bool],
+                      anchor_kind: str) -> Optional[list[_Op]]:
+        """All-or-nothing elision of the *entire* pending chain on
+        ``path``: succeeds only when every pending op is ``eligible`` and
+        the oldest one is an ``anchor_kind`` op (the path's whole backend
+        lifetime is still pending), in which case all of them are marked
+        elided atomically and returned oldest-first; otherwise nothing is
+        touched and None is returned.
+
+        Unlike ``elide_chain`` — which may stop partway, safe for unlink
+        (dropping a suffix of the chain loses only work that would be
+        deleted anyway) — a partial capture would LOSE DATA for the
+        rename-retarget rule: the caller replays the captured payloads at
+        another path, so it must own the chain completely or not at all.
+        The flocks of the whole chain are therefore acquired and *held*
+        together (under the shard lock, tip→oldest) before any op is
+        marked: a bottom-of-chain op that is ready can be claimed by a
+        worker under its flock alone, and a mark-then-rollback scheme
+        would race it.  Holding multiple flocks is deadlock-free here:
+        every other code path takes at most one flock at a time and
+        never acquires a shard lock while holding one."""
+        shard = self._shard_of(path)
+        chain: list[_Op] = []
+        held: list[_Op] = []
+        with shard.lock:
+            try:
+                cur = shard.last_op.get(path)
+                while cur is not None:
+                    cur.flock.acquire()
+                    held.append(cur)
+                    if (cur.completed or cur.claimed or cur.sealed
+                            or cur.cancelled or cur.elided
+                            or cur.paths != (path,) or not eligible(cur)):
+                        return None
+                    chain.append(cur)
+                    cur = cur.prev_same_path
+                if not chain or chain[-1].kind != anchor_kind:
+                    return None
+                for op in chain:
+                    op.elided = True
+            finally:
+                for op in held:
+                    op.flock.release()
+        chain.reverse()
+        return chain
+
     def pending_structural_children(self, path: str) -> list[_Op]:
         """Snapshot of the pending structural ops directly under ``path``
         (the bulk-remove pass scans these for collapsible removals)."""

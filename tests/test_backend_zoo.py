@@ -1,0 +1,359 @@
+"""PR 8: the backend zoo (ObjectStoreBackend / RemoteStreamBackend), the
+CostModel protocol, the cost-gated rename-retarget rule, and the
+cold-start-seeded BDP.
+
+Covers the satellites:
+* seeded EWMAs — a fresh ``LatencyBackend`` answers ``bdp_bytes`` /
+  ``cost_hint`` from the model's nominal figures, so the very first
+  fused write of a session is already BDP-sized (no cold-start window
+  where the coalescer falls back to the fixed cap);
+* ``list_by_prefix`` pagination edge cases — page boundary exactly at
+  the page width, the empty final page, keys inserted/deleted between
+  pages (S3 continuation semantics), and a racing admitted mutation
+  cancelling an in-flight speculative listing;
+* decorator composition — fault/quota layers delegate ``cost_hint``
+  inward instead of letting the base class shadow ``__getattr__``;
+* the retarget rule itself — fires on copy+delete media, never on
+  native-rename media, and obeys the forced on/off policy.
+"""
+import threading
+
+import pytest
+
+from repro.core import (CannyFS, CostHint, FaultInjectingBackend, FaultPlan,
+                        FaultRule, FusionPolicy, InMemoryBackend,
+                        LatencyBackend, LatencyModel, ObjectStoreBackend,
+                        ObjectStoreModel, QuotaBackend, RemoteStreamBackend,
+                        RemoteStreamModel, SimClock, VirtualClock)
+
+# ---------------------------------------------------------------------------
+# satellite: cold-start BDP seeding
+# ---------------------------------------------------------------------------
+
+def _nfs(clock=None, **kw):
+    return LatencyBackend(
+        InMemoryBackend(),
+        LatencyModel(meta_ms=40.0, data_ms=40.0, bandwidth_mb_s=110.0,
+                     jitter_sigma=0.0, load=1.0, seed=0, **kw),
+        clock=clock or VirtualClock())
+
+
+def test_fresh_latency_backend_has_seeded_bdp():
+    lb = _nfs()
+    # nominal figures, zero ops observed: rtt = meta_ms, bw = model rate
+    assert lb.bdp_bytes() == pytest.approx(0.040 * 110e6)
+    hint = lb.cost_hint("write")
+    assert hint is not None
+    assert hint.bdp_bytes() == pytest.approx(0.040 * 110e6)
+
+
+def test_first_cold_fused_write_is_already_bdp_sized():
+    """Before any op completes, the fuser's write cap must be the seeded
+    2x-BDP clamp, not the fixed max_bytes fallback — and the session's
+    very first chunked file must coalesce into ONE vectored write."""
+    lb = _nfs(clock=SimClock())
+    fs = CannyFS(lb, workers=4, echo_errors=False)
+    pol = FusionPolicy()
+    expected = int(pol.bdp_multiplier * 0.040 * 110e6)   # 8.8 MB
+    assert fs.engine._fuser.effective_max_bytes() == expected
+    assert pol.min_adaptive_bytes <= expected < pol.max_bytes
+    chunks = 32
+    with fs.open("first.bin", "wb") as f:
+        for i in range(chunks):
+            f.write(bytes([i & 0xFF]) * 8192)
+    fs.close()
+    assert fs.stats.fused_writes == chunks - 1     # one write_vec total
+    assert fs.stats.adaptive_max_bytes == expected
+    assert len(fs.ledger) == 0
+
+
+# ---------------------------------------------------------------------------
+# cost hints across the zoo + decorator delegation
+# ---------------------------------------------------------------------------
+
+def test_object_store_rename_hint_is_copy_plus_delete():
+    store = ObjectStoreBackend()
+    rename, create = store.cost_hint("rename"), store.cost_hint("create")
+    assert rename.rtt_s == pytest.approx(2 * store.model.rtt_s)
+    assert rename.cost_s() >= 1.5 * create.cost_s()
+
+
+def test_remote_stream_hint_is_uniform():
+    remote = RemoteStreamBackend()
+    assert remote.cost_hint("rename") == remote.cost_hint("create")
+
+
+def test_base_backend_hint_is_none():
+    assert InMemoryBackend().cost_hint("write") is None
+
+
+def test_decorators_delegate_cost_hint_inward():
+    store = ObjectStoreBackend()
+    plan = FaultPlan([FaultRule(error="EIO", ops=("write",),
+                                probability=0.0)], seed=0)
+    for deco in (FaultInjectingBackend(store, plan),
+                 QuotaBackend(store, budget_bytes=1 << 20),
+                 QuotaBackend(FaultInjectingBackend(store, plan),
+                              budget_bytes=1 << 20)):
+        assert deco.cost_hint("rename") == store.cost_hint("rename")
+        assert deco.cost_hint("write") == store.cost_hint("write")
+
+
+def test_latency_decorator_prefers_inner_hint():
+    """A shaper stacked over an object store reports the store's cost
+    shape, not its own EWMAs — the hint reflects the bottom of the
+    stack."""
+    store = ObjectStoreBackend()
+    lb = LatencyBackend(store, LatencyModel(jitter_sigma=0.0, seed=0),
+                        clock=VirtualClock())
+    assert lb.cost_hint("rename") == store.cost_hint("rename")
+
+
+def test_cost_hint_math():
+    h = CostHint(rtt_s=0.025, bytes_per_s=200e6,
+                 per_request_overhead_s=0.002)
+    assert h.cost_s(0) == pytest.approx(0.027)
+    assert h.cost_s(200_000_000) == pytest.approx(1.027)
+    assert h.bdp_bytes() == pytest.approx(0.027 * 200e6)
+
+
+# ---------------------------------------------------------------------------
+# satellite: list_by_prefix pagination edge cases
+# ---------------------------------------------------------------------------
+
+def _store_with_keys(n_files: int, page: int) -> ObjectStoreBackend:
+    store = ObjectStoreBackend(model=ObjectStoreModel(list_page_size=page))
+    store.inner.mkdir("p")
+    for i in range(n_files):
+        store.inner.create(f"p/f{i:02d}")
+    return store
+
+
+def _drain(store, prefix, page_size=None):
+    keys, token, pages = [], None, 0
+    while True:
+        got, token = store.list_by_prefix(prefix, token,
+                                          page_size=page_size)
+        keys.extend(got)
+        pages += 1
+        if token is None:
+            return keys, pages
+
+
+def test_page_boundary_exactly_at_width_has_no_empty_tail_page():
+    # 15 file keys + the "p/" marker = 16 keys = exactly two 8-key pages
+    store = _store_with_keys(15, page=8)
+    assert len(store._keys_under("p")) == 16
+    keys, pages = _drain(store, "p")
+    assert pages == 2 and len(keys) == 16
+    page1, token = store.list_by_prefix("p")
+    assert len(page1) == 8 and token == page1[-1]
+    page2, token = store.list_by_prefix("p", token)
+    assert len(page2) == 8 and token is None      # no third, empty page
+
+
+def test_empty_final_page_when_token_is_last_key():
+    store = _store_with_keys(15, page=8)
+    last = store._keys_under("p")[-1]
+    keys, token = store.list_by_prefix("p", last)
+    assert keys == [] and token is None
+
+
+def test_key_inserted_between_pages():
+    store = _store_with_keys(16, page=8)          # 17 keys: 8 + 8 + 1
+    page1, token = store.list_by_prefix("p")
+    # a key sorting BEFORE the token is missed (S3 contract); one AFTER
+    # the token appears in a later page exactly once
+    store.inner.create("p/f00a")                  # before token "p/f06"
+    store.inner.create("p/zzz")                   # after every fXX key
+    rest, pages = [], 0
+    while token is not None:
+        got, token = store.list_by_prefix("p", token)
+        rest.extend(got)
+        pages += 1
+    assert "p/f00a" not in page1 + rest
+    assert rest.count("p/zzz") == 1
+    assert sorted(page1 + rest) == page1 + rest   # still globally sorted
+
+
+def test_key_deleted_between_pages_never_appears():
+    store = _store_with_keys(16, page=8)
+    page1, token = store.list_by_prefix("p")
+    store.inner.unlink("p/f10")                   # lives past the token
+    rest = []
+    while token is not None:
+        got, token = store.list_by_prefix("p", token)
+        rest.extend(got)
+    assert "p/f10" not in rest
+    assert set(page1).isdisjoint(rest)            # no duplicates either
+
+
+def test_pagination_billing_first_page_fresh_rest_pipelined():
+    store = _store_with_keys(15, page=8)
+    base = store.request_count
+    _drain(store, "p")
+    assert store.request_count == base + 2
+    assert store.requests_by_class["list"] >= 2
+    # fresh first page pays rtt; continuation only per-request overhead
+    m = store.model
+    assert store.busy_s == pytest.approx(m.rtt_s + m.per_request_s)
+
+
+class _GatedStore(ObjectStoreBackend):
+    """Wedges the speculative batch mid-fetch so a racing mutation is
+    provably admitted while the listing is in flight."""
+
+    def __init__(self):
+        super().__init__()
+        self.entered = threading.Event()
+        self.gate = threading.Event()
+
+    def readdir_plus_vec(self, paths):
+        self.entered.set()
+        self.gate.wait(5.0)
+        return super().readdir_plus_vec(paths)
+
+
+def test_racing_mutation_cancels_speculative_listing_on_object_store():
+    """A rmdir admitted while a paginated listing's speculative batch is
+    mid-flight: the ticket must cancel and nothing stale may install."""
+    store = _GatedStore()
+    store.inner.mkdir("pre")
+    store.inner.mkdir("pre/d0")
+    store.inner.mkdir("pre/d1")
+    fs = CannyFS(store, workers=4, echo_errors=False)
+    fs.readdir("pre")                 # miss -> seeds d0, d1 -> batch
+    assert store.entered.wait(5.0)    # batch provably mid-fetch
+    fs.rmdir("pre/d0")                # racing admitted mutation
+    store.gate.set()
+    fs.drain()
+    ov = fs.engine.overlay
+    assert ov.readdir("pre/d0") is None           # not resurrected
+    assert ov.lookup("pre/d0") is False
+    st = fs.stats
+    assert st.prefetch_cancelled + st.prefetch_wasted >= 1
+    assert "pre/d0" not in store.snapshot()["dirs"]
+    assert len(fs.ledger) == 0
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# rule 5: cost-gated rename retarget
+# ---------------------------------------------------------------------------
+
+def _build_and_rename(fs):
+    fs.makedirs("d")
+    with fs.open("d/tmp", "wb") as f:
+        f.write(b"hello ")
+        f.write(b"world")
+    fs.chmod("d/tmp", 0o600)
+    fs.rename("d/tmp", "d/final")
+
+
+def test_object_store_rename_retargets_pending_chain():
+    store = ObjectStoreBackend(clock=SimClock())
+    fs = CannyFS(store, workers=4, echo_errors=False)
+    _build_and_rename(fs)
+    fs.close()
+    assert fs.stats.renames_retargeted == 1
+    # the rename's COPY+DELETE never happened: the only copy is the
+    # replayed chmod's metadata self-COPY, and nothing was deleted
+    assert store.requests_by_class["copy"] == 1
+    assert store.requests_by_class["delete"] == 0
+    snap = store.snapshot()
+    assert snap["files"] == {"d/final": b"hello world"}
+    assert store.stat("d/final").mode == 0o600    # metadata replayed too
+    assert len(fs.ledger) == 0
+
+
+def test_remote_stream_native_rename_never_retargets():
+    remote = RemoteStreamBackend(clock=SimClock())
+    fs = CannyFS(remote, workers=4, echo_errors=False)
+    _build_and_rename(fs)
+    fs.close()
+    assert fs.stats.renames_retargeted == 0
+    snap = remote.snapshot()
+    assert snap["files"] == {"d/final": b"hello world"}
+    assert len(fs.ledger) == 0
+
+
+def test_retarget_forced_off_pays_the_copy():
+    store = ObjectStoreBackend(clock=SimClock())
+    fs = CannyFS(store, workers=4, echo_errors=False,
+                 fusion=FusionPolicy(retarget_renames=False))
+    _build_and_rename(fs)
+    fs.close()
+    assert fs.stats.renames_retargeted == 0
+    assert store.requests_by_class["copy"] >= 1
+    assert store.snapshot()["files"] == {"d/final": b"hello world"}
+
+
+def test_retarget_forced_on_fires_on_posix_media():
+    lb = _nfs(clock=SimClock())
+    fs = CannyFS(lb, workers=4, echo_errors=False,
+                 fusion=FusionPolicy(retarget_renames=True))
+    _build_and_rename(fs)
+    fs.close()
+    assert fs.stats.renames_retargeted == 1
+    assert lb.inner.snapshot()["files"] == {"d/final": b"hello world"}
+    assert len(fs.ledger) == 0
+
+
+def test_auto_retarget_stays_off_on_latency_backend():
+    lb = _nfs(clock=SimClock())
+    fs = CannyFS(lb, workers=4, echo_errors=False)
+    _build_and_rename(fs)
+    fs.close()
+    assert fs.stats.renames_retargeted == 0      # rename ~ create cost
+    assert lb.inner.snapshot()["files"] == {"d/final": b"hello world"}
+
+
+def test_pre_existing_source_falls_back_to_plain_rename():
+    """No pending create anchoring the chain -> capture refuses, the
+    backend rename (copy+delete) runs, state stays correct."""
+    store = ObjectStoreBackend(clock=SimClock())
+    store.inner.mkdir("d")
+    store.inner.create("d/old")
+    store.inner.write_at("d/old", 0, b"data")
+    fs = CannyFS(store, workers=4, echo_errors=False)
+    fs.rename("d/old", "d/new")
+    fs.close()
+    assert fs.stats.renames_retargeted == 0
+    assert store.requests_by_class["copy"] >= 1
+    assert store.snapshot()["files"] == {"d/new": b"data"}
+    assert len(fs.ledger) == 0
+
+
+# ---------------------------------------------------------------------------
+# whole-object PUT semantics
+# ---------------------------------------------------------------------------
+
+def test_covering_write_vec_is_one_put_no_rmw():
+    store = ObjectStoreBackend()
+    store.inner.create("k")
+    store.write_vec("k", [(0, b"abcd"), (4, b"efgh")])
+    assert store.whole_object_puts == 1 and store.rmw_gets == 0
+    assert store.snapshot()["files"]["k"] == b"abcdefgh"
+
+
+def test_non_covering_write_pays_rmw_get():
+    store = ObjectStoreBackend()
+    store.inner.create("k")
+    store.inner.write_at("k", 0, b"0123456789")
+    store.write_at("k", 4, b"XX")                 # splice: GET + PUT
+    assert store.rmw_gets == 1 and store.whole_object_puts == 1
+    assert store.snapshot()["files"]["k"] == b"0123XX6789"
+
+
+def test_remote_vectored_ops_are_one_roundtrip():
+    remote = RemoteStreamBackend()
+    remote.inner.mkdir("d")
+    for i in range(6):
+        remote.inner.create(f"d/f{i}")
+    base = remote.op_count
+    remote.stat_vec([f"d/f{i}" for i in range(6)])
+    assert remote.op_count == base + 1
+    remote.readdir_plus_vec(["d"])
+    assert remote.op_count == base + 2
+    remote.write_vec("d/f0", [(0, b"a"), (1, b"b"), (2, b"c")])
+    assert remote.op_count == base + 3
