@@ -16,9 +16,20 @@ faulted and timing always vary with worker scheduling, and a capped fire
 landing exactly at an attempt boundary can occasionally shift a
 retry/rollback count by one.
 
+``--kill-rate`` adds the PR 9 preemption axis: each matching op may be
+a seeded ``outcome="kill"`` (``ProcessKilled``, backend dead) instead of
+an errno.  Killed cells run with the durability spill armed; on each
+preemption the harness revives the storage, mounts fresh and
+``CannyFS.resume()``s from the spill before re-executing — the rows gain
+kills-fired / resume / ops-redone / convergence columns, where redo and
+convergence are measured against a kill-free reference run of the same
+cell.
+
     PYTHONPATH=src python -m benchmarks.fault_sweep --seed 0
     PYTHONPATH=src python -m benchmarks.fault_sweep --seed 0 \\
         --fault-rates 0 0.01 0.05 --quota-frac 1.25 --out sweep.json
+    PYTHONPATH=src python -m benchmarks.fault_sweep --seed 0 \\
+        --fault-rates 0 --kill-rate 0.002
 """
 from __future__ import annotations
 
@@ -29,10 +40,13 @@ import time
 
 from repro.core import (CannyFS, EagerFlags, FaultInjectingBackend, FaultPlan,
                         FaultRule, InMemoryBackend, LatencyBackend,
-                        LatencyModel, QuotaBackend, RealClock, VirtualClock,
-                        run_transaction)
+                        LatencyModel, ProcessKilled, QuotaBackend, RealClock,
+                        VirtualClock, run_transaction)
 
+from .resume_guard import OpCountingBackend, _state_digest
 from .workloads import TreeSpec, synth_tree
+
+SPILL_DIR = ".spill"
 
 # ops the chaos plan may fail.  Reads/readdir/stat are excluded so the
 # workload's control flow stays valid; unlink/rmdir/remove_tree are included
@@ -47,18 +61,22 @@ CHAOS_OPS = ("mkdir", "create", "write", "unlink", "rmdir", "remove_tree",
 def build_stack(*, fault_rate: float, seed: int, quota_bytes: int | None,
                 load: float = 1.0, max_failures: int = 3,
                 virtual: bool = True, short_rate: float = 0.0,
-                spike_rate: float = 0.0, spike_ms: float = 50.0):
-    """-> (top backend, inner InMemoryBackend, plan, clock).
+                spike_rate: float = 0.0, spike_ms: float = 50.0,
+                kill_rate: float = 0.0, max_kills: int = 3):
+    """-> (top backend, inner InMemoryBackend, counted shim, plan, clock).
 
     ``short_rate`` adds torn-op faults (writes land a short count instead
     of raising); ``spike_rate``/``spike_ms`` add per-rule latency spikes
     (slow ops, not failed ops — the straggler/backpressure stressor).
     Spikes sleep on the same clock as the latency layer, so virtual runs
-    replay them without real stalls."""
+    replay them without real stalls.  ``kill_rate`` adds seeded
+    ``outcome="kill"`` preemptions (``ProcessKilled``, backend dead until
+    ``revive()``), at most ``max_kills`` per cell."""
     inner = InMemoryBackend()
+    counted = OpCountingBackend(inner, spill_dir=SPILL_DIR)
     clock = VirtualClock() if virtual else RealClock()
     remote = LatencyBackend(
-        inner,
+        counted,
         LatencyModel(meta_ms=1.5, data_ms=1.5, jitter_sigma=0.3,
                      load=load, seed=seed),
         clock=clock)
@@ -78,8 +96,15 @@ def build_stack(*, fault_rate: float, seed: int, quota_bytes: int | None,
         rules.append(FaultRule(outcome="delay", ops=CHAOS_OPS,
                                probability=spike_rate,
                                delay_s=spike_ms / 1e3))
+    if kill_rate > 0:
+        # each firing needs a revive() before the next can land, so
+        # max_failures caps the cell's total preemptions
+        rules.append(FaultRule(outcome="kill", ops=CHAOS_OPS,
+                               probability=kill_rate,
+                               max_failures=max_kills))
     plan = FaultPlan(rules, seed=seed)
-    return FaultInjectingBackend(stack, plan, clock=clock), inner, plan, clock
+    top = FaultInjectingBackend(stack, plan, clock=clock)
+    return top, inner, counted, plan, clock
 
 
 def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
@@ -87,23 +112,87 @@ def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
                      spec: TreeSpec | None = None,
                      retries: int = 6, virtual: bool = True,
                      short_rate: float = 0.0, spike_rate: float = 0.0,
-                     spike_ms: float = 50.0) -> dict:
+                     spike_ms: float = 50.0, kill_rate: float = 0.0,
+                     max_kills: int = 3) -> dict:
     """One sweep cell: extract then rmtree, each as a resubmittable
     transaction; returns the measured row.  ``virtual=False`` pays real
-    sleeps, making ``wall_s`` the paper-comparable end-to-end time."""
+    sleeps, making ``wall_s`` the paper-comparable end-to-end time.
+
+    With ``kill_rate`` > 0 the cell runs with the durability spill armed
+    and survives up to ``max_kills`` seeded preemptions: each
+    ``ProcessKilled`` revives the storage, mounts fresh and resumes from
+    the spill before re-executing the interrupted transaction.  Redo and
+    convergence columns compare against a kill-free reference run of the
+    same cell (one extra run per killed cell)."""
     spec = spec or TreeSpec(n_files=120, n_dirs=12, mean_kb=4.0).scaled()
+    reference = None
+    if kill_rate > 0:
+        reference = run_chaos_config(
+            fault_rate=fault_rate, eager=eager, seed=seed,
+            quota_frac=quota_frac, spec=spec, retries=retries,
+            virtual=virtual, short_rate=short_rate, spike_rate=spike_rate,
+            spike_ms=spike_ms)
     dirs, files = synth_tree(spec)
     tree_bytes = sum(len(d) for _, d in files)
     quota_bytes = (int(tree_bytes * quota_frac)
                    if quota_frac is not None else None)
-    backend, inner, plan, clock = build_stack(
+    backend, inner, counted, plan, clock = build_stack(
         fault_rate=fault_rate, seed=seed, quota_bytes=quota_bytes,
         virtual=virtual, short_rate=short_rate, spike_rate=spike_rate,
-        spike_ms=spike_ms)
+        spike_ms=spike_ms, kill_rate=kill_rate, max_kills=max_kills)
     flags = EagerFlags() if eager else EagerFlags.all_off()
-    fs = CannyFS(backend, flags=flags, max_inflight=4000,
-                 workers=32 if eager else 2,
-                 echo_errors=False)  # chaos is expected; keep stderr quiet
+    workers = 32 if eager else 2
+
+    def mount() -> CannyFS:
+        return CannyFS(backend, flags=flags, max_inflight=4000,
+                       workers=workers,
+                       echo_errors=False)  # chaos is expected; keep quiet
+
+    fs = mount()
+    spilled = kill_rate > 0
+    if spilled:
+        fs.enable_spill(SPILL_DIR)
+    kills_fired = resumes = resume_replayed = 0
+    acc = {"retries": 0, "rollbacks": 0, "rollback_leftovers": 0,
+           "deferred_errors": 0, "fused_writes": 0, "elided_ops": 0,
+           "submitted": 0, "ledger": 0, "resume_elided": 0}
+
+    def accumulate(f: CannyFS) -> None:
+        st = f.stats
+        acc["retries"] += st.retries
+        acc["rollbacks"] += st.rollbacks
+        acc["rollback_leftovers"] += st.rollback_leftovers
+        acc["deferred_errors"] += st.deferred_errors
+        acc["fused_writes"] += st.fused_writes
+        acc["elided_ops"] += st.elided_ops
+        acc["submitted"] += st.submitted
+        acc["ledger"] += len(f.ledger)
+        acc["resume_elided"] += st.resume_elided_ops
+
+    def run_phase(f: CannyFS, body, name: str) -> CannyFS:
+        """run_transaction surviving preemptions: revive + fresh mount +
+        resume from the spill, until the phase commits."""
+        nonlocal kills_fired, resumes, resume_replayed
+        while True:
+            try:
+                run_transaction(f, body, name=name, retries=retries)
+                return f
+            except ProcessKilled:
+                kills_fired += 1
+                if kills_fired > max_kills:
+                    raise
+                accumulate(f)
+                try:
+                    f.close()
+                except Exception:
+                    pass
+                backend.revive()
+                f = mount()
+                rep = f.resume(SPILL_DIR)
+                resumes += 1
+                resume_replayed += rep.get("replayed", 0)
+                if rep.get("committed"):
+                    return f   # the kill hit mid-retirement: already done
 
     def extract(fs):
         for d in dirs:
@@ -122,14 +211,30 @@ def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
 
     t0 = time.monotonic()
     committed = True
+    extract_digest = None
     try:
-        run_transaction(fs, extract, name="extract", retries=retries)
-        run_transaction(fs, remove, name="remove", retries=retries)
-    except Exception:  # exhausted retries — report, don't crash the sweep
+        fs = run_phase(fs, extract, "extract")
+        fs.drain()
+        extract_digest = _state_digest(inner)
+        fs = run_phase(fs, remove, "remove")
+    except Exception:  # exhausted retries/kills — report, don't crash
         committed = False
     fs.drain()
     wall_s = time.monotonic() - t0
-    st = fs.stats
+    accumulate(fs)
+    snap = inner.snapshot()
+
+    def data_paths(paths):
+        return {p for p in paths
+                if p != SPILL_DIR and not p.startswith(SPILL_DIR + "/")}
+
+    clean = (not data_paths(snap["files"])
+             and not data_paths(snap["symlinks"])
+             and data_paths(snap["dirs"]) == {""})
+    converged = None
+    if reference is not None:
+        converged = bool(committed and clean
+                         and extract_digest == reference["extract_digest"])
     row = {
         "fault_rate": fault_rate,
         "eager": eager,
@@ -142,21 +247,32 @@ def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
         # (see module docstring for the attempt-boundary caveat)
         "virtual_s": (round(clock.now(), 2)
                       if isinstance(clock, VirtualClock) else None),
-        "retries": st.retries,
-        "rollbacks": st.rollbacks,
-        "rollback_leftovers": st.rollback_leftovers,
-        "ledger_final": len(fs.ledger),
-        "deferred_errors": st.deferred_errors,
+        "retries": acc["retries"],
+        "rollbacks": acc["rollbacks"],
+        "rollback_leftovers": acc["rollback_leftovers"],
+        "ledger_final": acc["ledger"],
+        "deferred_errors": acc["deferred_errors"],
         "injected_faults": plan.injected,
         "latency_spikes": plan.delayed,
         "spike_stall_s": round(plan.delay_s_total, 3),
-        "fused_writes": st.fused_writes,
-        "elided_ops": st.elided_ops,
-        "ops_submitted": st.submitted,
+        "fused_writes": acc["fused_writes"],
+        "elided_ops": acc["elided_ops"],
+        "ops_submitted": acc["submitted"],
         "committed": committed,
-        "rolled_back_then_succeeded": committed and st.rollbacks > 0,
-        "clean_namespace": (lambda s: not s["files"] and not s["symlinks"]
-                            and s["dirs"] == {""})(inner.snapshot()),
+        "rolled_back_then_succeeded": committed and acc["rollbacks"] > 0,
+        "clean_namespace": clean,
+        # -- PR 9 preempt/resume columns ------------------------------
+        "kill_rate": kill_rate,
+        "kills_fired": kills_fired,
+        "resumes": resumes,
+        "resume_replayed": resume_replayed,
+        "resume_elided_ops": acc["resume_elided"],
+        "data_ops_applied": counted.data_ops,
+        "extract_digest": extract_digest,
+        "ops_redone": (max(0, counted.data_ops
+                           - reference["data_ops_applied"])
+                       if reference is not None else 0),
+        "resume_converged": converged,
     }
     fs.close()
     return row
@@ -164,7 +280,8 @@ def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
 
 def sweep(*, seed: int, fault_rates, eager_modes=(True, False),
           quota_frac: float | None = None, short_rate: float = 0.0,
-          spike_rate: float = 0.0, spike_ms: float = 50.0) -> list[dict]:
+          spike_rate: float = 0.0, spike_ms: float = 50.0,
+          kill_rate: float = 0.0, max_kills: int = 3) -> list[dict]:
     rows = []
     for rate in fault_rates:
         for eager in eager_modes:
@@ -172,7 +289,9 @@ def sweep(*, seed: int, fault_rates, eager_modes=(True, False),
                                          seed=seed, quota_frac=quota_frac,
                                          short_rate=short_rate,
                                          spike_rate=spike_rate,
-                                         spike_ms=spike_ms))
+                                         spike_ms=spike_ms,
+                                         kill_rate=kill_rate,
+                                         max_kills=max_kills))
     return rows
 
 
@@ -190,11 +309,17 @@ def main() -> None:
                     help="probability an op takes a latency spike")
     ap.add_argument("--spike-ms", type=float, default=50.0,
                     help="latency spike length (virtual ms)")
+    ap.add_argument("--kill-rate", type=float, default=0.0,
+                    help="probability an op is a ProcessKilled preemption "
+                         "(arms the durability spill + resume loop)")
+    ap.add_argument("--max-kills", type=int, default=3,
+                    help="preemption budget per cell")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args()
     rows = sweep(seed=args.seed, fault_rates=args.fault_rates,
                  quota_frac=args.quota_frac, short_rate=args.short_rate,
-                 spike_rate=args.spike_rate, spike_ms=args.spike_ms)
+                 spike_rate=args.spike_rate, spike_ms=args.spike_ms,
+                 kill_rate=args.kill_rate, max_kills=args.max_kills)
     doc = {"seed": args.seed, "rows": rows}
     text = json.dumps(doc, indent=2)
     if args.out:  # persist before stdout: a closed pipe must not lose the file
@@ -202,11 +327,20 @@ def main() -> None:
             f.write(text + "\n")
     print(text)
     # sanity for the harness: under faults, at least one cell should show
-    # the paper's rollback + successful resubmission.  With an explicit
+    # the paper's rollback + successful resubmission (or, on the kill
+    # axis, a preemption that resumed and converged).  With an explicit
     # quota the operator may have constructed a can-never-fit experiment —
     # warn but exit 0; without one, non-convergence is a harness bug.
+    killed_ok = any(r["kills_fired"] > 0 and r["resume_converged"]
+                    for r in rows)
+    if any(r["kills_fired"] > 0 and r["resume_converged"] is False
+           for r in rows):
+        print("fault_sweep: error: a preempted cell resumed without "
+              "converging to its kill-free reference", file=sys.stderr)
+        sys.exit(1)
     if any(r["injected_faults"] > 0 for r in rows) and \
-            not any(r["rolled_back_then_succeeded"] for r in rows):
+            not any(r["rolled_back_then_succeeded"] for r in rows) and \
+            not killed_ok:
         print("fault_sweep: warning: no config demonstrated rollback + "
               "successful resubmission", file=sys.stderr)
         if args.quota_frac is None:

@@ -1,0 +1,346 @@
+"""CI regression guard for the durability spill + crash-resume path
+(PR 9).  Emits ``BENCH_pr9.json`` and FAILS (exit 1) when a preempted
+transaction stops resuming cheaply — or stops resuming *correctly*.
+
+Default mode is the **discrete-event simulation** (``SimClock``) at
+``REPRO_BENCH_SCALE=1.0``: the extractor, the pool workers and the
+spill's speculative flush lane are all actors of one event-queue
+simulation, so *which* journal records land before the injected kill is
+a pure function of the manifest and the fault plan — same seed, same
+``PYTHONHASHSEED``, byte-identical payload.
+
+The workload is the paper's transactional batch job: extract a
+kernel-shaped tree (mkdir sweep + create/write/chmod per file), then
+``rmtree`` one subtree — run under ``run_transaction`` with the spill
+armed.  The guard preempts it with ``FaultRule(outcome="kill")`` at
+seeded points (15% / 50% / 85% of the from-scratch mutating-call
+stream), then mounts FRESH state, ``CannyFS.resume()``s from the spill
+and re-executes the same body.  Three properties gate CI:
+
+1. **Convergence** — the preempted-and-resumed run's final backend
+   state (paths, bytes, modes, links; the spill dir excluded) must
+   digest-match the uninterrupted baseline, at every kill point.
+
+2. **Bounded redo** — total *data-root* mutating backend ops across
+   the killed attempt plus the resume may exceed the from-scratch cost
+   by at most ``MAX_REDONE_FRACTION`` (25%): the resume re-proves the
+   window from the journal and elides/diverts provably-durable ops
+   instead of re-extracting the tree.
+
+3. **Resume did the claimed work** — mid/late kills must show replayed
+   journal events and elided re-run ops (> 0), so the bound cannot be
+   met vacuously by a no-op spill.
+
+``--paced`` switches to the paced-real smoke (``PacedVirtualClock``:
+scaled real sleeps under genuine threading): the convergence and redo
+bounds still hold — resume correctness is schedule-independent — but
+the payload is not byte-stable, so it stays non-blocking.
+
+    PYTHONPATH=src PYTHONHASHSEED=0 REPRO_BENCH_SCALE=1.0 python -m benchmarks.resume_guard
+    PYTHONPATH=src REPRO_BENCH_SCALE=0.25 python -m benchmarks.resume_guard --paced
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+
+from repro.core import (CannyFS, FaultInjectingBackend, FaultPlan, FaultRule,
+                        InMemoryBackend, LatencyBackend, LatencyModel,
+                        ProcessKilled, SimClock, run_transaction)
+
+from .workloads import PacedVirtualClock, TreeSpec, bench_scale, synth_tree
+
+MAX_REDONE_FRACTION = 0.25
+KILL_FRACTIONS = (0.15, 0.50, 0.85)   # of the from-scratch mutating calls
+SPILL_DIR = ".spill"
+FLUSH_RECORDS = 8     # small chunks: the uncertainty window stays tight
+META_MS = 1.5         # NFS-shaped roundtrips, jitter pinned to zero
+BW_MB_S = 110.0
+PACE = 0.05
+WORKERS = 8
+RM_TARGET = 0.12      # aim the rmtree at ~12% of the extracted files
+
+MUTATING_OPS = ("mkdir", "create", "write_at", "write_vec", "unlink",
+                "rmdir", "rename", "remove_tree", "chmod", "truncate")
+# the fault plan's matching kinds: write_at/write_vec both gate as "write"
+GATE_KINDS = ("mkdir", "create", "write", "unlink", "rmdir", "rename",
+              "remove_tree", "chmod", "truncate")
+
+
+class OpCountingBackend:
+    """Innermost counting shim: tallies mutating ops that actually
+    *applied* to storage, split data-root vs spill-dir.  Sits below the
+    fault injector, so a killed (never-applied) op is not counted —
+    exactly the ledger the redo bound is stated over."""
+
+    def __init__(self, inner, spill_dir: str = SPILL_DIR):
+        self._inner = inner
+        self._spill_prefix = spill_dir
+        self.data_ops = 0
+        self.spill_ops = 0
+        self.per_op: dict[str, int] = {}
+        for name in MUTATING_OPS:
+            if hasattr(inner, name):
+                setattr(self, name, self._wrap(name))
+
+    def _wrap(self, name):
+        fn = getattr(self._inner, name)
+
+        def call(path, *args, **kwargs):
+            out = fn(path, *args, **kwargs)
+            p = str(path)
+            if p == self._spill_prefix or \
+                    p.startswith(self._spill_prefix + "/"):
+                self.spill_ops += 1
+            else:
+                self.data_ops += 1
+                self.per_op[name] = self.per_op.get(name, 0) + 1
+            return out
+
+        return call
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def _state_digest(mem: InMemoryBackend) -> str:
+    """Canonical digest of the backend image (paths, bytes, modes,
+    symlink targets), spill dir excluded — two runs converged iff their
+    digests match."""
+    def visible(p: str) -> bool:
+        return not (p == SPILL_DIR or p.startswith(SPILL_DIR + "/"))
+
+    snap = mem.snapshot()
+    lines = []
+    for p in sorted(snap["files"]):
+        if visible(p):
+            lines.append(f"F {p} {mem.stat(p).mode:o} "
+                         f"{hashlib.sha256(snap['files'][p]).hexdigest()}")
+    for p in sorted(snap["dirs"]):
+        if visible(p):
+            lines.append(f"D {p} {mem.stat(p).mode:o}")
+    for p in sorted(snap["symlinks"]):
+        if visible(p):
+            lines.append(f"L {p} {snap['symlinks'][p]}")
+    return hashlib.sha256("\n".join(lines).encode()).hexdigest()
+
+
+def _rm_root(dirs, files) -> str:
+    """The subtree the job removes: the directory whose recursive file
+    share is closest to ``RM_TARGET`` — deterministic in the manifest."""
+    def share(d: str) -> float:
+        pre = d + "/"
+        return sum(1 for p, _ in files if p.startswith(pre)) / len(files)
+
+    candidates = [d for d in dirs if d != "src"]
+    return min(candidates, key=lambda d: (abs(share(d) - RM_TARGET), d))
+
+
+def _make_body(dirs, files, rm_root):
+    """extract + rmtree with FIXED arguments — re-executed verbatim on
+    resume, so elision/diversion can prove op identity."""
+    def body(fs: CannyFS):
+        for d in dirs:
+            fs.makedirs(d)
+        for path, data in files:
+            fs.write_file(path, data)
+            fs.chmod(path, 0o644)
+        fs.rmtree(rm_root)
+    return body
+
+
+def _mount(counting, mode: str, plan: FaultPlan | None):
+    clock = SimClock() if mode == "sim" else PacedVirtualClock(pace=PACE)
+    remote = LatencyBackend(
+        counting, LatencyModel(meta_ms=META_MS, data_ms=META_MS,
+                               bandwidth_mb_s=BW_MB_S, jitter_sigma=0.0,
+                               seed=5), clock=clock)
+    backend = remote if plan is None else \
+        FaultInjectingBackend(remote, plan, clock=clock)
+    fs = CannyFS(backend, max_inflight=4000, workers=WORKERS,
+                 echo_errors=False)
+    return fs, clock
+
+
+def _baseline(body, mode: str) -> dict:
+    mem = InMemoryBackend()
+    counting = OpCountingBackend(mem)
+    fs, clock = _mount(counting, mode, FaultPlan([], seed=13))
+    fs.enable_spill(SPILL_DIR, flush_records=FLUSH_RECORDS)
+    run_transaction(fs, body, name="extract", retries=0)
+    fs.close()
+    return {
+        "data_ops": counting.data_ops,
+        "spill_ops": counting.spill_ops,
+        "mutating_calls": counting.data_ops + counting.spill_ops,
+        "per_op": dict(sorted(counting.per_op.items())),
+        "makespan_virtual_s": clock.makespan(),
+        "spill_records": fs.stats.spill_records,
+        "spill_cuts": fs.stats.spill_cuts,
+        "ledger": len(fs.ledger),
+        "state_digest": _state_digest(mem),
+    }
+
+
+def _preempted(body, mode: str, fraction: float, kill_after: int) -> dict:
+    mem = InMemoryBackend()
+    counting = OpCountingBackend(mem)
+    plan = FaultPlan([FaultRule(ops=GATE_KINDS, after_count=kill_after,
+                                max_failures=1, outcome="kill")], seed=13)
+    fs, clock = _mount(counting, mode, plan)
+    fs.enable_spill(SPILL_DIR, flush_records=FLUSH_RECORDS)
+    killed = False
+    try:
+        run_transaction(fs, body, name="extract", retries=0)
+    except ProcessKilled:
+        killed = True
+    try:
+        fs.close()
+    except Exception:
+        pass
+    killrun_ops = counting.data_ops
+
+    # fresh mount over the survived state: dropping the fault wrapper IS
+    # the revive (the dead flag lived on it), the spill dir persists
+    fs2, clock2 = _mount(counting, mode, None)
+    report = fs2.resume(SPILL_DIR, flush_records=FLUSH_RECORDS)
+    committed_early = bool(report.get("committed"))
+    if not committed_early:
+        run_transaction(fs2, body, name="extract", retries=0)
+    fs2.close()
+    resume_ops = counting.data_ops - killrun_ops
+    return {
+        "fraction": fraction,
+        "kill_after": kill_after,
+        "killed": killed,
+        "committed_early": committed_early,
+        "killrun_data_ops": killrun_ops,
+        "resume_data_ops": resume_ops,
+        "spill_ops": counting.spill_ops,
+        "resume_records": report.get("records", 0),
+        "resume_replayed": report.get("replayed", 0),
+        "resume_repairs": report.get("repairs", 0),
+        "resume_elided_ops": fs2.stats.resume_elided_ops,
+        "resume_makespan_virtual_s": clock2.makespan(),
+        "ledger": len(fs2.ledger),
+        "state_digest": _state_digest(mem),
+    }
+
+
+def build_report(mode: str = "sim") -> dict:
+    spec = TreeSpec(n_files=900, n_dirs=90, seed=17).scaled()
+    dirs, files = synth_tree(spec)
+    rm_root = _rm_root(dirs, files)
+    body = _make_body(dirs, files, rm_root)
+    base = _baseline(body, mode)
+    preemptions = [
+        _preempted(body, mode, f,
+                   max(1, int(base["mutating_calls"] * f)))
+        for f in KILL_FRACTIONS
+    ]
+    return {
+        "mode": mode,
+        "spec": {"n_dirs": len(dirs), "n_files": len(files),
+                 "rm_root": rm_root,
+                 "rm_files": sum(1 for p, _ in files
+                                 if p.startswith(rm_root + "/"))},
+        "flush_records": FLUSH_RECORDS,
+        "max_redone_fraction": MAX_REDONE_FRACTION,
+        "baseline": base,
+        "preemptions": preemptions,
+    }
+
+
+def _redone(pre: dict, base: dict) -> int:
+    return max(0, pre["killrun_data_ops"] + pre["resume_data_ops"]
+               - base["data_ops"])
+
+
+def check(report: dict) -> list[str]:
+    """Return the list of FAIL strings for a report (empty == pass)."""
+    failures = []
+    base = report["baseline"]
+    if base["ledger"]:
+        failures.append(
+            f"baseline left {base['ledger']} deferred errors on a "
+            "fault-free run")
+    if base["spill_records"] == 0 or base["spill_cuts"] == 0:
+        failures.append(
+            "baseline spilled no records/cuts — the durability journal "
+            "never engaged and every downstream bound is vacuous")
+    budget = int(MAX_REDONE_FRACTION * base["data_ops"])
+    for pre in report["preemptions"]:
+        tag = f"kill@{pre['fraction']:.0%}"
+        if not pre["killed"]:
+            failures.append(
+                f"{tag}: the injected preemption never fired "
+                f"(after_count={pre['kill_after']})")
+            continue
+        if pre["state_digest"] != base["state_digest"]:
+            failures.append(
+                f"{tag}: resumed state digest {pre['state_digest'][:12]} "
+                f"!= baseline {base['state_digest'][:12]} — recovery did "
+                "not converge to the uninterrupted run")
+        redone = _redone(pre, base)
+        if redone > budget:
+            failures.append(
+                f"{tag}: {redone} data ops redone exceeds the "
+                f"{MAX_REDONE_FRACTION:.0%} budget ({budget} of "
+                f"{base['data_ops']}) — resume stopped eliding durable "
+                "work")
+        if pre["committed_early"]:
+            continue
+        if pre["fraction"] >= 0.5 and pre["resume_replayed"] == 0:
+            failures.append(
+                f"{tag}: resume replayed zero journal events after a "
+                "mid-run kill — the overlay delta was re-walked, not "
+                "re-proved")
+        if pre["fraction"] >= 0.5 and pre["resume_elided_ops"] == 0:
+            failures.append(
+                f"{tag}: the re-run elided zero provably-durable ops — "
+                "the redo bound is holding by accident")
+        if pre["ledger"]:
+            failures.append(
+                f"{tag}: resume left {pre['ledger']} deferred errors")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--paced", action="store_true",
+                    help="paced-real smoke mode (nondeterministic, "
+                         "non-blocking) instead of the simulation")
+    args = ap.parse_args(argv)
+    mode = "paced" if args.paced else "sim"
+    report = build_report(mode)
+    with open("BENCH_pr9.json", "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    base = report["baseline"]
+    print(f"[{mode}] baseline: data_ops={base['data_ops']} "
+          f"spill_ops={base['spill_ops']} "
+          f"records={base['spill_records']} cuts={base['spill_cuts']} "
+          f"makespan={base['makespan_virtual_s']:.2f}s "
+          f"scale={bench_scale()}")
+    for pre in report["preemptions"]:
+        redone = _redone(pre, base)
+        print(f"[{mode}] kill@{pre['fraction']:.0%} "
+              f"(after {pre['kill_after']} calls): "
+              f"killrun={pre['killrun_data_ops']} "
+              f"resume={pre['resume_data_ops']} "
+              f"redone={redone} "
+              f"(budget {int(MAX_REDONE_FRACTION * base['data_ops'])}) "
+              f"replayed={pre['resume_replayed']} "
+              f"elided={pre['resume_elided_ops']} "
+              f"repairs={pre['resume_repairs']} "
+              f"converged={pre['state_digest'] == base['state_digest']}"
+              + (" committed-early" if pre["committed_early"] else ""))
+    failures = check(report)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

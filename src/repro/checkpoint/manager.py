@@ -29,6 +29,7 @@ import jax
 import numpy as np
 
 from repro.core import CannyFS, is_under, norm_path
+from repro.core.durability import commit_marker_ok
 from repro.core.errors import CannyError
 
 # ledger kinds that cannot be a checkpoint write failure — a failed or
@@ -129,10 +130,9 @@ class TransactionalCheckpointManager:
             data = self.fs.read_file(f"{self._step_dir(step)}/{COMMIT_FILE}")
         except FileNotFoundError:
             return False
-        try:
-            ok = int(data.decode()) == step
-        except (ValueError, UnicodeDecodeError):
-            return False
+        # shared marker discipline with the durability spill's CUT file:
+        # one validator, one notion of "content names the epoch/step"
+        ok = commit_marker_ok(data, step)
         if ok:
             self._committed_cache.add(step)
         return ok

@@ -120,15 +120,36 @@ fire per *fused* backend call (one ``write_vec``, ``readdir_plus_vec``,
 ``stat_vec``, ``read_vec`` or ``remove_tree`` of N engine ops is a
 single match — speculative batch faults are advisory and never reach
 the ledger), and torn writes surface as ``ShortWriteError``.
+
+Durability spill + resume (``core/durability.py``)
+--------------------------------------------------
+
+``fs.enable_spill(spill_dir)`` attaches a ``SpillManager`` that
+incrementally persists the open transaction's region journal and the
+namespace-overlay membership delta as an append-only, crc32-checksummed
+record log on the backend itself.  Spill chunks ride the scheduler's
+*speculative* low-priority lane (they never serialize the hot path); a
+COMMIT-style cut marker is stamped at every ``barrier``/``drain`` seal.
+After a ``ProcessKilled`` preemption (``FaultRule(outcome="kill")``), a
+fresh mount calls ``CannyFS.resume(spill_dir)`` instead of rolling the
+whole window back: the overlay delta is reinstalled without re-walking,
+the journal is replayed, in-flight ops at the kill point are probed and
+repaired, and re-executed ops that are provably durable (content
+verified against recorded per-segment checksums) are elided.
+``run_transaction`` treats ``ProcessKilled`` as preemption — no
+rollback, no retry — and its transient-fault retry loop now charges a
+seeded full-jitter exponential backoff on the injected clock.
 """
 from .backend import (Clock, CostHint, InMemoryBackend, LatencyBackend,
                       LatencyModel, LocalBackend, RealClock, StatResult,
                       StorageBackend, VirtualClock, is_under, norm_path,
                       parent_of)
+from .durability import SpillImage, SpillManager, commit_marker_ok
 from .engine import EagerIOEngine, EngineStats
 from .errors import (CannyError, EnginePoisonedError, ErrorLedger,
-                     LedgerEntry, OpCancelledError, RollbackLeakError,
-                     ShortWriteError, TransactionFailedError)
+                     LedgerEntry, OpCancelledError, ProcessKilled,
+                     RollbackLeakError, ShortWriteError,
+                     TransactionFailedError)
 from .faults import (FaultInjectingBackend, FaultPlan, FaultRule,
                      QuotaBackend, make_fault)
 from .flags import EagerFlags, N_FLAGS
@@ -152,11 +173,13 @@ __all__ = [
     "MetadataPrefetcher", "N_FLAGS",
     "NamespaceOverlay", "ObjectStoreBackend", "ObjectStoreModel",
     "OpCancelledError", "OverlayPolicy",
-    "PrefetchPolicy", "QuotaBackend",
+    "PrefetchPolicy", "ProcessKilled", "QuotaBackend",
     "RemoteStreamBackend", "RemoteStreamModel",
     "ReadAheadManager", "ReadPolicy", "RealClock", "RemoveWitness",
     "RollbackLeakError", "SimClock",
-    "ShortWriteError", "SpeculationTicket", "StatResult", "StatVecBatcher",
+    "ShortWriteError", "SpeculationTicket", "SpillImage", "SpillManager",
+    "StatResult", "StatVecBatcher",
     "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
-    "is_under", "make_fault", "norm_path", "parent_of", "run_transaction",
+    "commit_marker_ok", "is_under", "make_fault", "norm_path", "parent_of",
+    "run_transaction",
 ]

@@ -84,6 +84,22 @@ Architecture (one op's life, left to right)::
         |  read-ahead manager and stat batcher size their batches  |
         |  and arm cost-gated rules from the storage actually at   |
         |  the bottom of the stack                                 |
+        +------+---------------------------------------------------+
+               |
+        +------v---------------------------------------------------+
+        |  Durability spill (core/durability.py)                   |
+        |  SpillManager taps submit (admit records) and _execute   |
+        |  (done/fail records, per-segment write checksums) and    |
+        |  appends an epoch-stamped, checksummed record log to the |
+        |  backend itself; chunks ride the scheduler's LOW-        |
+        |  PRIORITY speculative lane (durability never serializes  |
+        |  the hot path) and every barrier/drain CUTs: synchronous |
+        |  flush of outstanding chunks + COMMIT-style marker       |
+        |  stamp.  After a kill, CannyFS.resume(spill_dir) re-     |
+        |  proves the optimization window from the log — journal   |
+        |  reinstalled, durable ops elided/diverted on re-run,     |
+        |  uncertain in-flight ops repaired against the backend —  |
+        |  instead of redoing the whole job from scratch           |
         +----------------------------------------------------------+
 
 Semantics (paper §2–§3):
@@ -125,7 +141,11 @@ Semantics (paper §2–§3):
   ``stat_{batches,probes,probe_hits,probe_fallbacks}`` (the vectored
   read-side data plane, ``core/readahead.py``, controlled by
   ``ReadPolicy`` via the ``readahead=`` argument — same
-  policy/True/None/False convention).
+  policy/True/None/False convention), and
+  ``spill_{records,flushes,bytes,cuts}`` /
+  ``resume{s,_elided_ops,_replayed_ops,_repairs}`` (the durability
+  spill and crash-resume path, ``core/durability.py``, engaged by
+  ``CannyFS.enable_spill``/``CannyFS.resume``).
 * Failures of background ops land in the ErrorLedger; optional
   abort_on_error poisons the engine.  ``max_inflight`` bounds queued ops
   (fused absorptions don't consume new slots — coalescing is also
@@ -202,6 +222,15 @@ class EngineStats:
     stat_probe_fallbacks: int = 0  # probes that fell back to a sync stat
     # -- adaptive fusion sizing --------------------------------------------
     adaptive_max_bytes: int = 0  # latest BDP-derived write-coalescing clamp
+    # -- durability spill / crash-resume (core/durability.py) -------------
+    spill_records: int = 0       # admit/done/fail/journal records appended
+    spill_flushes: int = 0       # record chunks landed on the backend
+    spill_bytes: int = 0         # journal bytes written
+    spill_cuts: int = 0          # barrier/commit cuts that stamped the marker
+    resumes: int = 0             # CannyFS.resume() invocations
+    resume_elided_ops: int = 0   # re-run ops skipped as provably durable
+    resume_replayed_ops: int = 0  # done records replayed into the caches
+    resume_repairs: int = 0      # uncertain in-flight ops repaired on resume
     # -- fault / trace counters (chaos + error-path observability) --------
     deferred_errors: int = 0     # background failures recorded in the ledger
     injected_faults: int = 0     # of those, carried an `.injected` tag
@@ -305,6 +334,10 @@ class EagerIOEngine:
         self.ledger = ledger if ledger is not None else ErrorLedger()
         self.stats = EngineStats()
         self.stat_cache = _StatCache()
+        # the durability spill manager (core/durability.py), installed by
+        # CannyFS.enable_spill/resume; duck-typed so the engine layer does
+        # not import the durability module
+        self.spill = None
         if fusion is None or fusion is True:
             self.fusion = FusionPolicy()
         elif fusion is False:
@@ -414,6 +447,13 @@ class EagerIOEngine:
         sync → waits and returns the op's result (re-raising its error)."""
         t0 = time.monotonic()
         paths = tuple(norm_path(p) for p in paths)
+        sp = self.spill
+        if sp is not None:
+            # admit-before-schedule: a kill can now strike with the op
+            # recorded but unsettled, which resume treats as uncertain
+            # and repairs by probing — never the reverse (landed but
+            # unrecorded would be invisible)
+            sp.record_admit(kind, paths)
         # write-through cache + namespace-overlay updates ride on_admit —
         # after the budget admits the op but before the DAG publishes it,
         # so a fast-failing op's error-path invalidation (at completion,
@@ -591,6 +631,10 @@ class EagerIOEngine:
                 self.sim.wait_event(op.done)
             else:
                 op.done.wait()
+        if self.spill is not None:
+            # observation seal = durability cut: what the caller can now
+            # see is also what a resume can now prove
+            self.spill.cut()
 
     def drain(self) -> None:
         """Global barrier: wait for the whole DAG to execute.  The
@@ -605,6 +649,8 @@ class EagerIOEngine:
         finally:
             if pf is not None:
                 pf.resume()
+        if self.spill is not None:
+            self.spill.cut()
 
     # ------------------------------------------------------------------
     # error / lifecycle
@@ -700,6 +746,15 @@ class EagerIOEngine:
                     if self.abort_on_error:
                         self._sched.poison()
         op.finished_at = time.monotonic()
+        sp = self.spill
+        if sp is not None and not op.speculative:
+            # outcome settles here, before the error-path invalidation and
+            # outside every scheduler lock (recording may chunk-flush via
+            # the speculative lane, which takes the scheduler control lock)
+            if op.error is None and not op.cancelled:
+                sp.record_done(op, elided)
+            else:
+                sp.record_fail(op)
         if op.error is not None and not op.speculative:
             # the write-through cache and the namespace overlay recorded
             # this op's effect at ACK time; it never materialized (failed

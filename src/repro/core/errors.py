@@ -31,6 +31,17 @@ class RollbackLeakError(CannyError):
     succeeds anyway, so teardown reporting still surfaces the leak."""
 
 
+class ProcessKilled(CannyError):
+    """Simulated SIGKILL: the process (and with it the backend connection)
+    died mid-job.  Deliberately NOT an OSError — an in-process retry
+    cannot clear it (the process is 'gone'), so ``run_transaction`` must
+    neither roll back nor resubmit; recovery is a fresh mount's
+    ``CannyFS.resume(spill_dir)`` against the durable spill journal
+    (``core/durability.py``).  Raised by ``FaultInjectingBackend`` when a
+    ``FaultRule(outcome="kill")`` fires, and by every later call against
+    the dead backend."""
+
+
 class ShortWriteError(OSError, CannyError):
     """A (possibly fused/vectored) write landed fewer bytes than submitted
     — a torn op.  Carries errno EIO so the transactional retry loop treats

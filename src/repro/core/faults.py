@@ -12,7 +12,10 @@ if the stack can *produce* failures on demand.  This module provides:
   tear as a deferred ``ShortWriteError``) or a *latency spike*
   (``outcome="delay"``: the op sleeps ``delay_s`` on the backend's clock
   and then succeeds — slow ops, not failed ops, for the straggler/
-  backpressure path).
+  backpressure path) or as a *process death* (``outcome="kill"``: the op
+  raises ``ProcessKilled`` and the backend goes dead — every later call
+  fails the same way until ``revive()`` — the deterministic SIGKILL
+  simulation behind the preemption/resume harness).
 * ``FaultPlan``  — a seeded, thread-safe collection of rules.  The same
   seed always yields the same fault schedule, so ledger contents and
   rollback behaviour replay bit-identically in tests.
@@ -37,6 +40,7 @@ import threading
 from dataclasses import dataclass, field
 
 from .backend import Clock, RealClock, StorageBackend, is_under, norm_path
+from .errors import ProcessKilled
 
 # errno spellings accepted by FaultRule.error (connection loss raises a
 # ConnectionResetError, which the engine defers like any other OSError).
@@ -49,7 +53,7 @@ ERRNOS = {
 }
 
 
-OUTCOMES = ("raise", "short", "delay")
+OUTCOMES = ("raise", "short", "delay", "kill")
 
 
 def make_fault(error: str, path: str, *, outcome: str = "raise",
@@ -85,7 +89,10 @@ class FaultRule:
     errno, ``"short"`` makes a write land only ``short_fraction`` of its
     bytes and return the short count (torn op; matches write ops only),
     ``"delay"`` stalls the op ``delay_s`` seconds on the backend's clock
-    and then lets it succeed (latency spike).  Fault matching is per
+    and then lets it succeed (latency spike), ``"kill"`` raises
+    ``ProcessKilled`` *before* the op applies and leaves the backend dead
+    (preemption mid-flight: the admitted op never lands).  Fault matching
+    is per
     *backend call*: N engine writes coalesced into one ``write_vec`` are a
     single matching call, and a short outcome tears the fused vector as a
     unit."""
@@ -96,7 +103,7 @@ class FaultRule:
     probability: float = 1.0             # chance a matching call fires
     after_count: int = 0                 # skip the first N matching calls
     max_failures: int | None = None      # stop firing after N failures
-    outcome: str = "raise"               # "raise" | "short" | "delay"
+    outcome: str = "raise"               # "raise" | "short" | "delay" | "kill"
     short_fraction: float = 0.5          # of the payload, for "short"
     delay_s: float = 0.25                # stall length, for "delay"
 
@@ -139,6 +146,7 @@ class FaultPlan:
         self.injected_by_kind: dict[str, int] = {}
         self.delayed = 0                       # latency spikes fired
         self.delay_s_total = 0.0               # total injected stall time
+        self.kills = 0                         # process deaths fired
         self.op_counts: dict[str, int] = {}    # trace: every op seen
 
     # -- schedule control -------------------------------------------------
@@ -159,6 +167,7 @@ class FaultPlan:
             self.injected_by_kind = {}
             self.delayed = 0
             self.delay_s_total = 0.0
+            self.kills = 0
             self.op_counts = {}
 
     # -- the hot path -----------------------------------------------------
@@ -189,6 +198,11 @@ class FaultPlan:
                     # a spike is a slow success, not a fault: counted apart
                     self.delayed += 1
                     self.delay_s_total += rule.delay_s
+                elif rule.outcome == "kill":
+                    self.kills += 1
+                    self.injected += 1
+                    self.injected_by_kind[kind] = \
+                        self.injected_by_kind.get(kind, 0) + 1
                 else:
                     self.injected += 1
                     self.injected_by_kind[kind] = \
@@ -205,6 +219,7 @@ class FaultPlan:
                 "injected_by_kind": dict(self.injected_by_kind),
                 "delayed": self.delayed,
                 "delay_s_total": self.delay_s_total,
+                "kills": self.kills,
                 "match_counts": list(self.match_counts),
                 "fire_counts": list(self.fire_counts),
                 "ops_seen": dict(self.op_counts),
@@ -230,9 +245,16 @@ class FaultInjectingBackend(StorageBackend):
         self.inner = inner
         self.plan = plan
         self._fault_clock = clock or RealClock()
+        self._dead = False
 
     def __getattr__(self, name):  # delegate non-op attrs (snapshot, model…)
         return getattr(self.inner, name)
+
+    def revive(self) -> None:
+        """Clear the dead state: the 'fresh process re-attaches to the
+        same storage' step of a preemption test.  The plan's counters are
+        untouched — re-arm or expire it separately."""
+        self._dead = False
 
     def cost_hint(self, op: str, nbytes: int = 0):
         # explicit inward delegation: the StorageBackend base defines
@@ -243,7 +265,15 @@ class FaultInjectingBackend(StorageBackend):
     def _gate(self, kind: str, path: str) -> OSError | None:
         """Consult the plan.  Raise-outcome faults raise here; a delay
         outcome sleeps and clears; a short outcome is returned as a token
-        for the write paths to interpret (torn op)."""
+        for the write paths to interpret (torn op); a kill outcome flips
+        the backend dead and raises ``ProcessKilled`` — as does every
+        subsequent call, whatever the plan says (a dead process does not
+        come back by retrying)."""
+        if self._dead:
+            exc = ProcessKilled(f"backend is dead (injected kill): "
+                                f"{kind}({path})")
+            exc.injected = True
+            raise exc
         err = self.plan.check(kind, path)
         if err is None:
             return None
@@ -251,6 +281,12 @@ class FaultInjectingBackend(StorageBackend):
         if outcome == "delay":
             self._fault_clock.sleep(err.delay_s)
             return None
+        if outcome == "kill":
+            # pre-apply death: the gated op was admitted but never lands
+            self._dead = True
+            exc = ProcessKilled(f"injected kill during {kind}({path})")
+            exc.injected = True
+            raise exc
         if outcome == "short":
             return err
         raise err

@@ -14,6 +14,7 @@ from contextlib import contextmanager
 from typing import Iterable, Optional
 
 from .backend import StorageBackend, StatResult, norm_path, parent_of
+from .durability import SpillManager, _replay_kw
 from .engine import EagerIOEngine
 from .errors import ErrorLedger, ShortWriteError
 from .flags import EagerFlags
@@ -128,6 +129,12 @@ class CannyFS:
     def _submit(self, kind: str, paths: tuple[str, ...], fn, *,
                 cache_kw: dict | None = None, region=_REGION_UNSET,
                 payload=None):
+        sp = self.engine.spill
+        if sp is not None:
+            # real mutations poison the spill image for their paths (no
+            # later elision may trust run-1 state there) and force-settle
+            # any diverted stream they touch, keeping FIFO order intact
+            sp.note_paths(self, kind, tuple(norm_path(p) for p in paths))
         eager = self.flags.is_eager(kind)
         # tag the op with the active transaction so its deferred error is
         # attributed (and later scope-cleared) exactly, even when another
@@ -187,9 +194,31 @@ class CannyFS:
 
     def mkdir(self, path: str) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
+        sp = self.engine.spill
+        if sp is not None and sp.elide_mkdir(p):
+            # provably durable from the interrupted run: refresh the
+            # claims (journal membership was seeded at attach) and skip
+            # the backend roundtrip
+            self._elide_replay("mkdir", (p,), {})
+            return
 
         def fn():
-            b.mkdir(p)
+            try:
+                b.mkdir(p)
+            except FileExistsError:
+                if sp is None or not sp.session_tolerant():
+                    raise
+                # idempotent re-execution: the interrupted run's mkdir
+                # landed but was not provably durable (its record missed
+                # the last cut).  The dir exists with unknown contents —
+                # keep the membership delta, drop completeness — and it
+                # still belongs to this window's journal.
+                ov2 = self.engine.overlay
+                if ov2 is not None:
+                    ov2.demote(p)
+                if txn is not None:
+                    txn._record_create(p, True)
+                return
             # the dir provably came into existence fresh and empty just
             # now: the overlay's provisional admit-time claim is promoted
             # to backend-proven (journal + promote on *success* only — a
@@ -265,6 +294,10 @@ class CannyFS:
 
     def rmdir(self, path: str) -> None:
         p, txn = norm_path(path), self._active_txn()
+        sp = self.engine.spill
+        if sp is not None and sp.elide_rmdir(p):
+            self._elide_replay("rmdir", (p,), {})
+            return
         # cross-path bulk-remove peephole: when the overlay proves this
         # directory's subtree is fully known and ends empty after the
         # pending removals, those unlinks/rmdirs are elided and ONE
@@ -280,11 +313,33 @@ class CannyFS:
                              region=txn, payload=prep)
                 return
         b = self.backend
-        self._submit("rmdir", (p,), lambda: b.rmdir(p), cache_kw={},
-                     region=txn)
+        tolerant = sp is not None and sp.removal_tolerant(p)
+
+        def fn():
+            try:
+                b.rmdir(p)
+            except FileNotFoundError:
+                # the interrupted run's removal was in flight at the kill:
+                # the directory may already be durably gone
+                if not tolerant:
+                    raise
+
+        self._submit("rmdir", (p,), fn, cache_kw={}, region=txn)
 
     def create(self, path: str) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
+        sp = self.engine.spill
+        if sp is not None and sp.divert_create(p):
+            # the interrupted run durably created (and wrote) this file:
+            # buffer the re-run's stream instead of re-submitting; close
+            # verifies the content against the recorded segment checksums
+            # and either elides the whole stream or falls back to a real
+            # rewrite (SpillManager.finalize)
+            self.engine.stat_cache.on_op("create", (p,))
+            ov = self.engine.overlay
+            if ov is not None:
+                ov.on_op("create", (p,))
+            return
         # the journaling existence probe below batches: enqueued before
         # this op's own admission (which consumes the probe's exemption),
         # it fuses with neighbouring probes into ONE speculative stat_vec
@@ -312,13 +367,19 @@ class CannyFS:
 
     def unlink(self, path: str) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
+        sp = self.engine.spill
+        if sp is not None and sp.elide_unlink(p):
+            self._elide_replay("unlink", (p,), {})
+            return
         # optimizer: a pending create/write chain on this path is invisible
         # at every observation point once the path is unlinked in the same
         # window — elide it.  The unlink must then tolerate absence: the op
         # that would have created the file (create, or an implicit-create
-        # write) no longer executes.
-        tolerant = (self.flags.is_eager("unlink")
-                    and self.engine.prepare_unlink(p, region=txn))
+        # write) no longer executes — or the interrupted run's removal was
+        # in flight at the kill, so the file may already be gone.
+        tolerant = ((self.flags.is_eager("unlink")
+                     and self.engine.prepare_unlink(p, region=txn))
+                    or (sp is not None and sp.removal_tolerant(p)))
 
         def fn():
             try:
@@ -414,6 +475,14 @@ class CannyFS:
     def _write_at(self, path: str, offset: int, data: bytes) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
         cache_kw = {"offset": offset, "nbytes": len(data)}
+        sp = self.engine.spill
+        if sp is not None and sp.divert_write(p, offset, data):
+            # resumed diverted stream: buffered for close-time verification
+            self.engine.stat_cache.on_op("write", (p,), **cache_kw)
+            ov = self.engine.overlay
+            if ov is not None:
+                ov.on_op("write", (p,), **cache_kw)
+            return
         # feed the coalescer: if the path's pending tip is an unclaimed,
         # unsealed write in the same region, this write is absorbed into
         # its vector and ACKed without a new engine op
@@ -499,6 +568,12 @@ class CannyFS:
         the optimizer: an adjacent pending same-kind op absorbs the new
         arguments instead of a second backend roundtrip."""
         p, txn = norm_path(path), self._active_txn()
+        sp = self.engine.spill
+        if sp is not None and sp.elide_meta(kind, p, args):
+            # last-wins metadata durably applied with identical arguments
+            # by the interrupted run: skip the roundtrip
+            self._elide_replay(kind, (p,), cache_kw or {})
+            return
         if self.flags.is_eager(kind) and self.engine.try_fuse_meta(
                 kind, p, args, region=txn, cache_kw=cache_kw):
             return
@@ -516,6 +591,9 @@ class CannyFS:
                      cache_kw={"size": size})
 
     def flush(self, path: str) -> None:
+        sp = self.engine.spill
+        if sp is not None:
+            sp.finalize(self, norm_path(path))
         if self.flags.flush:
             return  # eager flush == no-op ACK; data ordering is per-path
         self.engine.barrier(path)
@@ -527,7 +605,12 @@ class CannyFS:
     def _on_close_write(self, path: str) -> None:
         """close() of a written file: with eager flush this is an immediate
         ACK; otherwise it is a barrier (NFS close-to-open consistency —
-         'the closing of files a barrier', paper §5)."""
+         'the closing of files a barrier', paper §5).  A resumed diverted
+        stream settles here: the buffered content is verified against the
+        recorded durable checksums and elided, or rewritten for real."""
+        sp = self.engine.spill
+        if sp is not None:
+            sp.finalize(self, norm_path(path))
         if not self.flags.flush:
             self.engine.barrier(path)
 
@@ -700,6 +783,12 @@ class CannyFS:
         per-entry path: eager unlinks/rmdirs ordered by the engine's
         pending-children edges."""
         path = norm_path(path)
+        sp = self.engine.spill
+        if sp is not None and sp.elide_remove_root(path):
+            # the interrupted run durably removed this whole subtree (and
+            # nothing under it was re-created since): skip the recursion
+            self._elide_replay("remove_tree", (path,), {})
+            return
         for name in self.readdir(path):
             child = f"{path}/{name}" if path else name
             st = self.stat(child)
@@ -766,12 +855,84 @@ class CannyFS:
         """True once abort_on_error tripped; new submissions fail fast."""
         return self.engine.poisoned
 
+    def _elide_replay(self, kind: str, paths: tuple, kw: dict) -> None:
+        """Account one re-run op skipped as provably durable, refreshing
+        the write-through claims it would have installed at admission."""
+        self.engine.stat_cache.on_op(kind, paths, **kw)
+        ov = self.engine.overlay
+        if ov is not None:
+            ov.on_op(kind, paths, **kw)
+            if kind == "mkdir":
+                ov.promote(paths[0])
+        self.engine.stats.resume_elided_ops += 1
+
+    def enable_spill(self, spill_dir: str, *,
+                     flush_records: int = 64) -> SpillManager:
+        """Arm the durability spill: from here on the active transaction's
+        journal and every op outcome persist incrementally to
+        ``spill_dir`` on this mount's own backend (see core/durability.py).
+        Call before opening the transaction."""
+        sp = SpillManager(self.engine, spill_dir,
+                          flush_records=flush_records)
+        sp.prepare()
+        self.engine.spill = sp
+        return sp
+
+    def resume(self, spill_dir: str, *, flush_records: int = 64) -> dict:
+        """Re-prove an interrupted optimization window from the spill on a
+        FRESH mount: parse the journal, repair the kill's in-flight
+        ambiguity against the backend, replay the proven delta into the
+        stat cache and namespace overlay (no tree re-walk), and arm the
+        spill so the re-executed job body elides/diverts ops that are
+        provably durable.  Returns a report dict (records parsed, repairs,
+        ops replayed, ...)."""
+        sp = SpillManager(self.engine, spill_dir,
+                          flush_records=flush_records)
+        sp.prepare()
+        report = sp.load()
+        report.update(sp.repair())
+        cache, ov = self.engine.stat_cache, self.engine.overlay
+        replayed = 0
+        if sp.resuming:
+            for kind, paths, rec in sp.image.events:
+                kw = _replay_kw(kind, rec)
+                cache.on_op(kind, paths, **kw)
+                if ov is not None:
+                    ov.on_op(kind, paths, **kw)
+                    if kind == "mkdir":
+                        ov.promote(paths[0])
+                replayed += 1
+            # failed ops recorded no durable effect — whatever claims the
+            # replay stream installed for them must not stand
+            for kind, paths in sp.image.fails:
+                for p in paths:
+                    cache.invalidate(p)
+                    if ov is not None:
+                        ov.invalidate(p)
+            # repair-time removals (re-issued bulk deletes, probed-gone
+            # paths) post-date the event stream: apply them last
+            for root, gone in sp.removed_roots():
+                cache.on_op("remove_tree", tuple(gone))
+                if ov is not None:
+                    ov.on_op("remove_tree", (root,))
+        self.engine.spill = sp
+        self.engine.stats.resumes += 1
+        self.engine.stats.resume_replayed_ops += replayed
+        report["replayed"] = replayed
+        return report
+
     def drain(self) -> None:
+        sp = self.engine.spill
+        if sp is not None:
+            sp.finalize_all(self)
         self.engine.drain()
 
     def close(self) -> None:
         """Unmount: drain all pending I/O and report deferred errors —
         the benchmarked 'fully killing the CannyFS process' step."""
+        sp = self.engine.spill
+        if sp is not None:
+            sp.finalize_all(self)
         self.engine.close()
 
     def __enter__(self):

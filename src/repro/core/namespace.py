@@ -690,6 +690,37 @@ class NamespaceOverlay:
             for w in self._watchers.get(path, ()):
                 w.pending.discard(path)
 
+    def delta_summary(self) -> dict:
+        """Snapshot of the membership delta this overlay is holding: how
+        many directories are tracked, how many of those carry a full
+        (complete) listing vs. a provisional or speculative one, and the
+        totals of known-present children and known-absent names.  This is
+        the view the durability layer reports after a resume reinstalls
+        the delta from the spill journal (a resumed mount should show the
+        same counts as the preempted one for the replayed prefix) — and a
+        cheap invariant hook for tests that don't want to poke _dirs."""
+        with self._lock:
+            dirs = len(self._dirs)
+            complete = provisional = speculative = 0
+            children = absent = 0
+            for st in self._dirs.values():
+                if st.complete:
+                    complete += 1
+                if st.provisional:
+                    provisional += 1
+                if st.speculative:
+                    speculative += 1
+                children += len(st.children)
+                absent += len(st.absent)
+            return {
+                "dirs": dirs,
+                "complete": complete,
+                "provisional": provisional,
+                "speculative": speculative,
+                "children": children,
+                "absent": absent,
+            }
+
     def clear(self) -> None:
         with self._lock:
             self._dirs.clear()

@@ -304,17 +304,19 @@ class OpScheduler:
             self._unlock_shards(shards)
         # rename subtree-tail pass: a rename moves *content*, so it must
         # run after every pending op anywhere under either endpoint —
-        # structural or not.  Sweep each shard's last_op map for paths
-        # under the rename's roots and depend on every eligible pending
-        # chain tip (transitively the whole chain).  This replaces PR 4's
-        # BFS over pending_children, which discovered paths only through
-        # pending *structural* anchors and therefore could not reach a
-        # non-structural op on a pre-window path (the known gap: chmod of
-        # a file three levels down whose create drained before the
-        # window).  One shard lock at a time; only ops wired strictly
-        # before this one are eligible — a tip wired later may already
-        # depend on this op through the parent-directory edge, and the
-        # stamp guard is what keeps the DAG acyclic (see _Op.wired).
+        # structural or not.  Discovery is a per-prefix sweep of each
+        # shard's last_op map: every pending op, whatever its kind,
+        # publishes its chain tip there, so any path under either root is
+        # found directly — including a non-structural op on a path whose
+        # structural ancestors already drained (e.g. a chmod three levels
+        # down whose create left the window; PR 5 closed PR 4's gap here,
+        # whose BFS over pending_children could reach paths only through
+        # pending *structural* anchors).  Depending on the eligible tip
+        # orders after its whole chain transitively.  One shard lock at a
+        # time; only ops wired strictly before this one are eligible — a
+        # tip wired later may already depend on this op through the
+        # parent-directory edge, and the stamp guard is what keeps the
+        # DAG acyclic (see _Op.wired).
         if kind == "rename":
             for sh in self._shards:
                 with sh.lock:

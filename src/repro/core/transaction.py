@@ -30,12 +30,14 @@ resubmission rewrites it whole.
 from __future__ import annotations
 
 import errno as _errno
+import random
 import threading
 import time
+import zlib
 from typing import Callable, TypeVar
 
 from .backend import is_under
-from .errors import (EnginePoisonedError, OpCancelledError,
+from .errors import (EnginePoisonedError, OpCancelledError, ProcessKilled,
                      RollbackLeakError, TransactionFailedError)
 from .fs import CannyFS
 
@@ -71,7 +73,15 @@ class Transaction:
     # -- journal hooks (called by CannyFS) --
     def _record_create(self, path: str, is_dir: bool) -> None:
         with self._lock:
+            known = self._created.get(path)
             self._created[path] = is_dir
+        if known is None or known != is_dir:
+            # new (or re-kinded) journal entry: persist it so a resumed
+            # attempt's rollback scope covers this path too.  Seeded
+            # entries (attach_txn) re-record nothing.
+            sp = self.fs.engine.spill
+            if sp is not None:
+                sp.record_journal(path, is_dir)
 
     def _has_created(self, path: str) -> bool:
         with self._lock:
@@ -91,6 +101,9 @@ class Transaction:
         with self._lock:
             for p in [p for p in self._created if is_under(p, src)]:
                 self._created[dst + p[len(src):]] = self._created.pop(p)
+        sp = self.fs.engine.spill
+        if sp is not None:
+            sp.record_journal_rename(src, dst)
 
     # -- lifecycle --
     def __enter__(self) -> "Transaction":
@@ -103,14 +116,26 @@ class Transaction:
                 raise RuntimeError("nested transactions are not supported")
             self.fs._txn = self
         self._active = True
+        sp = self.fs.engine.spill
+        if sp is not None:
+            # open the spill epoch (or, on a resumed mount, seed this
+            # region's journal with the interrupted attempt's proven one)
+            sp.attach_txn(self)
         return self
 
     def __exit__(self, exc_type, exc, tb) -> bool:
         self.fs._txn = None
         self._active = False
         if exc_type is not None:
-            # caller failed mid-transaction → roll back, re-raise
-            self.rollback()
+            # caller failed mid-transaction → roll back, re-raise.
+            # Exception: a ProcessKilled (raised directly, or at the root
+            # of this region's deferred errors) means the process is
+            # 'gone' — neither roll back nor retry in-process; recovery
+            # is a fresh mount's CannyFS.resume() against the spill.
+            killed = issubclass(exc_type, ProcessKilled) or any(
+                isinstance(en.error, ProcessKilled) for en in self.errors())
+            if not killed:
+                self.rollback()
             return False
         if not self.committed and not self.rolled_back:
             self.commit()
@@ -127,6 +152,10 @@ class Transaction:
         errs = self.errors()
         if errs:
             raise TransactionFailedError(errs)
+        sp = self.fs.engine.spill
+        if sp is not None:
+            # committed marker + final cut, then the spill log is retired
+            sp.on_commit()
         # the optimization window is closed: drop the namespace overlay's
         # delta (its claims are now plain backend truth; the next window
         # rebuilds its own)
@@ -151,6 +180,12 @@ class Transaction:
         ``rollback_leftovers`` rather than silently leaked."""
         self.fs.drain()
         self.final_errors = self.errors()
+        sp = self.fs.engine.spill
+        if sp is not None:
+            # tombstone the epoch BEFORE removing anything: a kill mid-
+            # rollback must leave a log that proves "this window is dead",
+            # never one whose durable claims point at half-deleted files
+            sp.on_rollback()
         with self._lock:
             created = dict(self._created)
             self._created.clear()
@@ -250,9 +285,51 @@ def _is_resubmittable(e: BaseException, region_errs=()) -> bool:
     return True  # unknown failure class: keep the paper's resubmit default
 
 
+def _was_killed(e: BaseException,
+                region_errs=()) -> ProcessKilled | None:
+    """Did this attempt die of a (simulated) process kill?  Checked before
+    rollback: a dead process neither rolls back nor resubmits in-process —
+    the failure must propagate so a fresh mount can ``resume()``.  Returns
+    the root ``ProcessKilled`` (for uniform re-raising) or ``None``."""
+    if isinstance(e, ProcessKilled):
+        return e
+    entries = (e.entries if isinstance(e, TransactionFailedError)
+               else region_errs)
+    for en in entries:
+        if isinstance(en.error, ProcessKilled):
+            return en.error
+    return None
+
+
+def _backoff_sleep(fs: CannyFS, name: str, attempt: int,
+                   base_s: float, cap_s: float, seed: int | None) -> None:
+    """Seeded full-jitter exponential backoff, charged on the injected
+    clock.  The draw is derived per (seed, job-name, attempt) the same way
+    ``FaultPlan`` derives its per-match draws — a tuple-of-int hash, stable
+    across processes — defaulting to the fault plan's own seed when the
+    backend stack carries one, so chaos sweeps and their emitted
+    ``BENCH_*.json`` replay byte-identically per seed."""
+    if seed is None:
+        seed = getattr(getattr(fs.backend, "plan", None), "seed", 0)
+    rng = random.Random(hash((int(seed), zlib.crc32(name.encode("utf-8")),
+                              attempt)))
+    delay = rng.random() * min(cap_s, base_s * (2 ** attempt))
+    if delay <= 0:
+        return
+    clock = fs.engine.sim
+    if clock is None:
+        clock = getattr(fs.backend, "clock", None)
+    if clock is not None and hasattr(clock, "sleep"):
+        clock.sleep(delay)
+    else:
+        time.sleep(delay)
+
+
 def run_transaction(fs: CannyFS, body: Callable[[CannyFS], T], *,
                     name: str = "job", retries: int = 2,
                     backoff_s: float = 0.0,
+                    backoff_cap_s: float = 30.0,
+                    backoff_seed: int | None = None,
                     retry_on: tuple[type[BaseException], ...] = (
                         TransactionFailedError, EnginePoisonedError,
                         OpCancelledError, OSError)) -> T:
@@ -268,7 +345,18 @@ def run_transaction(fs: CannyFS, body: Callable[[CannyFS], T], *,
     deferred into the commit's TransactionFailedError — is rolled back once
     and propagates immediately.  A commit failure is still retried when
     *any* of its entries is transient: cascade errors (ENOENT on ops under
-    a faulted mkdir) ride along with their transient root cause."""
+    a faulted mkdir) ride along with their transient root cause.
+
+    ``backoff_s`` arms seeded-jitter exponential backoff between attempts:
+    each resubmission sleeps ``U(0, min(backoff_cap_s, backoff_s * 2**k))``
+    (full jitter, AWS-style), drawn from a per-(seed, name, attempt) RNG
+    — ``backoff_seed``, defaulting to the backend fault plan's seed — and
+    charged on the engine's sim clock (or the backend's virtual clock)
+    when one is present, so chaos sweeps stay deterministic per seed.
+
+    A ``ProcessKilled`` failure (injected preemption) is exempt from the
+    whole loop: no rollback, no resubmission — it propagates so a fresh
+    mount can ``CannyFS.resume()`` from the durability spill."""
     last: BaseException | None = None
     leftover_acc: list[str] = []   # verified leakage across all attempts
     for attempt in range(retries + 1):
@@ -287,6 +375,13 @@ def run_transaction(fs: CannyFS, body: Callable[[CannyFS], T], *,
                         f"failed attempts"))
             return out
         except retry_on as e:
+            kill = _was_killed(e, fs.ledger.entries_for(txn))
+            if kill is not None:
+                # preempted, not failed: resume(), don't resubmit.  Raise
+                # the root ProcessKilled so callers see ONE preemption
+                # signal whether the kill struck a sync op in the body or
+                # surfaced as a deferred entry at commit
+                raise kill from e
             if not txn.rolled_back:  # commit failed inside __exit__
                 txn.rollback()
             # rollback snapshotted the region's errors before clearing
@@ -307,7 +402,8 @@ def run_transaction(fs: CannyFS, body: Callable[[CannyFS], T], *,
             if attempt < retries:
                 fs.engine.stats.retries += 1
                 if backoff_s:  # no pointless sleep after the final attempt
-                    time.sleep(backoff_s * (attempt + 1))
+                    _backoff_sleep(fs, name, attempt, backoff_s,
+                                   backoff_cap_s, backoff_seed)
             continue
     assert last is not None
     raise last

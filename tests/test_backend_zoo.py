@@ -357,3 +357,110 @@ def test_remote_vectored_ops_are_one_roundtrip():
     assert remote.op_count == base + 2
     remote.write_vec("d/f0", [(0, b"a"), (1, b"b"), (2, b"c")])
     assert remote.op_count == base + 3
+
+
+# ---------------------------------------------------------------------------
+# PR 9: crash consistency over the object store + rollback leak reporting
+# ---------------------------------------------------------------------------
+
+def _forge_spill_log(store, recs):
+    from repro.core.durability import _enc
+    store.inner.mkdir(".spill")
+    store.inner.create(".spill/journal.log")
+    store.inner.write_at(".spill/journal.log", 0,
+                         b"".join(_enc(r) for r in recs))
+
+
+def test_torn_copy_delete_rename_repaired_on_resume():
+    """COPY+DELETE rename killed mid-flight on the object store: some
+    keys copied to dst (their src side deleted), some still src-only.
+    Resume's repair must merge-move (dst wins) and rekey the journal so
+    the healed window looks exactly like a completed rename."""
+    store = ObjectStoreBackend()
+    inner = store.inner
+    # the torn state a killed per-key COPY+DELETE leaves behind
+    inner.mkdir("dst")
+    inner.create("dst/a.bin")
+    inner.write_at("dst/a.bin", 0, b"AAAA")      # copied, src side deleted
+    inner.mkdir("src")
+    inner.create("src/b.bin")
+    inner.write_at("src/b.bin", 0, b"BBBB")      # never copied
+    _forge_spill_log(store, [
+        {"t": "begin", "e": 0},
+        {"t": "jrnl", "e": 0, "p": "src", "d": 1},
+        {"t": "jrnl", "e": 0, "p": "src/a.bin", "d": 0},
+        {"t": "jrnl", "e": 0, "p": "src/b.bin", "d": 0},
+        {"t": "admit", "e": 0, "k": "rename", "p": ["src", "dst"]},
+    ])
+
+    fs = CannyFS(store, echo_errors=False)
+    report = fs.resume(".spill")
+    assert report["resumable"]
+    assert report["repairs"] >= 1
+    snap = store.snapshot()["files"]
+    data = {p: bytes(d) for p, d in snap.items()
+            if not p.startswith(".spill")}
+    assert data == {"dst/a.bin": b"AAAA", "dst/b.bin": b"BBBB"}
+    assert "src" not in store.snapshot()["dirs"]
+    # journal rekeyed: a rollback of the resumed window would remove the
+    # dst-side outputs, never resurrect (or leak) the src side
+    journal = fs.engine.spill.image.journal
+    assert set(journal) == {"dst", "dst/a.bin", "dst/b.bin"}
+    fs.close()
+
+
+def test_partial_bulk_delete_repaired_on_resume():
+    """remove_tree on the object store is LIST + ONE bulk DELETE; a kill
+    can apply the delete to only some keys.  Resume must re-issue the
+    removal and converge to the fully-removed state."""
+    store = ObjectStoreBackend()
+    inner = store.inner
+    inner.mkdir("tmp")
+    inner.create("tmp/x.bin")
+    inner.write_at("tmp/x.bin", 0, b"x")         # survived the torn DELETE
+    inner.mkdir("tmp/sub")                       # survived
+    # (tmp/y.bin already deleted before the kill — simply absent)
+    _forge_spill_log(store, [
+        {"t": "begin", "e": 0},
+        {"t": "jrnl", "e": 0, "p": "tmp", "d": 1},
+        {"t": "admit", "e": 0, "k": "remove_tree", "p": ["tmp"]},
+    ])
+
+    fs = CannyFS(store, echo_errors=False)
+    report = fs.resume(".spill")
+    assert report["resumable"]
+    assert report["repairs"] >= 1
+    snap = store.snapshot()
+    assert all(not p.startswith("tmp") for p in snap["files"])
+    assert all(not d.startswith("tmp") for d in snap["dirs"] if d)
+    assert "tmp" in fs.engine.spill.image.removed
+    # the re-executed rmtree in the replayed body is elidable outright
+    assert fs.engine.spill.elide_remove_root("tmp")
+    fs.close()
+
+
+def test_rollback_leftovers_reported_on_object_store():
+    """A rollback whose unlink keeps failing must *report* the surviving
+    path (and its then-unremovable parent), never silently leak it."""
+    from repro.core import Transaction
+
+    store = ObjectStoreBackend()
+    chaos = FaultInjectingBackend(store, FaultPlan([
+        FaultRule(error="EACCES", ops=("unlink",),
+                  path_glob="out/locked.bin")], seed=1))
+    fs = CannyFS(chaos, echo_errors=False)
+    txn = Transaction(fs)
+    with txn:
+        fs.mkdir("out")
+        fs.write_file("out/locked.bin", b"stuck")
+        fs.write_file("out/ok.bin", b"fine")
+        fs.drain()
+        txn.rollback()
+    assert txn.rolled_back
+    assert "out/locked.bin" in txn.rollback_leftovers
+    assert "out" in txn.rollback_leftovers      # rmdir of a non-empty dir
+    snap = store.snapshot()["files"]
+    assert "out/ok.bin" not in snap             # the healthy path DID go
+    assert snap["out/locked.bin"] == b"stuck"
+    assert fs.engine.stats.rollback_leftovers >= 2
+    fs.close()

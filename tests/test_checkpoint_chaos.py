@@ -3,12 +3,20 @@ kill the process (simulated by a non-OSError BaseException the manager
 cannot catch) between the first shard write and the COMMIT marker — at
 EVERY injection point — then start a fresh manager on the same backend
 and assert startup recovery discards exactly the uncommitted step dir,
-leaving committed checkpoints byte-identical."""
+leaving committed checkpoints byte-identical.
+
+PR 9 extends the harness to the durability spill: SIGKILL-equivalent
+aborts (``ProcessKilled``, backend stays dead until revived) at EVERY
+mutating backend call — including the spill journal's own writes and the
+mutations of the resume/repair pass itself — must always converge, after
+``CannyFS.resume``, to backend state byte-identical to an uninterrupted
+run."""
 import numpy as np
 import pytest
 
 from repro.checkpoint import COMMIT_FILE, TransactionalCheckpointManager
-from repro.core import CannyFS, EagerFlags, InMemoryBackend
+from repro.core import (CannyFS, EagerFlags, InMemoryBackend, ProcessKilled,
+                        run_transaction)
 
 
 class _Crash(BaseException):
@@ -170,3 +178,255 @@ def test_partial_commit_marker_is_not_a_commit():
     assert mgr2.list_steps() == [1]
     assert all(not p.startswith(d) for p in be.snapshot()["files"])
     fs2.close()
+
+
+# ---------------------------------------------------------------------------
+# PR 9: kill-point sweep over the durability spill (transaction resume)
+# ---------------------------------------------------------------------------
+
+_MUTATING = ("mkdir", "create", "write_at", "write_vec", "unlink", "rmdir",
+             "rename", "remove_tree", "chmod", "truncate")
+_READS = ("stat", "stat_vec", "readdir", "readdir_plus", "readdir_plus_vec",
+          "read_at", "read_vec", "readlink")
+
+
+class KillingBackend(InMemoryBackend):
+    """SIGKILL-equivalent chaos: the k-th mutating call (spill-journal
+    writes included) raises ``ProcessKilled`` — before applying (``post=
+    False``, the op never lands) or after (``post=True``, the op lands
+    but nothing downstream of it runs) — and the backend stays dead
+    (every later call, reads included, raises) until ``revive``."""
+
+    def __init__(self, post=False):
+        super().__init__()
+        self.countdown = None      # None = disarmed
+        self.post = post
+        self.dead = False
+
+    def revive(self):
+        self.dead = False
+        self.countdown = None
+
+    def _strike(self, name):
+        self.countdown = None
+        self.dead = True
+        raise ProcessKilled(f"kill point at {name}")
+
+    def _gate(self, name):
+        if self.dead:
+            raise ProcessKilled(f"backend dead at {name}")
+        if self.countdown is None:
+            return False
+        if self.countdown == 0:
+            if not self.post:
+                self._strike(name)
+            return True            # apply the op, then strike
+        self.countdown -= 1
+        return False
+
+
+def _wrap_mutating(name):
+    base = getattr(InMemoryBackend, name)
+
+    def op(self, *a, **kw):
+        post = self._gate(name)
+        out = base(self, *a, **kw)
+        if post:
+            self._strike(name)
+        return out
+    op.__name__ = name
+    return op
+
+
+def _wrap_read(name):
+    base = getattr(InMemoryBackend, name)
+
+    def op(self, *a, **kw):
+        if self.dead:
+            raise ProcessKilled(f"backend dead at {name}")
+        return base(self, *a, **kw)
+    op.__name__ = name
+    return op
+
+
+for _name in _MUTATING:
+    setattr(KillingBackend, _name, _wrap_mutating(_name))
+for _name in _READS:
+    setattr(KillingBackend, _name, _wrap_read(_name))
+
+
+def _spill_job(fs):
+    """A small extract-transform-clean job touching every structural op
+    class the spill records: mkdir chains, create+write streams,
+    metadata, rename, a subtree removal and a file removal."""
+    fs.makedirs("data/keep/deep")
+    fs.makedirs("data/tmp")
+    for i in range(3):
+        fs.write_file(f"data/keep/f{i}.bin", bytes([65 + i]) * 64)
+        fs.write_file(f"data/tmp/t{i}.bin", bytes([97 + i]) * 32)
+    fs.write_file("data/keep/deep/d.bin", b"deep" * 8)
+    fs.chmod("data/keep/f0.bin", 0o600)
+    fs.rename("data/keep/f2.bin", "data/keep/g2.bin")
+    fs.rmtree("data/tmp")
+    fs.unlink("data/keep/f1.bin")
+
+
+def _spill_fs(be):
+    fs = CannyFS(be, flags=EagerFlags(flush=False), workers=2,
+                 echo_errors=False)
+    fs.enable_spill(".spill", flush_records=4)
+    return fs
+
+
+def _state(be):
+    """Data-plane state (spill dir excluded): file bytes, dirs, modes."""
+    snap = be.snapshot()
+    files = {p: bytes(d) for p, d in snap["files"].items()
+             if not p.startswith(".spill")}
+    dirs = {d for d in snap["dirs"]
+            if d and d != ".spill" and not d.startswith(".spill/")}
+    modes = {p: be.stat(p).mode for p in files}
+    return files, dirs, modes
+
+
+def _run_to_completion(be, *, max_resumes=8):
+    """Restart loop: resume + re-run until the job commits.  Returns the
+    number of restarts it took."""
+    restarts = 0
+    while True:
+        be.revive()
+        fs = CannyFS(be, flags=EagerFlags(flush=False), workers=2,
+                     echo_errors=False)
+        try:
+            report = fs.resume(".spill", flush_records=4)
+            if report.get("committed"):
+                fs.close()
+                return restarts
+            run_transaction(fs, _spill_job, retries=0)
+            fs.close()
+            return restarts
+        except ProcessKilled:
+            restarts += 1
+            assert restarts <= max_resumes, "resume never converged"
+            try:
+                fs.close()
+            except BaseException:
+                pass
+
+
+def _baseline_state():
+    be = KillingBackend()
+    fs = _spill_fs(be)
+    run_transaction(fs, _spill_job, retries=0)
+    fs.close()
+    return _state(be)
+
+
+@pytest.mark.parametrize("post", [False, True],
+                         ids=["kill-before-apply", "kill-after-apply"])
+def test_spill_kill_point_sweep_converges(post):
+    """Kill at EVERY mutating backend call of the transaction (spill
+    writes included), resume on a fresh mount, and require byte-identical
+    convergence with the uninterrupted run — no leaked journal entries,
+    no resurrected removed files, no lost writes."""
+    baseline = _baseline_state()
+    kill_points = 0
+    k = 0
+    while True:
+        be = KillingBackend(post=post)
+        be.countdown = k
+        killed = False
+        fs = None
+        try:
+            # the mount's own spill-dir setup is inside the kill window
+            fs = _spill_fs(be)
+            run_transaction(fs, _spill_job, retries=0)
+        except ProcessKilled:
+            killed = True
+        if fs is not None:
+            try:
+                fs.close()
+            except BaseException:
+                pass
+        if not killed and not be.dead:
+            # chaos exhausted: the armed run outran the countdown
+            assert _state(be) == baseline
+            break
+        kill_points += 1
+        _run_to_completion(be)
+        assert _state(be) == baseline, f"diverged at kill point {k}"
+        k += 1
+        assert k < 400, "sweep failed to terminate"
+    # the sweep actually covered the window (dirs, writes, renames,
+    # removals and the spill's own journal writes are all >10 calls)
+    assert kill_points >= 10
+
+
+def test_spill_kill_mid_resume_sweep_converges():
+    """Preempt the job once, then kill at every mutating call of the
+    RESUME pass itself (journal truncate, repair ops, re-executed
+    suffix, recommit).  A second resume must still converge."""
+    baseline = _baseline_state()
+    k2 = 0
+    covered = 0
+    while True:
+        be = KillingBackend()
+        # first preemption at a fixed point deep in the job
+        be.countdown = 12
+        fs = _spill_fs(be)
+        try:
+            run_transaction(fs, _spill_job, retries=0)
+            raise AssertionError("first run should have been killed")
+        except ProcessKilled:
+            pass
+        try:
+            fs.close()
+        except BaseException:
+            pass
+
+        # resume pass, chaos re-armed
+        be.revive()
+        be.countdown = k2
+        killed = False
+        fs2 = CannyFS(be, flags=EagerFlags(flush=False), workers=2,
+                      echo_errors=False)
+        try:
+            report = fs2.resume(".spill", flush_records=4)
+            if not report.get("committed"):
+                run_transaction(fs2, _spill_job, retries=0)
+            fs2.close()
+        except ProcessKilled:
+            killed = True
+            try:
+                fs2.close()
+            except BaseException:
+                pass
+        if not killed and not be.dead:
+            assert _state(be) == baseline
+            break
+        covered += 1
+        _run_to_completion(be)
+        assert _state(be) == baseline, f"diverged at resume kill point {k2}"
+        k2 += 1
+        assert k2 < 400, "mid-resume sweep failed to terminate"
+    assert covered >= 5
+
+
+def test_spill_retired_after_converged_resume():
+    """After convergence the spill journal is gone and the marker proves
+    the committed window — a later mount must see nothing to resume."""
+    be = KillingBackend()
+    be.countdown = 10
+    fs = _spill_fs(be)
+    with pytest.raises(ProcessKilled):
+        run_transaction(fs, _spill_job, retries=0)
+    try:
+        fs.close()
+    except BaseException:
+        pass
+    _run_to_completion(be)
+    assert not be.stat(".spill/journal.log").exists
+    fs3 = CannyFS(be, flags=EagerFlags(flush=False), echo_errors=False)
+    report = fs3.resume(".spill")
+    assert report["committed"] and not report["resumable"]
+    fs3.close()
