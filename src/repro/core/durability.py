@@ -25,8 +25,9 @@ CannyFS exists to hide.  This module makes the window itself durable:
   ``SpillImage`` (journal, durable op outcomes, uncertain in-flight
   ops), ``repair`` resolves the uncertainty directly against the
   backend (torn COPY+DELETE renames are merge-moved, a partially
-  applied bulk DELETE is re-issued, landed-but-unjournaled creates are
-  journaled so rollback can never leak them), and the proven delta is
+  applied bulk DELETE is re-issued, landed-but-unjournaled creates
+  whose probe record proves pre-op absence are journaled so rollback
+  can never leak them), and the proven delta is
   replayed into the stat cache and namespace overlay without re-walking
   the tree.  The re-executed job body then consults the image: ops
   provably durable are **elided** (mkdir/unlink/metadata) or
@@ -184,6 +185,7 @@ class SpillImage:
         self.removed: set[str] = set()
         self.uncertain: dict[tuple, int] = {}
         self.removal_uncertain: set[str] = set()
+        self.probed: dict[str, bool] = {}           # path -> existed pre-op
         self.end_offset = 0
         self.nrecords = 0
 
@@ -225,6 +227,11 @@ class SpillImage:
                 img.fails.append((rec["k"], tuple(rec["p"])))
             elif t == "jrnl":
                 img.journal[rec["p"]] = bool(rec["d"])
+            elif t == "pre":
+                # create/write existence probe, recorded before the
+                # backend call ran: last probe wins (monotone prefix —
+                # a surviving later record implies all earlier survive)
+                img.probed[rec["p"]] = bool(rec["x"])
             elif t == "jmv":
                 src, dst = rec["s"], rec["d"]
                 for p in [p for p in img.journal
@@ -324,6 +331,30 @@ class SpillImage:
             self.durable_meta.pop(k)
         self.removed.update(hit)
         return tuple(dict.fromkeys(hit))
+
+    def vouches(self, p: str) -> bool:
+        """Did the interrupted run provably reach this path?  Idempotent
+        re-execution tolerance (EEXIST on mkdir, ENOENT on removals) is
+        scoped to vouched paths: a mount-wide tolerance would mask
+        genuine errors on paths run 1 never touched — a pre-existing
+        directory, a removal target the job never owned."""
+        if (p in self.journal or p in self.durable_dirs
+                or p in self.durable_files or p in self.removed
+                or p in self.removal_uncertain or p in self.probed):
+            return True
+        if any(k[0] == p for k in self.durable_meta):
+            return True
+        if any(p in paths for _, paths in self.uncertain):
+            return True
+        if any(p in paths for _, paths in self.fails):
+            return True
+        # under a bulk-removal root, or under a directory this window
+        # created: nothing pre-existing can live below a created-in-window
+        # dir, so the whole subtree is the run's own even where no
+        # per-path record survived the kill
+        return (any(is_under(p, r) for r in self.removed)
+                or any(is_under(p, q)
+                       for q, d in self.journal.items() if d))
 
 
 # ---------------------------------------------------------------------------
@@ -433,6 +464,19 @@ class SpillManager:
         self._append({"t": "jrnl", "e": self.epoch, "p": path,
                       "d": 1 if is_dir else 0})
 
+    def record_preexist(self, path: str, existed: bool) -> None:
+        """Admit-time existence, recorded by the create/write worker the
+        moment its journaling probe settles — BEFORE the backend call
+        runs.  On resume this is ``repair``'s only licence to journal an
+        uncertain create/write that landed: without a surviving absence
+        proof, a write_at to a pre-existing file is indistinguishable in
+        the log from a landed-but-unjournaled create, and journaling it
+        would put pre-transaction user data into rollback scope."""
+        if not self._began:
+            return
+        self._append({"t": "pre", "e": self.epoch, "p": path,
+                      "x": 1 if existed else 0})
+
     def record_journal_rename(self, src: str, dst: str) -> None:
         if not self._began:
             return
@@ -528,14 +572,18 @@ class SpillManager:
         self._flush_outstanding()
         with self._lock:
             landed = not self._outstanding
+        if not landed:
+            # some chunks still haven't landed: a marker stamped now
+            # would name records that are not durable.  Leave the old
+            # stamp; the next cut re-tries the flush and stamps then.
+            return
         marker = f"{self.epoch:08d}:{nrec:012d}".encode("ascii")
         try:
             self.engine.backend.write_at(self.marker_path, 0, marker)
         except Exception:
             return
         with self._lock:
-            if landed:
-                self._cut_records = nrec
+            self._cut_records = nrec
             self.engine.stats.spill_cuts += 1
 
     # ------------------------------------------------------------------
@@ -721,14 +769,22 @@ class SpillManager:
                     st = b.stat(p)
                 except OSError:
                     continue
-                if st.exists and p not in im.journal:
-                    # the op landed but its journal write did not: without
-                    # this, rollback would resurrect... rather, *leak* the
-                    # file (and a re-run's existence probe would wrongly
-                    # memo it as pre-existing)
+                if not st.exists or p in im.journal:
+                    continue
+                if im.probed.get(p) is False:
+                    # the op landed but its journal write did not, and a
+                    # surviving probe record proves the path was absent
+                    # before the op — it is truly this window's creation.
+                    # Journal it, or rollback would *leak* the file (and
+                    # a re-run's existence probe would wrongly memo it as
+                    # pre-existing).
                     im.journal[p] = False
                     self.record_journal(p, False)
                     repairs += 1
+                # no absence proof: leave the path unjournaled.  It may
+                # be a pre-existing file whose write_at was in flight at
+                # the kill; a leaked-on-rollback file is recoverable,
+                # unlinking pre-transaction data is not.
             elif kind == "rename" and len(paths) == 2:
                 if self._repair_rename(b, paths[0], paths[1]):
                     repairs += 1
@@ -794,9 +850,11 @@ class SpillManager:
             except OSError:
                 return False
         elif s_exists and d_exists:
-            # torn COPY+DELETE: keys live on both sides.  A key already
-            # at dst is the completed copy (dst wins); the rest are moved
-            # over and the src side is removed.
+            # torn COPY+DELETE: keys live on both sides.  A key whose
+            # dst copy is verified byte-identical to src is complete
+            # (dst wins); any other dst — including a pre-existing
+            # rename target whose COPY never ran — is overwritten from
+            # src, never trusted.
             self._merge_move(b, src, dst)
             changed = True
         if not s_exists and not d_exists:
@@ -818,12 +876,37 @@ class SpillManager:
             return
         if not st.is_dir:
             try:
-                if b.stat(dst).exists:
+                dstat = b.stat(dst)
+            except OSError:
+                return
+            if not dstat.exists:
+                try:
+                    b.rename(src, dst)
+                except OSError:
+                    pass
+                return
+            # unlink src ONLY when dst is provably the completed copy
+            # (same size, identical bytes).  When the rename target
+            # pre-existed (rename-over-existing semantics) and the COPY
+            # phase never started, dst holds the stale old content and
+            # unlinking src would destroy the only copy of the moved
+            # data — re-issue the rename instead (src wins); failing
+            # that, keep both and dirty dst so the re-run rewrites it.
+            same = dstat.size == st.size
+            if same and st.size:
+                try:
+                    same = (zlib.crc32(b.read_at(src, 0, -1))
+                            == zlib.crc32(b.read_at(dst, 0, -1)))
+                except OSError:
+                    same = False
+            try:
+                if same:
                     b.unlink(src)
                 else:
                     b.rename(src, dst)
             except OSError:
-                pass
+                with self._lock:
+                    self._dirty.add(dst)
             return
         try:
             b.mkdir(dst)
@@ -929,22 +1012,30 @@ class SpillManager:
                 return False
             return True
 
-    def session_tolerant(self) -> bool:
-        """Is this a resumed attempt, where re-executed structural ops
-        must be idempotent?  Any op of the interrupted run may have
-        landed without its record surviving the kill (the record missed
-        the last cut), so a re-run mkdir tolerates FileExistsError and a
-        re-run removal tolerates absence — for the whole resumed attempt,
-        not just paths the log proved uncertain."""
-        return self._resumed
+    def session_tolerant(self, p: str) -> bool:
+        """Should a re-executed mkdir of ``p`` tolerate FileExistsError?
+        Only on a resumed attempt, and only for paths the image vouches
+        for (journaled, claimed, probed, uncertain, or under a subtree
+        this window owns): the interrupted run's op may have landed
+        without its record surviving the kill, so EEXIST there is the
+        re-execution meeting run 1's own output.  Anywhere else the
+        error is genuine — a fresh run would surface it too — and must
+        not be masked."""
+        if not self._resumed:
+            return False
+        with self._lock:
+            return self.image is not None and self.image.vouches(p)
 
     def removal_tolerant(self, p: str) -> bool:
-        """Should a re-executed unlink/rmdir tolerate absence?  True for
-        any removal of a resumed attempt: the interrupted run's removal
-        (or the repair pass) may already have taken the path down without
-        a surviving record — see ``session_tolerant``."""
-        del p
-        return self._resumed
+        """Should a re-executed unlink/rmdir tolerate absence?  Same
+        scoping as ``session_tolerant``: the interrupted run's removal
+        (or the repair pass) may already have taken a *vouched* path
+        down without a surviving record; an ENOENT on a path run 1
+        never touched is a real error."""
+        if not self._resumed:
+            return False
+        with self._lock:
+            return self.image is not None and self.image.vouches(p)
 
     # -- diverted-stream settlement -------------------------------------
 

@@ -206,18 +206,23 @@ class CannyFS:
             try:
                 b.mkdir(p)
             except FileExistsError:
-                if sp is None or not sp.session_tolerant():
+                if sp is None or not sp.session_tolerant(p):
+                    # not a path the spill image vouches for: a fresh run
+                    # would surface this EEXIST too — don't mask it
                     raise
-                # idempotent re-execution: the interrupted run's mkdir
-                # landed but was not provably durable (its record missed
-                # the last cut).  The dir exists with unknown contents —
-                # keep the membership delta, drop completeness — and it
-                # still belongs to this window's journal.
+                # idempotent re-execution: the interrupted run's mkdir on
+                # a vouched path landed but was not provably durable (its
+                # record missed the last cut).  The dir exists with
+                # unknown contents — keep the membership delta, drop
+                # completeness.  NOT journaled: there is no proof the dir
+                # was absent before the window (it may pre-date the job),
+                # and a pre-existing — possibly empty, hence rmdir-able —
+                # directory must never enter rollback scope; if run 1 did
+                # create it, the journal seeded at attach already covers
+                # it.
                 ov2 = self.engine.overlay
                 if ov2 is not None:
                     ov2.demote(p)
-                if txn is not None:
-                    txn._record_create(p, True)
                 return
             # the dir provably came into existence fresh and empty just
             # now: the overlay's provisional admit-time claim is promoted
@@ -357,6 +362,11 @@ class CannyFS:
             if txn is not None:
                 hit = sb.lookup(p) if sb is not None else None
                 existed = hit.exists if hit is not None else b.stat(p).exists
+                if sp is not None:
+                    # spill the probe result BEFORE the backend call: if a
+                    # kill leaves this op uncertain, repair may journal
+                    # the landed file only on this surviving absence proof
+                    sp.record_preexist(p, existed)
             else:
                 existed = False
             b.create(p)
@@ -510,6 +520,10 @@ class CannyFS:
             if probe:
                 hit = sb.lookup(p) if sb is not None else None
                 existed = hit.exists if hit is not None else b.stat(p).exists
+                if sp is not None:
+                    # spilled pre-backend-call: repair's only licence to
+                    # journal this path if the op lands without a record
+                    sp.record_preexist(p, existed)
             else:
                 existed = True
             expected = payload.nbytes   # frozen once the op is claimed

@@ -5,7 +5,8 @@ import pytest
 
 from repro.core import (CannyFS, EagerFlags, FaultInjectingBackend,
                         FaultPlan, FaultRule, InMemoryBackend, ProcessKilled,
-                        Transaction, commit_marker_ok, run_transaction)
+                        Transaction, TransactionFailedError, commit_marker_ok,
+                        run_transaction)
 from repro.core.durability import (SpillImage, _assemble, _dec, _enc,
                                    _verify)
 
@@ -408,6 +409,124 @@ def test_rolledback_tombstone_kills_the_window():
     report = fs.resume(".spill")
     assert not report["resumable"]
     assert report["journal_paths"] == 0
+    fs.close()
+
+
+def test_repair_never_journals_preexisting_file():
+    """A write_at to a file that pre-dated the transaction, in flight at
+    the kill, looks like a landed-but-unjournaled create — except for the
+    probe record proving the path existed before the op.  Repair must
+    leave it unjournaled, so a rollback of the resumed attempt can never
+    unlink pre-transaction user data."""
+    for probe_rec in ([{"t": "pre", "e": 0, "p": "user.dat", "x": 1}],
+                      []):       # existence unknown: equally off-limits
+        be = InMemoryBackend()
+        be.create("user.dat")
+        be.write_at("user.dat", 0, b"precious")
+        _forge_spill(be,
+                     {"t": "begin", "e": 0},
+                     *probe_rec,
+                     {"t": "admit", "e": 0, "k": "write", "p": ["user.dat"]})
+        fs = CannyFS(be, flags=EagerFlags(flush=False), echo_errors=False)
+        report = fs.resume(".spill")
+        assert report["resumable"]
+        txn = Transaction(fs)
+        with pytest.raises(RuntimeError):
+            with txn:
+                raise RuntimeError("abort the resumed attempt")
+        assert txn.rolled_back
+        assert be.read_at("user.dat", 0, -1) == b"precious"
+        fs.close()
+
+
+def test_repair_journals_landed_create_with_absence_proof():
+    """The dual: a surviving probe record proving pre-op absence makes
+    the landed-but-unjournaled create this window's own — repair
+    journals it, and rollback removes it instead of leaking it."""
+    be = InMemoryBackend()
+    be.create("out.bin")
+    be.write_at("out.bin", 0, b"window output")
+    _forge_spill(be,
+                 {"t": "begin", "e": 0},
+                 {"t": "pre", "e": 0, "p": "out.bin", "x": 0},
+                 {"t": "admit", "e": 0, "k": "create", "p": ["out.bin"]})
+    fs = CannyFS(be, flags=EagerFlags(flush=False), echo_errors=False)
+    report = fs.resume(".spill")
+    assert report["resumable"] and report["repairs"] >= 1
+    txn = Transaction(fs)
+    with pytest.raises(RuntimeError):
+        with txn:
+            raise RuntimeError("abort the resumed attempt")
+    assert txn.rolled_back
+    assert not be.stat("out.bin").exists
+    fs.close()
+
+
+def test_resumed_mkdir_on_unvouched_dir_surfaces_eexist():
+    """Re-execution tolerance is scoped to paths the spill image vouches
+    for: a resumed mkdir of a directory the interrupted run never
+    reached (it pre-dates the job) must surface the FileExistsError a
+    fresh run would, and must not pull the directory into rollback
+    scope."""
+    be = InMemoryBackend()
+    be.mkdir("legacy")           # pre-dates the job; run 1 never saw it
+    _forge_spill(be,
+                 {"t": "begin", "e": 0},
+                 {"t": "done", "e": 0, "k": "mkdir", "p": ["out"]},
+                 {"t": "jrnl", "e": 0, "p": "out", "d": 1})
+    fs = CannyFS(be, flags=EagerFlags(flush=False), echo_errors=False)
+    fs.resume(".spill")
+    with pytest.raises(TransactionFailedError):
+        with Transaction(fs):
+            fs.mkdir("out")      # vouched (journaled): tolerated
+            fs.mkdir("legacy")   # unvouched: the genuine error surfaces
+    assert be.stat("legacy").exists
+    try:
+        fs.close()
+    except Exception:
+        pass
+
+
+def test_resumed_mkdir_under_window_dir_tolerated():
+    """The tolerated side of the scoping: a recordless mkdir that landed
+    under a directory this window provably created is the run's own
+    output (nothing pre-existing can live below a window-created dir) —
+    the re-run's EEXIST is benign and the job commits."""
+    be = InMemoryBackend()
+    be.mkdir("out")
+    be.mkdir("out/sub")          # landed in run 1, record lost to the kill
+    _forge_spill(be,
+                 {"t": "begin", "e": 0},
+                 {"t": "done", "e": 0, "k": "mkdir", "p": ["out"]},
+                 {"t": "jrnl", "e": 0, "p": "out", "d": 1})
+    fs = CannyFS(be, flags=EagerFlags(flush=False), echo_errors=False)
+    fs.resume(".spill")
+    with Transaction(fs):
+        fs.mkdir("out")          # elided: provably durable
+        fs.mkdir("out/sub")      # EEXIST tolerated via the subtree vouch
+    fs.close()
+    assert be.stat("out/sub").exists
+
+
+def test_torn_rename_over_existing_keeps_moved_data():
+    """Torn COPY+DELETE where the rename target pre-existed and the COPY
+    never started: dst holds the stale old content and src the only copy
+    of the moved data.  dst-wins would unlink src outright; repair must
+    verify dst against src and re-issue the rename instead."""
+    be = InMemoryBackend()
+    be.create("a.bin")
+    be.write_at("a.bin", 0, b"moved payload")
+    be.create("b.bin")
+    be.write_at("b.bin", 0, b"stale old target")
+    _forge_spill(be,
+                 {"t": "begin", "e": 0},
+                 {"t": "admit", "e": 0, "k": "rename",
+                  "p": ["a.bin", "b.bin"]})
+    fs = CannyFS(be, flags=EagerFlags(flush=False), echo_errors=False)
+    report = fs.resume(".spill")
+    assert report["resumable"] and report["repairs"] >= 1
+    assert be.read_at("b.bin", 0, -1) == b"moved payload"
+    assert not be.stat("a.bin").exists
     fs.close()
 
 
