@@ -25,17 +25,28 @@ kills-fired / resume / ops-redone / convergence columns, where redo and
 convergence are measured against a kill-free reference run of the same
 cell.
 
+``--tenants N`` adds the PR 10 multi-tenant axis: N tenant views share
+ONE engine, the whole storm (fault glob + ``kill_scope``) is confined to
+tenant t0's prefix, and the rows gain per-tenant
+retries / rollbacks / poison-trips / resumes / ledger / committed
+columns plus a digest comparison of every *neighbour* against its own
+clean solo run on a private engine — the blast-radius reference cell.
+A dirty neighbour (non-empty ledger or digest drift) fails the sweep.
+
     PYTHONPATH=src python -m benchmarks.fault_sweep --seed 0
     PYTHONPATH=src python -m benchmarks.fault_sweep --seed 0 \\
         --fault-rates 0 0.01 0.05 --quota-frac 1.25 --out sweep.json
     PYTHONPATH=src python -m benchmarks.fault_sweep --seed 0 \\
         --fault-rates 0 --kill-rate 0.002
+    PYTHONPATH=src python -m benchmarks.fault_sweep --seed 0 \\
+        --fault-rates 0.05 --tenants 4 --kill-rate 0.01
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import threading
 import time
 
 from repro.core import (CannyFS, EagerFlags, FaultInjectingBackend, FaultPlan,
@@ -44,7 +55,8 @@ from repro.core import (CannyFS, EagerFlags, FaultInjectingBackend, FaultPlan,
                         VirtualClock, run_transaction)
 
 from .resume_guard import OpCountingBackend, _state_digest
-from .workloads import TreeSpec, synth_tree
+from .workloads import (TreeSpec, synth_tenant_tree, synth_tree,
+                        tenant_state_digest)
 
 SPILL_DIR = ".spill"
 
@@ -278,6 +290,146 @@ def run_chaos_config(*, fault_rate: float, eager: bool, seed: int,
     return row
 
 
+def run_tenant_chaos(*, n_tenants: int, fault_rate: float, seed: int,
+                     kill_rate: float = 0.0, retries: int = 6,
+                     max_kills: int = 2) -> dict:
+    """One multi-tenant cell: N tenant views share ONE engine; the whole
+    storm — the EIO rule's path glob AND the preemption's ``kill_scope``
+    — is confined to tenant t0's prefix.  t0 runs with a per-tenant
+    durability spill when ``kill_rate`` > 0 and survives preemptions via
+    ``Tenant.resume()`` on the live shared engine (no remount: the
+    neighbours' windows never close).  Every neighbour is compared
+    against its own clean solo run on a private engine — the reference
+    cell: empty per-tenant ledger, zero rollbacks/poison trips, and a
+    byte-identical final state under its prefix."""
+    names = [f"t{i}" for i in range(n_tenants)]
+    specs = [TreeSpec(n_files=80, n_dirs=8, mean_kb=2.0,
+                      seed=seed + 31 * i).scaled() for i in range(n_tenants)]
+    trees = [synth_tenant_tree(specs[i], names[i]) for i in range(n_tenants)]
+
+    def make_body(i):
+        dirs, files = trees[i]
+
+        def body(fsv):
+            for d in dirs:
+                fsv.makedirs(d)
+            for path, data in files:
+                with fsv.open(path, "wb") as f:
+                    f.write(data)
+                fsv.utimens(path, 0.0, 0.0)
+                fsv.chmod(path, 0o644)
+        return body
+
+    # reference cells: each tenant alone, clean, on a private engine
+    solo_digest = {}
+    for i in range(n_tenants):
+        clock = VirtualClock()
+        inner = InMemoryBackend()
+        remote = LatencyBackend(
+            inner, LatencyModel(meta_ms=1.5, data_ms=1.5, jitter_sigma=0.3,
+                                seed=seed), clock=clock)
+        fs = CannyFS(remote, max_inflight=4000, workers=16,
+                     abort_on_error=True, echo_errors=False)
+        t = fs.tenant(names[i], names[i])
+        run_transaction(t, make_body(i), name=f"{names[i]}-solo",
+                        retries=retries)
+        fs.close()
+        solo_digest[names[i]] = tenant_state_digest(inner, names[i])
+
+    # the stormed concurrent cell
+    rules = []
+    if fault_rate > 0:
+        rules.append(FaultRule(error="EIO", ops=CHAOS_OPS,
+                               path_glob="t0/*", probability=fault_rate,
+                               max_failures=3))
+    if kill_rate > 0:
+        rules.append(FaultRule(outcome="kill", ops=CHAOS_OPS,
+                               path_glob="t0/*", probability=kill_rate,
+                               max_failures=max_kills))
+    plan = FaultPlan(rules, seed=seed)
+    clock = VirtualClock()
+    inner = InMemoryBackend()
+    remote = LatencyBackend(
+        inner, LatencyModel(meta_ms=1.5, data_ms=1.5, jitter_sigma=0.3,
+                            seed=seed), clock=clock)
+    backend = FaultInjectingBackend(remote, plan, clock=clock,
+                                    kill_scope="t0/*")
+    fs = CannyFS(backend, max_inflight=4000, workers=16,
+                 abort_on_error=True, echo_errors=False)
+    tenants = [fs.tenant(n, n) for n in names]
+    if kill_rate > 0:
+        # per-tenant spill for the stormed tenant only; the dir lives
+        # OUTSIDE every prefix so the digests compare data state alone
+        tenants[0].enable_spill(".spill-t0")
+    kills_fired = 0
+    outcomes: dict[str, BaseException | None] = {n: None for n in names}
+
+    def drive(i: int) -> None:
+        nonlocal kills_fired
+        t, body, name = tenants[i], make_body(i), names[i]
+        try:
+            if i == 0 and kill_rate > 0:
+                while True:
+                    try:
+                        run_transaction(t, body, name=name, retries=retries)
+                        return
+                    except ProcessKilled:
+                        kills_fired += 1
+                        if kills_fired > max_kills:
+                            raise
+                        backend.revive()
+                        t.resume(".spill-t0")
+            else:
+                run_transaction(t, body, name=name, retries=retries)
+        except Exception as e:          # noqa: BLE001 — chaos driver
+            outcomes[name] = e
+
+    threads = [threading.Thread(target=drive, args=(i,))
+               for i in range(n_tenants)]
+    t0 = time.monotonic()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    fs.drain()
+    wall_s = time.monotonic() - t0
+    st = fs.stats
+    per_tenant = {}
+    for n in names:
+        ts = st.tenants[n]
+        digest = tenant_state_digest(inner, n)
+        per_tenant[n] = {
+            "ops": ts.ops,
+            "retries": ts.retries,
+            "rollbacks": ts.rollbacks,
+            "poison_trips": ts.poison_trips,
+            "resumes": ts.resumes,
+            "deferred_errors": ts.deferred_errors,
+            "ledger": len(fs.ledger.entries_for_tenant(n)),
+            "committed": outcomes[n] is None,
+            "digest_matches_solo": digest == solo_digest[n],
+        }
+    fs.close()
+    neighbours_clean = all(
+        per_tenant[n]["committed"] and per_tenant[n]["ledger"] == 0
+        and per_tenant[n]["rollbacks"] == 0
+        and per_tenant[n]["poison_trips"] == 0
+        and per_tenant[n]["digest_matches_solo"]
+        for n in names[1:])
+    return {
+        "n_tenants": n_tenants,
+        "fault_rate": fault_rate,
+        "kill_rate": kill_rate,
+        "seed": seed,
+        "wall_s": round(wall_s, 4),
+        "virtual_s": round(clock.now(), 2),
+        "injected_faults": plan.injected,
+        "kills_fired": kills_fired,
+        "tenants": per_tenant,
+        "neighbours_clean": neighbours_clean,
+    }
+
+
 def sweep(*, seed: int, fault_rates, eager_modes=(True, False),
           quota_frac: float | None = None, short_rate: float = 0.0,
           spike_rate: float = 0.0, spike_ms: float = 50.0,
@@ -314,8 +466,31 @@ def main() -> None:
                          "(arms the durability spill + resume loop)")
     ap.add_argument("--max-kills", type=int, default=3,
                     help="preemption budget per cell")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="multi-tenant axis: N tenant views share one "
+                         "engine, the storm is confined to t0's prefix, "
+                         "neighbours are checked against clean solo runs")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args()
+    if args.tenants > 0:
+        rows = [run_tenant_chaos(n_tenants=args.tenants, fault_rate=rate,
+                                 seed=args.seed, kill_rate=args.kill_rate,
+                                 max_kills=args.max_kills)
+                for rate in args.fault_rates]
+        doc = {"seed": args.seed, "tenants": args.tenants,
+               "tenant_rows": rows}
+        text = json.dumps(doc, indent=2)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text + "\n")
+        print(text)
+        if not all(r["neighbours_clean"] for r in rows):
+            print("fault_sweep: error: a storm confined to t0 leaked "
+                  "into a neighbour tenant's ledger or final state",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"# tenant_sweep_ok cells={len(rows)}", file=sys.stderr)
+        return
     rows = sweep(seed=args.seed, fault_rates=args.fault_rates,
                  quota_frac=args.quota_frac, short_rate=args.short_rate,
                  spike_rate=args.spike_rate, spike_ms=args.spike_ms,

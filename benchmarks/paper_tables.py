@@ -418,6 +418,69 @@ def fault_recovery() -> list:
     return rows
 
 
+def multi_tenant_table() -> list:
+    """Beyond-paper: N batch jobs sharing ONE engine as tenants (PR 10).
+
+    Three cells: the sim fairness leg (Jain index + per-tenant DWRR
+    observability from ``EngineStats.tenants``), the storm leg (a fault +
+    preemption storm confined to t0's prefix — neighbours must stay
+    clean), and a budgeted tenant driven into synchronous EDQUOT/ENOSPC
+    (``TenantQuota.usage()``)."""
+    from .fault_sweep import run_tenant_chaos
+    from .tenant_guard import build_report
+    rows = []
+    rep = build_report("sim")
+    fair = rep["fairness"]
+    rows.append(("tenants/fairness",
+                 f"{fair['p99_makespan_s'] * 1e6:.0f}",
+                 f"jain={fair['jain']:.3f};"
+                 f"p99_over_fair={fair['p99_over_fair_share']:.2f};"
+                 f"sheds={fair['concurrent']['admission_sheds']}"))
+    for name, t in sorted(fair["concurrent"]["tenants"].items()):
+        mk = fair["concurrent"]["makespans"][name]
+        rows.append((f"tenants/fair/{name}", f"{mk * 1e6:.0f}",
+                     f"ops={t['ops']};fused={t['fused']};"
+                     f"credits={t['credits_spent']};"
+                     f"steals={t['steals_served']};"
+                     f"deferred={t['deferred_errors']}"))
+    chaos = run_tenant_chaos(n_tenants=4, fault_rate=0.05, seed=0,
+                             kill_rate=0.01)
+    for name, t in sorted(chaos["tenants"].items()):
+        rows.append((f"tenants/storm/{name}", "0",
+                     f"retries={t['retries']};rollbacks={t['rollbacks']};"
+                     f"poison_trips={t['poison_trips']};"
+                     f"resumes={t['resumes']};ledger={t['ledger']};"
+                     f"committed={t['committed']};"
+                     f"solo_identical={t['digest_matches_solo']}"))
+    rows.append(("tenants/storm", "0",
+                 f"injected={chaos['injected_faults']};"
+                 f"kills={chaos['kills_fired']};"
+                 f"neighbours_clean={chaos['neighbours_clean']}"))
+    # budget cell: a tenant hitting its synchronous byte + inode budget
+    from repro.core import TenantQuota
+    fs = CannyFS(InMemoryBackend())
+    t = fs.tenant("q", "q", quota=TenantQuota(budget_bytes=16 << 10,
+                                              max_inodes=24))
+    t.mkdir("q")
+    admitted = denied = 0
+    for i in range(40):
+        try:
+            with t.open(f"q/f{i:03d}.bin", "wb") as f:
+                f.write(b"x" * 1024)
+            admitted += 1
+        except OSError:
+            denied += 1
+    fs.drain()
+    u = t.quota.usage()
+    fs.close()
+    rows.append(("tenants/quota", "0",
+                 f"admitted={admitted};denied={denied};"
+                 f"bytes_used={u['bytes_used']};"
+                 f"inodes_used={u['inodes_used']};"
+                 f"edquot={u['edquot_count']};enospc={u['enospc_count']}"))
+    return rows
+
+
 def variance_under_load(replicates: int = 6) -> list:
     """Fig 2/4's variance story: time spread under jittery load."""
     spec = TreeSpec(n_files=250, n_dirs=20).scaled()

@@ -30,6 +30,7 @@ def _tables():
         "cold_walk": paper_tables.cold_walk_table,
         "read_ahead": paper_tables.read_ahead_table,
         "fault_recovery": paper_tables.fault_recovery,
+        "multi_tenant": paper_tables.multi_tenant_table,
         # beyond-paper: the engine inside the training framework
         "checkpoint_stall": io_training.checkpoint_stall,
         "checkpoint_restore": io_training.checkpoint_restore,

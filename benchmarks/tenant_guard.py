@@ -1,0 +1,294 @@
+"""CI regression guard for PR 10's multi-tenant serving layer.  Emits
+``BENCH_pr10.json`` and FAILS (exit 1) when fairness or blast-radius
+isolation regressed.
+
+Default mode is the **discrete-event simulation** (``SimClock``): the
+driver round-robins one step of every tenant's job between yields while
+the pool workers run as sim actors, so the interleaving — and with it
+every per-tenant makespan, credit spend and steal — is a pure function
+of the manifest and the latency seed.  Two same-seed runs serialize
+byte-identical ``BENCH_pr10.json`` payloads (asserted in
+``tests/test_sim_guards.py``).
+
+1. **Weighted fair dispatch** — N=4 equal-weight tenants run the
+   extract+rmtree job concurrently on one engine.  Jain's fairness
+   index over the per-tenant makespans must hold >= 0.9 (a starved
+   tenant collapses it), and the slowest tenant (p99 at N=4) must
+   finish within 1.5x the *fair share* of N serial runs — the summed
+   solo makespans, i.e. what a perfectly fair processor-sharing engine
+   would hand each tenant.
+
+2. **Blast-radius isolation** — tenant t0 runs under a seeded fault
+   storm (deterministic EIO burst + a scoped ``ProcessKilled``
+   preemption via ``kill_scope="t0/*"``) while t1–t3 run clean.  The
+   neighbours must end with EMPTY per-tenant ledgers and final backend
+   state byte-identical to their solo runs on a private engine; the
+   storm must stay visible in t0's ledger only.
+
+``--paced`` switches to the paced-real smoke mode: one OS thread per
+tenant over ``PacedVirtualClock`` — nondeterministic timings, loose
+fairness floor, but the same hard isolation checks (neighbour digests
+and ledgers are deterministic even under real scheduling).
+
+    PYTHONPATH=src REPRO_BENCH_SCALE=1.0 python -m benchmarks.tenant_guard
+    PYTHONPATH=src REPRO_BENCH_SCALE=0.1 python -m benchmarks.tenant_guard --paced
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+
+from repro.core import (CannyFS, FaultInjectingBackend, FaultPlan, FaultRule,
+                        InMemoryBackend, LatencyBackend, LatencyModel,
+                        ProcessKilled, SimClock)
+
+from .workloads import (PacedVirtualClock, TreeSpec, run_tenant_jobs,
+                        synth_tenant_tree, tenant_job_steps,
+                        tenant_state_digest)
+
+N_TENANTS = 4
+WORKERS = 8
+MIN_JAIN = {"sim": 0.9, "paced": 0.5}
+#: slowest tenant vs the fair share (summed solo makespans)
+MAX_P99_RATIO = {"sim": 1.5, "paced": 3.0}
+
+
+def _prefix(i: int) -> str:
+    return f"t{i}"
+
+
+def _tenant_spec(i: int) -> TreeSpec:
+    # distinct seed per tenant: four different tree shapes, same scale
+    return TreeSpec(n_files=120, n_dirs=12, seed=42 + i).scaled()
+
+
+def _build_stack(mode: str, plan: FaultPlan | None = None,
+                 kill_scope: str | None = None):
+    clock = SimClock() if mode == "sim" else PacedVirtualClock()
+    inner = InMemoryBackend()
+    backend = LatencyBackend(
+        inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0,
+                            server_slots=32, seed=10),
+        clock=clock)
+    if plan is not None:
+        backend = FaultInjectingBackend(backend, plan, clock=clock,
+                                        kill_scope=kill_scope)
+    return clock, inner, backend
+
+
+def _run_concurrent(mode: str, *, remove: bool,
+                    plan: FaultPlan | None = None,
+                    kill_scope: str | None = None) -> dict:
+    """N tenants on ONE engine: sim mode interleaves one driver round-
+    robin (deterministic); paced mode runs one real thread per tenant."""
+    clock, inner, backend = _build_stack(mode, plan, kill_scope)
+    fs = CannyFS(backend, max_inflight=4000, workers=WORKERS,
+                 echo_errors=False)
+    tenants = [fs.tenant(_prefix(i), _prefix(i)) for i in range(N_TENANTS)]
+    trees = [synth_tenant_tree(_tenant_spec(i), _prefix(i))
+             for i in range(N_TENANTS)]
+    if mode == "sim":
+        jobs = [(_prefix(i),
+                 tenant_job_steps(tenants[i], _prefix(i), *trees[i],
+                                  remove=remove))
+                for i in range(N_TENANTS)]
+        outcomes = run_tenant_jobs(jobs)
+    else:
+        outcomes = {}
+
+        def drive(i):
+            try:
+                for _ in tenant_job_steps(tenants[i], _prefix(i), *trees[i],
+                                          remove=remove):
+                    pass
+            except Exception as e:          # noqa: BLE001 — chaos driver
+                outcomes[_prefix(i)] = e
+
+        threads = [threading.Thread(target=drive, args=(i,))
+                   for i in range(N_TENANTS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    fs.close()
+    st = fs.stats
+    report = {
+        "makespans": {name: ts.last_complete_s
+                      for name, ts in st.tenants.items()},
+        "tenants": {name: {
+            "ops": ts.ops, "executed": ts.executed, "fused": ts.fused,
+            "deferred_errors": ts.deferred_errors,
+            "credits_spent": ts.credits_spent,
+            "steals_served": ts.steals_served,
+        } for name, ts in sorted(st.tenants.items())},
+        "ledger_by_tenant": {
+            _prefix(i): len(fs.ledger.entries_for_tenant(_prefix(i)))
+            for i in range(N_TENANTS)},
+        "digests": {_prefix(i): tenant_state_digest(inner, _prefix(i))
+                    for i in range(N_TENANTS)},
+        "admission_sheds": st.admission_sheds,
+        "failed_jobs": sorted(k for k, v in outcomes.items()
+                              if v is not None),
+        # a tenant counts as killed when the scoped preemption reached its
+        # ledger (the job itself is all-eager, so the driver's loop never
+        # sees the raise — the deferred channel is the observation point)
+        "killed_tenants": sorted(
+            _prefix(i) for i in range(N_TENANTS)
+            if any(isinstance(e.error, ProcessKilled)
+                   for e in fs.ledger.entries_for_tenant(_prefix(i)))),
+    }
+    return report
+
+
+def _run_solo(mode: str, i: int, *, remove: bool) -> dict:
+    """The reference cell: tenant i alone on a private engine."""
+    clock, inner, backend = _build_stack(mode)
+    fs = CannyFS(backend, max_inflight=4000, workers=WORKERS,
+                 echo_errors=False)
+    tenant = fs.tenant(_prefix(i), _prefix(i))
+    dirs, files = synth_tenant_tree(_tenant_spec(i), _prefix(i))
+    for _ in tenant_job_steps(tenant, _prefix(i), dirs, files,
+                              remove=remove):
+        pass
+    fs.close()
+    ts = fs.stats.tenants[_prefix(i)]
+    return {
+        "makespan": ts.last_complete_s,
+        "digest": tenant_state_digest(inner, _prefix(i)),
+        "ledger": len(fs.ledger.entries_for_tenant(_prefix(i))),
+    }
+
+
+def _jain(xs) -> float:
+    xs = list(xs)
+    if not xs or not any(xs):
+        return 0.0
+    return (sum(xs) ** 2) / (len(xs) * sum(x * x for x in xs))
+
+
+def _storm_plan() -> FaultPlan:
+    """Deterministic t0-targeted storm: an EIO burst on writes, then a
+    scoped kill — neighbours' paths never match.  Thresholds scale with
+    the tenant's tree so the kill still fires at REPRO_BENCH_SCALE < 1."""
+    n_files = _tenant_spec(0).n_files
+    return FaultPlan([
+        FaultRule(error="EIO", ops=("write",), path_glob="t0/*",
+                  probability=1.0, after_count=max(2, n_files // 6),
+                  max_failures=4),
+        FaultRule(outcome="kill", path_glob="t0/*",
+                  probability=1.0, after_count=max(6, n_files),
+                  max_failures=1),
+    ], seed=7)
+
+
+def build_report(mode: str = "sim") -> dict:
+    # fairness leg: clean extract+rmtree, concurrent vs N solo runs
+    fair = _run_concurrent(mode, remove=True)
+    solos = {_prefix(i): _run_solo(mode, i, remove=True)
+             for i in range(N_TENANTS)}
+    serial_total = sum(s["makespan"] for s in solos.values())
+    makespans = sorted(fair["makespans"].values())
+    p50 = makespans[len(makespans) // 2]
+    p99 = makespans[-1]
+    # isolation leg: extract only (non-trivial final state), t0 stormed
+    iso = _run_concurrent(mode, remove=False, plan=_storm_plan(),
+                          kill_scope="t0/*")
+    iso_solo = {_prefix(i): _run_solo(mode, i, remove=False)
+                for i in range(1, N_TENANTS)}
+    return {
+        "mode": mode,
+        "n_tenants": N_TENANTS,
+        "fairness": {
+            "concurrent": fair,
+            "solo_makespans": {k: s["makespan"] for k, s in solos.items()},
+            "serial_total_s": serial_total,
+            "jain": _jain(fair["makespans"].values()),
+            "min_jain": MIN_JAIN[mode],
+            "p50_makespan_s": p50,
+            "p99_makespan_s": p99,
+            "p99_over_fair_share": (p99 / serial_total if serial_total
+                                    else 0.0),
+            "max_p99_ratio": MAX_P99_RATIO[mode],
+        },
+        "isolation": {
+            "storm": iso,
+            "solo_digests": {k: s["digest"] for k, s in iso_solo.items()},
+            "neighbour_ledgers": {k: iso["ledger_by_tenant"][k]
+                                  for k in sorted(iso_solo)},
+            "injected_tenant_ledger": iso["ledger_by_tenant"]["t0"],
+        },
+    }
+
+
+def check(report: dict) -> list[str]:
+    """Return the list of FAIL strings for a report (empty == pass)."""
+    mode = report["mode"]
+    fair, iso = report["fairness"], report["isolation"]
+    failures = []
+    if fair["jain"] < fair["min_jain"]:
+        failures.append(
+            f"Jain fairness index {fair['jain']:.3f} < {fair['min_jain']} "
+            "over per-tenant makespans — DWRR dispatch is starving a "
+            "tenant")
+    if fair["p99_over_fair_share"] > fair["max_p99_ratio"]:
+        failures.append(
+            f"slowest tenant took {fair['p99_over_fair_share']:.2f}x the "
+            f"fair share of {report['n_tenants']} serial runs "
+            f"(limit {fair['max_p99_ratio']}x)")
+    conc = fair["concurrent"]
+    if any(conc["ledger_by_tenant"].values()) or conc["failed_jobs"]:
+        failures.append("deferred errors or failed jobs in the clean "
+                        "fairness run")
+    for name, t in conc["tenants"].items():
+        if mode == "sim" and t["credits_spent"] == 0:
+            failures.append(f"tenant {name} spent no DWRR credits — fair "
+                            "dispatch is not engaged")
+    if iso["injected_tenant_ledger"] == 0:
+        failures.append("the t0 fault storm left no ledger entries — the "
+                        "isolation leg tested nothing")
+    for name, n in iso["neighbour_ledgers"].items():
+        if n != 0:
+            failures.append(
+                f"tenant {name} has {n} ledger entries from t0's fault "
+                "storm — cross-tenant blast radius")
+    for name, digest in iso["solo_digests"].items():
+        if iso["storm"]["digests"][name] != digest:
+            failures.append(
+                f"tenant {name}'s final state diverged from its solo run "
+                "while t0 was stormed — isolation broken")
+    if iso["storm"]["killed_tenants"] != ["t0"]:
+        failures.append(
+            f"killed_tenants={iso['storm']['killed_tenants']} — the "
+            "scoped preemption must reach exactly t0's ledger")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--paced", action="store_true",
+                    help="paced-real smoke mode (one OS thread per tenant, "
+                         "loose fairness floor) instead of the simulation")
+    args = ap.parse_args(argv)
+    mode = "paced" if args.paced else "sim"
+    report = build_report(mode)
+    with open("BENCH_pr10.json", "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    fair, iso = report["fairness"], report["isolation"]
+    print(f"[{mode}] multi_tenant: N={report['n_tenants']} "
+          f"jain={fair['jain']:.3f} "
+          f"p99/fair={fair['p99_over_fair_share']:.2f}x "
+          f"(serial_total={fair['serial_total_s']:.2f}s "
+          f"sheds={fair['concurrent']['admission_sheds']})")
+    print(f"[{mode}] isolation: t0_ledger={iso['injected_tenant_ledger']} "
+          f"neighbour_ledgers={list(iso['neighbour_ledgers'].values())} "
+          f"failed={iso['storm']['failed_jobs']}")
+    failures = check(report)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -438,6 +438,82 @@ def extract_then_rm(fs: CannyFS, dirs, files, chunk: int = 8192) -> None:
     fs.rmtree("src")
 
 
+def synth_tenant_tree(spec: TreeSpec, prefix: str):
+    """The same kernel-shaped tree, rooted under ``prefix`` — one per
+    tenant in the ``multi_tenant`` workload.  Distinct ``spec.seed`` per
+    tenant gives each job its own shape draw."""
+    dirs, files = synth_tree(spec)
+    pdirs = [prefix] + [f"{prefix}/{d}" for d in dirs]
+    pfiles = [(f"{prefix}/{p}", data) for p, data in files]
+    return pdirs, pfiles
+
+
+def tenant_job_steps(fs: CannyFS, prefix: str, dirs, files,
+                     chunk: int = 8192, remove: bool = True):
+    """One tenant's extract(+rmtree) job as a generator of steps.
+
+    Yielding after every entry lets a single driver interleave N jobs
+    round-robin — under ``SimClock`` that IS the deterministic model of N
+    concurrent tenants sharing one engine (the sim driver holds the run
+    token between yields), and under real threads each job can equally be
+    drained straight through on its own thread.  Timestamps are fixed so
+    the final backend state is a pure function of the manifest."""
+    for d in dirs:
+        fs.makedirs(d)
+        yield
+    for path, data in files:
+        with fs.open(path, "wb") as f:
+            for lo in range(0, len(data), chunk):
+                f.write(data[lo:lo + chunk])
+        fs.utimens(path, 1.0, 2.0)
+        fs.chmod(path, 0o644)
+        yield
+    if remove:
+        fs.rmtree(f"{prefix}/src")
+        yield
+
+
+def run_tenant_jobs(jobs) -> dict:
+    """Round-robin the step generators to exhaustion.  A job whose step
+    raises is dropped (its exception recorded) — one tenant's fault storm
+    must not strand the driver loop.  Returns {name: error | None}."""
+    outcomes = {name: None for name, _ in jobs}
+    live = list(jobs)
+    while live:
+        nxt = []
+        for name, gen in live:
+            try:
+                next(gen)
+            except StopIteration:
+                continue
+            except Exception as e:          # noqa: BLE001 — chaos driver
+                outcomes[name] = e
+                continue
+            nxt.append((name, gen))
+        live = nxt
+    return outcomes
+
+
+def tenant_state_digest(backend_inner, prefix: str) -> str:
+    """sha256 over the backend state at/under ``prefix`` (sorted paths,
+    file contents, dirs, symlinks) — the byte-identical-to-solo check of
+    the tenancy guard and chaos suite."""
+    snap = backend_inner.snapshot()
+    h = hashlib.sha256()
+    pfx = prefix + "/"
+    for p in sorted(snap.get("dirs", ())):
+        if p == prefix or p.startswith(pfx):
+            h.update(b"D" + p.encode() + b"\0")
+    for p, data in sorted(snap.get("files", {}).items()):
+        if p == prefix or p.startswith(pfx):
+            h.update(b"F" + p.encode() + b"\0")
+            h.update(hashlib.sha256(data).digest())
+    for p, tgt in sorted(snap.get("symlinks", {}).items()):
+        if p == prefix or p.startswith(pfx):
+            h.update(b"L" + p.encode() + b"\0" + str(tgt).encode() + b"\0")
+    return h.hexdigest()
+
+
 def fusion_stats(fs: CannyFS) -> dict:
     """The optimizer's counters for one run, ready for a derived column."""
     st = fs.stats

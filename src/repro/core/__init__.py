@@ -139,13 +139,44 @@ verified against recorded per-segment checksums) are elided.
 ``run_transaction`` treats ``ProcessKilled`` as preemption — no
 rollback, no retry — and its transient-fault retry loop now charges a
 seeded full-jitter exponential backoff on the injected clock.
+
+Tenancy (``core/tenancy.py``)
+-----------------------------
+
+One engine serves N concurrent jobs.  ``fs.tenant(name, root_prefix,
+weight, quota)`` returns a ``Tenant`` — a ``CannyFS``-shaped view that
+shares the parent's engine but scopes four things:
+
+* **namespace** — ops are confined to ``root_prefix``
+  (PermissionError outside it); a tenant's commit/rollback clears the
+  shared namespace overlay only under its prefix
+  (``NamespaceOverlay.clear_under``), so neighbours' optimization
+  windows stay open.
+* **failure domain** — ledger entries carry a tenant tag
+  (``ErrorLedger.entries_for_tenant``), poison / rollback / retry +
+  backoff / spill-resume journals are per-tenant, and
+  ``abort_on_error`` cancels only the faulting tenant's queued ops.
+  ``FaultInjectingBackend(kill_scope="tA/*")`` models one tenant's
+  worker dying while neighbours' calls keep flowing.
+* **resources** — an optional ``TenantQuota`` (bytes + inodes,
+  EDQUOT/ENOSPC at ACK time) plus deficit-weighted-round-robin
+  dispatch credit in the scheduler's ready lanes and steal path, so a
+  bursty tenant cannot starve a neighbour's latency.
+* **admission control** — at global in-flight saturation the
+  scheduler sheds speculative lanes first, then backpressures only
+  the over-share tenant's submits.
+
+Per-tenant observability lives in ``EngineStats.tenants[name]``
+(``TenantStats``: ops, fused, deferred errors, steals served, credits
+spent, retries/rollbacks/resumes, quota headroom) and
+``QuotaBackend.usage()`` / ``TenantQuota.usage()``.
 """
 from .backend import (Clock, CostHint, InMemoryBackend, LatencyBackend,
                       LatencyModel, LocalBackend, RealClock, StatResult,
                       StorageBackend, VirtualClock, is_under, norm_path,
                       parent_of)
 from .durability import SpillImage, SpillManager, commit_marker_ok
-from .engine import EagerIOEngine, EngineStats
+from .engine import EagerIOEngine, EngineStats, TenantStats
 from .errors import (CannyError, EnginePoisonedError, ErrorLedger,
                      LedgerEntry, OpCancelledError, ProcessKilled,
                      RollbackLeakError, ShortWriteError,
@@ -162,6 +193,7 @@ from .prefetch import MetadataPrefetcher, PrefetchPolicy
 from .readahead import ReadAheadManager, ReadPolicy, StatVecBatcher
 from .remote import RemoteStreamBackend, RemoteStreamModel
 from .simclock import SimClock
+from .tenancy import Tenant, TenantQuota
 from .transaction import Transaction, run_transaction
 
 __all__ = [
@@ -179,7 +211,8 @@ __all__ = [
     "RollbackLeakError", "SimClock",
     "ShortWriteError", "SpeculationTicket", "SpillImage", "SpillManager",
     "StatResult", "StatVecBatcher",
-    "StorageBackend", "Transaction", "TransactionFailedError", "VirtualClock",
+    "StorageBackend", "Tenant", "TenantQuota", "TenantStats",
+    "Transaction", "TransactionFailedError", "VirtualClock",
     "commit_marker_ok", "is_under", "make_fault", "norm_path", "parent_of",
     "run_transaction",
 ]

@@ -42,6 +42,18 @@ rollback advances the epoch without a marker — the parser keeps only the
 *last* epoch opened, so records from an abandoned attempt can never
 resurrect rolled-back state.
 
+Tenancy (PR 10): a ``Tenant`` arms its own ``SpillManager`` on a
+distinct ``spill_dir`` via ``Tenant._arm_spill`` — the manager lands in
+the tenant's scheduler-side slot (``_TenantState.spill``), not the
+engine-global ``engine.spill``, so each tenant's window journals, cuts
+and resumes independently: ``Tenant.resume(spill_dir)`` re-proves ONE
+tenant's window on the live shared engine (replaying only its own
+prefix-scoped events) while every neighbour's window stays open.  The
+fs layer reaches the right manager through the ``CannyFS._spill()``
+hook; both commit AND rollback must route through it — a tenant
+rollback that missed its spill's ``on_rollback`` tombstone would leave
+durable claims that wrongly elide re-creates of rolled-back files.
+
 Nothing here imports the engine or fs layers; the manager holds a
 reference to its engine and duck-types the payloads, so the module sits
 beside ``faults.py`` at the bottom of the core dependency graph.

@@ -100,6 +100,27 @@ Architecture (one op's life, left to right)::
         |  reinstalled, durable ops elided/diverted on re-run,     |
         |  uncertain in-flight ops repaired against the backend —  |
         |  instead of redoing the whole job from scratch           |
+        +------+---------------------------------------------------+
+               |
+        +------v---------------------------------------------------+
+        |  Tenancy (core/tenancy.py, PR 10)                        |
+        |  CannyFS.tenant(name, prefix, weight, quota) carves N    |
+        |  isolated jobs out of ONE engine.  Every tenant op is    |
+        |  confined to its root prefix and tagged with a           |
+        |  _TenantState that scopes (1) dispatch: a deficit-       |
+        |  weighted-round-robin credit on every ready-lane pop     |
+        |  (a burst cannot starve a neighbour's latency) plus a    |
+        |  weight-share slice of the in-flight budget — at         |
+        |  saturation admission control sheds speculative lanes    |
+        |  first, then backpressures only the over-share tenant;   |
+        |  (2) the failure domain: tenant-tagged ledger entries,   |
+        |  tenant-scoped poison/rollback/retry-backoff, and an     |
+        |  optional per-tenant spill journal, so one tenant's      |
+        |  fault storm or ProcessKilled preemption leaves the      |
+        |  neighbours' optimization windows open and convergent;   |
+        |  (3) resources: an optional TenantQuota byte+inode       |
+        |  budget enforced at submit.  EngineStats.tenants[name]   |
+        |  is the per-tenant observability sub-snapshot            |
         +----------------------------------------------------------+
 
 Semantics (paper §2–§3):
@@ -145,7 +166,11 @@ Semantics (paper §2–§3):
   ``spill_{records,flushes,bytes,cuts}`` /
   ``resume{s,_elided_ops,_replayed_ops,_repairs}`` (the durability
   spill and crash-resume path, ``core/durability.py``, engaged by
-  ``CannyFS.enable_spill``/``CannyFS.resume``).
+  ``CannyFS.enable_spill``/``CannyFS.resume``), ``admission_sheds``
+  (speculative ops cancelled to admit real work at budget
+  saturation) and ``tenants`` (name -> ``TenantStats`` per-tenant
+  sub-snapshots: ops/executed/fused/deferred_errors/credits_spent/
+  steals_served/retries/rollbacks/resumes/quota headroom).
 * Failures of background ops land in the ErrorLedger; optional
   abort_on_error poisons the engine.  ``max_inflight`` bounds queued ops
   (fused absorptions don't consume new slots — coalescing is also
@@ -169,6 +194,36 @@ from .readahead import (INVALIDATING_KINDS, ReadAheadManager, ReadPolicy,
                         StatVecBatcher)
 from .scheduler import NEEDS_CHILDREN, STRUCTURAL, OpScheduler, _Op
 from .simclock import SimClock
+
+
+@dataclass
+class TenantStats:
+    """Per-tenant observability sub-snapshot (``EngineStats.tenants``).
+
+    Counters are bumped under the scheduler locks noted in
+    ``core/scheduler.py``'s lock-order docs (credits/steals under a
+    ready-queue rlock, the rest under the control lock or the GIL-atomic
+    fs layer), so they are exact in sim mode and monotone-approximate
+    under real threads — same contract as the global counters."""
+
+    name: str = ""
+    weight: float = 1.0
+    ops: int = 0                  # ops admitted for this tenant
+    executed: int = 0             # ...that completed (incl. cancellations)
+    fused: int = 0                # writes/meta absorbed without a new op
+    deferred_errors: int = 0      # ledger entries attributed to the tenant
+    credits_spent: int = 0        # DWRR dispatch credits consumed
+    steals_served: int = 0        # tenant ops dispatched via a work steal
+    retries: int = 0              # run_transaction resubmissions (scoped)
+    rollbacks: int = 0            # Transaction.rollback() on this tenant
+    resumes: int = 0              # CannyFS.resume() on the tenant's spill
+    poison_trips: int = 0         # abort_on_error trips scoped to this
+    #                               tenant (False->True transitions)
+    quota_bytes_used: int = 0     # TenantQuota high-water byte charge
+    quota_bytes_budget: int = 0   # 0 = unbudgeted
+    quota_inodes_used: int = 0
+    last_complete_s: float = 0.0  # sim/monotonic stamp of the latest
+    #                               completion — per-tenant makespan probe
 
 
 @dataclass
@@ -237,6 +292,9 @@ class EngineStats:
     rollbacks: int = 0           # Transaction.rollback() invocations
     rollback_leftovers: int = 0  # paths a verified rollback failed to remove
     retries: int = 0             # run_transaction resubmissions
+    # -- multi-tenancy (core/tenancy.py) ----------------------------------
+    admission_sheds: int = 0     # speculative ops shed at budget saturation
+    tenants: dict = field(default_factory=dict)  # name -> TenantStats
     op_counts: dict = field(default_factory=dict)     # kind -> submitted
     error_counts: dict = field(default_factory=dict)  # kind -> deferred errs
 
@@ -338,6 +396,10 @@ class EagerIOEngine:
         # CannyFS.enable_spill/resume; duck-typed so the engine layer does
         # not import the durability module
         self.spill = None
+        # registered tenants (core/tenancy.py): name -> scheduler-side
+        # _TenantState.  Empty for single-job engines — every tenancy
+        # branch gates on registration so legacy schedules stay identical.
+        self._tenant_states: dict = {}
         if fusion is None or fusion is True:
             self.fusion = FusionPolicy()
         elif fusion is False:
@@ -435,6 +497,29 @@ class EagerIOEngine:
             self.sim.wait_attached(self._exec.nworkers + 1)
 
     # ------------------------------------------------------------------
+    # tenancy
+    # ------------------------------------------------------------------
+
+    def register_tenant(self, name: str, weight: float = 1.0):
+        """Register one tenant: creates the ``EngineStats.tenants[name]``
+        sub-snapshot and the scheduler-side DWRR/budget/poison state.
+        Returns the scheduler state handle — opaque to callers;
+        ``CannyFS.tenant`` threads it through every submit."""
+        tstats = TenantStats(name=name, weight=float(weight))
+        ts = self._sched.register_tenant(name, weight, tstats)
+        self.stats.tenants[name] = tstats
+        self._tenant_states[name] = ts
+        return ts
+
+    def _spill_for(self, tenant):
+        """The spill journal an op records to: a tenant's own journal (or
+        none — tenants never write into the shared engine journal, that
+        would re-entangle the failure domains), else the engine's."""
+        if tenant is not None:
+            return tenant.spill
+        return self.spill
+
+    # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
 
@@ -442,12 +527,15 @@ class EagerIOEngine:
                fn: Callable[[], Any], *, eager: bool,
                cache_kw: dict | None = None,
                region: object = None,
-               payload: object = None) -> Any:
+               payload: object = None,
+               tenant=None) -> Any:
         """Route one op through the DAG.  Eager → returns None immediately;
-        sync → waits and returns the op's result (re-raising its error)."""
+        sync → waits and returns the op's result (re-raising its error).
+        ``tenant`` (a registered ``_TenantState``) scopes the op's poison
+        gate, budget slice, DWRR credit, ledger tag and spill journal."""
         t0 = time.monotonic()
         paths = tuple(norm_path(p) for p in paths)
-        sp = self.spill
+        sp = self._spill_for(tenant)
         if sp is not None:
             # admit-before-schedule: a kill can now strike with the op
             # recorded but unsettled, which resume treats as uncertain
@@ -481,7 +569,7 @@ class EagerIOEngine:
         try:
             op = self._sched.submit(kind, paths, fn, eager=eager,
                                     region=region, payload=payload,
-                                    on_admit=on_admit)
+                                    tenant=tenant, on_admit=on_admit)
         finally:
             if guard:
                 with self._adm_lock:
@@ -621,7 +709,7 @@ class EagerIOEngine:
     # barriers
     # ------------------------------------------------------------------
 
-    def barrier(self, path: str) -> None:
+    def barrier(self, path: str, tenant=None) -> None:
         """Wait until every op submitted so far on ``path`` has executed.
         An observation point: the waited-on op is sealed against fusion."""
         op = self._sched.seal_path(norm_path(path))
@@ -631,10 +719,11 @@ class EagerIOEngine:
                 self.sim.wait_event(op.done)
             else:
                 op.done.wait()
-        if self.spill is not None:
+        sp = self._spill_for(tenant)
+        if sp is not None:
             # observation seal = durability cut: what the caller can now
             # see is also what a resume can now prove
-            self.spill.cut()
+            sp.cut()
 
     def drain(self) -> None:
         """Global barrier: wait for the whole DAG to execute.  The
@@ -651,6 +740,10 @@ class EagerIOEngine:
                 pf.resume()
         if self.spill is not None:
             self.spill.cut()
+        # a global barrier seals every tenant's observation window too
+        for ts in self._tenant_states.values():
+            if ts.spill is not None:
+                ts.spill.cut()
 
     # ------------------------------------------------------------------
     # error / lifecycle
@@ -660,10 +753,12 @@ class EagerIOEngine:
     def poisoned(self) -> bool:
         return self._sched.poisoned
 
-    def reset_poison(self) -> None:
+    def reset_poison(self, tenant=None) -> None:
         """Clear the poisoned state after a transaction rollback handled the
-        failure (the retry path of run_transaction)."""
-        self._sched.reset_poison()
+        failure (the retry path of run_transaction).  With ``tenant``,
+        clears only that tenant's flag — the global flag and every other
+        tenant's are untouched."""
+        self._sched.reset_poison(tenant)
 
     def close(self) -> None:
         """Orderly teardown: drain, then report the ledger (paper's global
@@ -720,7 +815,10 @@ class EagerIOEngine:
             # new work into its payload or elide it from the stream
             op.claimed = True
             elided = op.elided
-        if op.cancelled or (self._sched.poisoned and self.abort_on_error):
+        tname = op.tenant.name if op.tenant is not None else None
+        if op.cancelled or (self._sched.poisoned and self.abort_on_error) \
+                or (op.tenant is not None and op.tenant.poisoned
+                    and self.abort_on_error):
             op.error = OpCancelledError(f"{op.kind}{op.paths}")
             op.cancelled = True
             # a cancelled eager op was ACKed but never executed — without a
@@ -730,7 +828,7 @@ class EagerIOEngine:
             # were never ACKed to anyone — dropping them is their contract
             if op.eager and not op.speculative:
                 self.ledger.record(op.seq, op.kind, op.paths, op.error,
-                                   region=op.region)
+                                   region=op.region, tenant=tname)
         elif elided:
             pass  # proven invisible at every observation point: no backend
         else:
@@ -739,14 +837,19 @@ class EagerIOEngine:
             except BaseException as e:  # noqa: BLE001
                 op.error = e
                 # the ledger exists for errors the caller never saw (paper:
-                # "not properly reported back"); sync ops re-raise directly
-                if op.eager:
+                # "not properly reported back"); sync ops re-raise directly.
+                # Speculative ops are advisory — their faults never reach
+                # the ledger and must not poison (a ProcessKilled escaping
+                # an advisory batch fn would otherwise nuke every tenant)
+                if op.eager and not op.speculative:
                     self.ledger.record(op.seq, op.kind, op.paths, e,
-                                       region=op.region)
+                                       region=op.region, tenant=tname)
                     if self.abort_on_error:
-                        self._sched.poison()
+                        # blast radius: a tenant op's failure poisons only
+                        # its own tenant — neighbours' windows stay open
+                        self._sched.poison(op.tenant)
         op.finished_at = time.monotonic()
-        sp = self.spill
+        sp = self._spill_for(op.tenant)
         if sp is not None and not op.speculative:
             # outcome settles here, before the error-path invalidation and
             # outside every scheduler lock (recording may chunk-flush via
@@ -796,9 +899,19 @@ class EagerIOEngine:
                     self.stats.error_counts.get(op.kind, 0) + 1
                 if getattr(op.error, "injected", False):
                     self.stats.injected_faults += 1
+            if op.tenant is not None:
+                tst = op.tenant.stats
+                tst.executed += 1
+                # per-tenant makespan probe: last completion on the shared
+                # timeline (virtual seconds in sim mode)
+                tst.last_complete_s = (self.sim.now()
+                                       if self.sim is not None
+                                       else time.monotonic())
+                if not op.cancelled and op.error is not None and op.eager:
+                    tst.deferred_errors += 1
         self._sched.on_complete(op)
 
 
-__all__ = ["EagerIOEngine", "EngineStats", "FusionPolicy", "MetaPayload",
-           "NamespaceOverlay", "OverlayPolicy", "ReadPolicy", "WritePayload",
-           "NEEDS_CHILDREN", "STRUCTURAL"]
+__all__ = ["EagerIOEngine", "EngineStats", "TenantStats", "FusionPolicy",
+           "MetaPayload", "NamespaceOverlay", "OverlayPolicy", "ReadPolicy",
+           "WritePayload", "NEEDS_CHILDREN", "STRUCTURAL"]

@@ -82,6 +82,7 @@ class LedgerEntry:
     error: BaseException
     wallclock: float
     region: object = None
+    tenant: str | None = None
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return f"op#{self.seq} {self.kind}({', '.join(self.paths)}): {self.error!r}"
@@ -102,10 +103,12 @@ class ErrorLedger:
         self._echo = echo
 
     def record(self, seq: int, kind: str, paths: tuple[str, ...],
-               error: BaseException, region: object = None) -> LedgerEntry:
+               error: BaseException, region: object = None,
+               tenant: str | None = None) -> LedgerEntry:
         with self._lock:
             entry = LedgerEntry(seq=seq, kind=kind, paths=paths, error=error,
-                                wallclock=time.time(), region=region)
+                                wallclock=time.time(), region=region,
+                                tenant=tenant)
             self._entries.append(entry)
         # cancellations are secondary effects of one poisoning failure —
         # echoing thousands of them per rollback drowns the root cause
@@ -140,6 +143,12 @@ class ErrorLedger:
         (region None) or from another region that opened concurrently —
         serial ranges of interleaved regions overlap, tags don't."""
         return self.clear_where(lambda e: e.region is region)
+
+    def entries_for_tenant(self, tenant: str | None) -> list[LedgerEntry]:
+        """Entries attributed to ``tenant`` (the tenant name stamped at
+        submission; ``None`` selects untenanted work)."""
+        with self._lock:
+            return [e for e in self._entries if e.tenant == tenant]
 
     def __len__(self) -> int:
         with self._lock:

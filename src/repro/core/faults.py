@@ -241,11 +241,18 @@ class FaultInjectingBackend(StorageBackend):
     real sleeps.  Defaults to real time."""
 
     def __init__(self, inner: StorageBackend, plan: FaultPlan,
-                 clock: Clock | None = None):
+                 clock: Clock | None = None,
+                 kill_scope: str | None = None):
         self.inner = inner
         self.plan = plan
         self._fault_clock = clock or RealClock()
         self._dead = False
+        # tenancy (PR 10): with ``kill_scope`` set (an fnmatch glob, e.g.
+        # "tA/*"), a kill models the death of ONE tenant's worker process
+        # sharing the mount — only calls on matching paths raise
+        # ProcessKilled afterwards; neighbours' paths keep flowing.
+        # Default None keeps the legacy whole-process semantics.
+        self.kill_scope = kill_scope
 
     def __getattr__(self, name):  # delegate non-op attrs (snapshot, model…)
         return getattr(self.inner, name)
@@ -255,6 +262,13 @@ class FaultInjectingBackend(StorageBackend):
         same storage' step of a preemption test.  The plan's counters are
         untouched — re-arm or expire it separately."""
         self._dead = False
+
+    def _dead_for(self, path: str) -> bool:
+        if not self._dead:
+            return False
+        if self.kill_scope is None:
+            return True
+        return fnmatch.fnmatchcase(norm_path(path), self.kill_scope)
 
     def cost_hint(self, op: str, nbytes: int = 0):
         # explicit inward delegation: the StorageBackend base defines
@@ -269,7 +283,7 @@ class FaultInjectingBackend(StorageBackend):
         the backend dead and raises ``ProcessKilled`` — as does every
         subsequent call, whatever the plan says (a dead process does not
         come back by retrying)."""
-        if self._dead:
+        if self._dead_for(path):
             exc = ProcessKilled(f"backend is dead (injected kill): "
                                 f"{kind}({path})")
             exc.injected = True
@@ -441,6 +455,23 @@ class QuotaBackend(StorageBackend):
             return None
         with self._qlock:
             return self.max_inodes - self.inodes_used
+
+    def usage(self) -> dict:
+        """One consistent snapshot of the budget state — the per-tenant
+        observability accessor (PR 10), mirrored by ``TenantQuota.usage``
+        and surfaced in the ``multi_tenant`` paper table."""
+        with self._qlock:
+            return {
+                "budget_bytes": self.budget_bytes,
+                "bytes_used": self.used,
+                "bytes_remaining": self.budget_bytes - self.used,
+                "max_inodes": self.max_inodes,
+                "inodes_used": self.inodes_used,
+                "inodes_remaining": (None if self.max_inodes is None
+                                     else self.max_inodes - self.inodes_used),
+                "edquot_count": self.edquot_count,
+                "enospc_count": self.enospc_count,
+            }
 
     # -- inode accounting ----------------------------------------------
 

@@ -126,15 +126,105 @@ class CannyFS:
 
     _REGION_UNSET = object()
 
+    # tenancy hooks (PR 10): the base mount is the untenanted whole-
+    # namespace view, so these default to no-op / engine-global.  The
+    # ``Tenant`` handle (core/tenancy.py) shares this engine but overrides
+    # the hooks, and every public op below inherits prefix confinement,
+    # quota admission, per-tenant spill/poison/retry bookkeeping and
+    # prefix-scoped cache clears without further changes here.
+    _tenant_state = None  # scheduler-side _TenantState; Tenant sets it
+
+    def tenant(self, name: str, root_prefix: str | None = None,
+               weight: float = 1.0, quota=None) -> "CannyFS":
+        """Open a tenant handle on this mount's engine: a ``CannyFS``-
+        shaped view confined to ``root_prefix`` (default: ``name``) with
+        its own failure domain (ledger tag, poison flag, rollback and
+        spill scope), a DWRR dispatch weight, and an optional
+        ``TenantQuota`` byte/inode budget."""
+        from .tenancy import Tenant
+        return Tenant(self, name,
+                      root_prefix if root_prefix is not None else name,
+                      weight=weight, quota=quota)
+
+    def _spill(self):
+        """The spill journal this view records to — the tenant's own for
+        Tenant handles (never the shared engine journal), else the
+        engine's."""
+        return self.engine._spill_for(self._tenant_state)
+
+    def _check_paths(self, kind: str, paths) -> None:
+        """Namespace confinement hook: Tenant raises PermissionError for
+        paths outside its root prefix.  No-op on the base mount."""
+
+    def _quota_admit(self, kind: str, paths, cache_kw=None) -> None:
+        """Quota admission hook, charged synchronously at ACK time (the
+        caller sees EDQUOT/ENOSPC, not a deferred ledger entry).  Charges
+        are high-water per path, so the fused-write fast path and the
+        engine submit path may both call this for one op without double
+        counting.  No-op on the base mount."""
+
+    def _note_fused(self) -> None:
+        """A write/meta op of this view was absorbed by the coalescer."""
+        ts = self._tenant_state
+        if ts is not None:
+            ts.stats.fused += 1
+
+    def _note_retry(self) -> None:
+        """run_transaction retry bookkeeping — engine-global counter plus
+        the submitting tenant's own, so one tenant's transient-error storm
+        is visible (and billable) per tenant."""
+        self.engine.stats.retries += 1
+        ts = self._tenant_state
+        if ts is not None:
+            ts.stats.retries += 1
+
+    def _note_rollback(self, n_leftovers: int) -> None:
+        self.engine.stats.rollbacks += 1
+        self.engine.stats.rollback_leftovers += n_leftovers
+        ts = self._tenant_state
+        if ts is not None:
+            ts.stats.rollbacks += 1
+
+    def _backoff_salt(self) -> str:
+        """Extra salt for run_transaction's deterministic backoff RNG:
+        the tenant name, so per-tenant retry schedules are independent
+        streams (one tenant's attempt count never perturbs a
+        neighbour's jitter)."""
+        return ""
+
+    def _reset_poison(self) -> None:
+        """Scope-aware poison clear: the whole engine for the base mount,
+        only this tenant's flag for a Tenant handle."""
+        self.engine.reset_poison(self._tenant_state)
+
+    def _clear_window_caches(self, *, rollback: bool) -> None:
+        """Drop the optimization-window caches at a commit/rollback
+        boundary.  The base mount owns the whole namespace and clears
+        wholesale (matching pre-tenancy behaviour exactly); a Tenant
+        clears the overlay only under its own prefix so a neighbour's
+        open window survives the boundary."""
+        eng = self.engine
+        ov = eng.overlay
+        if ov is not None:
+            ov.clear()
+        if rollback and eng.readahead is not None:
+            eng.readahead.clear()
+        sb = eng.stat_batcher
+        if sb is not None:
+            sb.clear()
+
     def _submit(self, kind: str, paths: tuple[str, ...], fn, *,
                 cache_kw: dict | None = None, region=_REGION_UNSET,
                 payload=None):
-        sp = self.engine.spill
+        paths_n = tuple(norm_path(p) for p in paths)
+        self._check_paths(kind, paths_n)
+        self._quota_admit(kind, paths_n, cache_kw)
+        sp = self._spill()
         if sp is not None:
             # real mutations poison the spill image for their paths (no
             # later elision may trust run-1 state there) and force-settle
             # any diverted stream they touch, keeping FIFO order intact
-            sp.note_paths(self, kind, tuple(norm_path(p) for p in paths))
+            sp.note_paths(self, kind, paths_n)
         eager = self.flags.is_eager(kind)
         # tag the op with the active transaction so its deferred error is
         # attributed (and later scope-cleared) exactly, even when another
@@ -144,7 +234,7 @@ class CannyFS:
             region = self._active_txn()
         return self.engine.submit(kind, paths, fn, eager=eager,
                                   cache_kw=cache_kw, region=region,
-                                  payload=payload)
+                                  payload=payload, tenant=self._tenant_state)
 
     def _active_txn(self):
         """The transaction to journal into, captured at submission time.
@@ -194,7 +284,7 @@ class CannyFS:
 
     def mkdir(self, path: str) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None and sp.elide_mkdir(p):
             # provably durable from the interrupted run: refresh the
             # claims (journal membership was seeded at attach) and skip
@@ -267,7 +357,8 @@ class CannyFS:
                             cache.put(q, st)
                     return None
 
-                self.engine.submit("stat", tuple(probe), pfn, eager=False)
+                self.engine.submit("stat", tuple(probe), pfn, eager=False,
+                                   tenant=self._tenant_state)
         for part in parts:
             cur = f"{cur}/{part}" if cur else part
             st = self.engine.stat_cache.get(cur)
@@ -299,7 +390,7 @@ class CannyFS:
 
     def rmdir(self, path: str) -> None:
         p, txn = norm_path(path), self._active_txn()
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None and sp.elide_rmdir(p):
             self._elide_replay("rmdir", (p,), {})
             return
@@ -333,7 +424,7 @@ class CannyFS:
 
     def create(self, path: str) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None and sp.divert_create(p):
             # the interrupted run durably created (and wrote) this file:
             # buffer the re-run's stream instead of re-submitting; close
@@ -377,7 +468,7 @@ class CannyFS:
 
     def unlink(self, path: str) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None and sp.elide_unlink(p):
             self._elide_replay("unlink", (p,), {})
             return
@@ -475,8 +566,11 @@ class CannyFS:
 
     def readlink(self, path: str) -> str:
         b = self.backend
-        return self.engine.submit("readlink", (path,),
-                                  lambda: b.readlink(path), eager=False)
+        p = norm_path(path)
+        self._check_paths("readlink", (p,))
+        return self.engine.submit("readlink", (p,),
+                                  lambda: b.readlink(p), eager=False,
+                                  tenant=self._tenant_state)
 
     # ------------------------------------------------------------------
     # data ops
@@ -485,7 +579,13 @@ class CannyFS:
     def _write_at(self, path: str, offset: int, data: bytes) -> None:
         b, p, txn = self.backend, norm_path(path), self._active_txn()
         cache_kw = {"offset": offset, "nbytes": len(data)}
-        sp = self.engine.spill
+        # confinement + quota run BEFORE the fusion attempt: a denied path
+        # must never be absorbed into a neighbour's pending vector, and a
+        # fused write still consumes budget (the high-water charge is
+        # idempotent with _submit's)
+        self._check_paths("write", (p,))
+        self._quota_admit("write", (p,), cache_kw)
+        sp = self._spill()
         if sp is not None and sp.divert_write(p, offset, data):
             # resumed diverted stream: buffered for close-time verification
             self.engine.stat_cache.on_op("write", (p,), **cache_kw)
@@ -498,6 +598,7 @@ class CannyFS:
         # its vector and ACKed without a new engine op
         if self.flags.is_eager("write") and self.engine.try_fuse_write(
                 p, offset, data, region=txn, cache_kw=cache_kw):
+            self._note_fused()
             return
         payload = WritePayload(offset, data)
         # batch the journaling probe (same conditions fn re-checks at
@@ -558,6 +659,7 @@ class CannyFS:
         through to the sync read below and re-feeds the observer."""
         b = self.backend
         p = norm_path(path)
+        self._check_paths("read", (p,))
         ra = self.engine.readahead
         if ra is not None and size >= 0:
             out = ra.read(p, offset, size)
@@ -565,7 +667,7 @@ class CannyFS:
                 return out
         out = self.engine.submit("read", (p,),
                                  lambda: b.read_at(p, offset, size),
-                                 eager=False)
+                                 eager=False, tenant=self._tenant_state)
         if ra is not None:
             ra.observe_sync(p, offset, len(out), size)
         return out
@@ -582,7 +684,7 @@ class CannyFS:
         the optimizer: an adjacent pending same-kind op absorbs the new
         arguments instead of a second backend roundtrip."""
         p, txn = norm_path(path), self._active_txn()
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None and sp.elide_meta(kind, p, args):
             # last-wins metadata durably applied with identical arguments
             # by the interrupted run: skip the roundtrip
@@ -590,6 +692,7 @@ class CannyFS:
             return
         if self.flags.is_eager(kind) and self.engine.try_fuse_meta(
                 kind, p, args, region=txn, cache_kw=cache_kw):
+            self._note_fused()
             return
         payload = MetaPayload(args)
         self._submit(kind, (p,), lambda: apply_fn(p, *payload.args),
@@ -605,12 +708,12 @@ class CannyFS:
                      cache_kw={"size": size})
 
     def flush(self, path: str) -> None:
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None:
             sp.finalize(self, norm_path(path))
         if self.flags.flush:
             return  # eager flush == no-op ACK; data ordering is per-path
-        self.engine.barrier(path)
+        self.engine.barrier(path, tenant=self._tenant_state)
 
     def fsync(self, path: str) -> None:
         b = self.backend
@@ -622,11 +725,11 @@ class CannyFS:
          'the closing of files a barrier', paper §5).  A resumed diverted
         stream settles here: the buffered content is verified against the
         recorded durable checksums and elided, or rewritten for real."""
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None:
             sp.finalize(self, norm_path(path))
         if not self.flags.flush:
-            self.engine.barrier(path)
+            self.engine.barrier(path, tenant=self._tenant_state)
 
     # ------------------------------------------------------------------
     # metadata ops
@@ -659,6 +762,7 @@ class CannyFS:
         membership (a complete parent that does not list the name) without
         sealing anything; only a miss takes the sync, sealing path."""
         path = norm_path(path)
+        self._check_paths("stat", (path,))
         ov = self.engine.overlay
         mock = ov.policy.mock_stat if ov is not None else self.flags.mock_stat
         negative = (ov.policy.negative_stat if ov is not None
@@ -683,7 +787,8 @@ class CannyFS:
             cache.put(path, st)
             return st
 
-        return self.engine.submit("stat", (path,), fn, eager=False)
+        return self.engine.submit("stat", (path,), fn, eager=False,
+                                  tenant=self._tenant_state)
 
     def exists(self, path: str) -> bool:
         return self.stat(path).exists
@@ -718,6 +823,7 @@ class CannyFS:
         warming the stat cache, seeding the prefetch frontier with the
         discovered subdirectories, and sealing as any sync op does."""
         path = norm_path(path)
+        self._check_paths("readdir", (path,))
         ov = self.engine.overlay
         b = self.backend
         if ov is not None:
@@ -755,11 +861,13 @@ class CannyFS:
                     pf.seed_children(path, listing)
                 return [name for name, _ in listing]
 
-            return self.engine.submit("readdir", (path,), fn, eager=False)
+            return self.engine.submit("readdir", (path,), fn, eager=False,
+                                      tenant=self._tenant_state)
         # overlay disabled: the pre-overlay path — plain backend readdir
         # plus the legacy advisory per-entry prefetch stats
         names = self.engine.submit("readdir", (path,),
-                                   lambda: b.readdir(path), eager=False)
+                                   lambda: b.readdir(path), eager=False,
+                                   tenant=self._tenant_state)
         if self.flags.readdir_prefetch:
             cache = self.engine.stat_cache
             for name in names:
@@ -773,7 +881,8 @@ class CannyFS:
                                 pass  # advisory warm-up only: a failure
                                 # must not land in the ledger and condemn
                                 # a transaction — consumers stat on demand
-                    self.engine.submit("stat", (child,), pf, eager=True)
+                    self.engine.submit("stat", (child,), pf, eager=True,
+                                       tenant=self._tenant_state)
                     self.engine.stats.prefetched_stats += 1
         return names
 
@@ -797,7 +906,7 @@ class CannyFS:
         per-entry path: eager unlinks/rmdirs ordered by the engine's
         pending-children edges."""
         path = norm_path(path)
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None and sp.elide_remove_root(path):
             # the interrupted run durably removed this whole subtree (and
             # nothing under it was re-created since): skip the recursion
@@ -869,6 +978,15 @@ class CannyFS:
         """True once abort_on_error tripped; new submissions fail fast."""
         return self.engine.poisoned
 
+    def _arm_spill(self, sp: SpillManager) -> None:
+        """Install a prepared spill journal where ``_spill()`` finds it:
+        engine-global here, the tenant's own slot for Tenant handles."""
+        self.engine.spill = sp
+
+    def _quota_release(self, paths) -> None:
+        """Rollback removed these paths directly through the backend —
+        give the tenant its budget back.  No-op on the base mount."""
+
     def _elide_replay(self, kind: str, paths: tuple, kw: dict) -> None:
         """Account one re-run op skipped as provably durable, refreshing
         the write-through claims it would have installed at admission."""
@@ -889,7 +1007,7 @@ class CannyFS:
         sp = SpillManager(self.engine, spill_dir,
                           flush_records=flush_records)
         sp.prepare()
-        self.engine.spill = sp
+        self._arm_spill(sp)
         return sp
 
     def resume(self, spill_dir: str, *, flush_records: int = 64) -> dict:
@@ -929,14 +1047,21 @@ class CannyFS:
                 cache.on_op("remove_tree", tuple(gone))
                 if ov is not None:
                     ov.on_op("remove_tree", (root,))
-        self.engine.spill = sp
+        # preemption skipped the rollback that would have cleared the
+        # poison gate; the re-proof IS the recovery — lift it (tenant-
+        # scoped on a Tenant view, a no-op on a genuinely fresh mount)
+        self._reset_poison()
+        self._arm_spill(sp)
         self.engine.stats.resumes += 1
         self.engine.stats.resume_replayed_ops += replayed
+        ts = self._tenant_state
+        if ts is not None:
+            ts.stats.resumes += 1
         report["replayed"] = replayed
         return report
 
     def drain(self) -> None:
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None:
             sp.finalize_all(self)
         self.engine.drain()
@@ -944,7 +1069,7 @@ class CannyFS:
     def close(self) -> None:
         """Unmount: drain all pending I/O and report deferred errors —
         the benchmarked 'fully killing the CannyFS process' step."""
-        sp = self.engine.spill
+        sp = self._spill()
         if sp is not None:
             sp.finalize_all(self)
         self.engine.close()

@@ -737,6 +737,35 @@ class NamespaceOverlay:
                 t.cancelled = True
             self._specs.clear()
 
+    def clear_under(self, prefix: str) -> None:
+        """Tenant-scoped window close (PR 10): drop every claim at or
+        under ``prefix`` — directory states, cached listings, fused-
+        removal proofs and in-flight speculative fetches — while claims
+        about the rest of the namespace (the neighbour tenants' open
+        optimization windows) stand untouched.  The prefix's own parent
+        loses the child's membership claim too: a rollback may have
+        removed the subtree's root itself."""
+        prefix = norm_path(prefix)
+        if not prefix:
+            self.clear()
+            return
+        with self._lock:
+            self._cancel_specs_under(prefix)
+            self._cancel_spec_at(parent_of(prefix))
+            par, name = self._split(prefix)
+            st = self._dirs.get(par)
+            if st is not None:
+                # membership of the scoped root in its (shared) parent is
+                # no longer proven either way
+                st.children.pop(name, None)
+                st.absent.discard(name)
+                st.complete = False
+            for k in [k for k in self._dirs if is_under(k, prefix)]:
+                del self._dirs[k]
+            for k in [k for k in self._listed if is_under(k, prefix)]:
+                del self._listed[k]
+            self._demote_watchers_under(prefix)
+
 
 __all__ = ["NamespaceOverlay", "OverlayPolicy", "RemoveWitness",
            "SpeculationTicket"]

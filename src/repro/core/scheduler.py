@@ -38,6 +38,39 @@ ops now live in per-shard deques aligned to the path-hash shards:
   (``stats.parks``).  Producers take the control lock only to wake parked
   workers, so the busy-pool fast path never touches a global lock to pop.
 
+Multi-tenant fair dispatch + admission control (PR 10)
+------------------------------------------------------
+
+With tenants registered (``register_tenant``; a zero-tenant engine takes
+exactly the legacy paths above, byte-identical schedules included), every
+ready-lane pop — owned-shard head and steal tail alike — honours a
+**deficit-weighted round-robin credit** per tenant: an op whose tenant
+holds ``deficit >= 1`` dispatches and spends one credit
+(``TenantStats.credits_spent``); when a lane holds only broke tenants'
+ops, every tenant's deficit is replenished in proportion to its weight
+(the lowest weight maps to exactly one credit per round; accumulation is
+capped at four rounds so an idle tenant cannot bank an unbounded burst)
+and the scan re-runs — one replenish always funds a pop.  Untenanted
+ops (engine-internal work: spill chunks, prefetch batches) always
+dispatch.  A tenant's burst therefore cannot starve a neighbour's
+latency: each round interleaves dispatch weight-proportionally however
+deep any single backlog runs.  A steal that dispatches a tenant's op
+additionally counts ``TenantStats.steals_served`` — the cross-worker
+capacity the engine donated to that tenant.
+
+Admission control composes two releases ahead of blocking.  At global
+in-flight saturation the submitter first **sheds** the oldest queued
+speculative op — the low-priority lanes are advisory by contract
+(prefetch/read-ahead/spill chunks re-issue or degrade, never corrupt) —
+retiring it cancelled and taking its budget slot
+(``stats.admission_sheds``).  Only when nothing is sheddable does the
+submitter block, and then **per-tenant backpressure** applies: a tenant
+over its weight-share of the budget keeps waiting while an under-share
+tenant is parked on the budget too, so one tenant saturating the window
+backpressures its own submits, never a neighbour's (completions
+broadcast the budget condition in tenant mode so the under-share waiter
+always gets its look).
+
 Lock architecture
 -----------------
 
@@ -54,6 +87,15 @@ Lock order (never acquired in reverse): shard locks (ascending index)
 (the deepest leaf: a parked worker rescans the ready deques while holding
 the control lock, so an rlock holder must never wait on anything).  Leaf
 locks (stat cache, ledger, fusion stats) nest under any of these.
+
+PR 10 additions keep that order: per-tenant DWRR ``deficit`` counters
+(and the credit/steal tallies on ``TenantStats``) are mutated only while
+holding a ready-queue ``rlock`` — cooperatively serialized in sim mode,
+advisory under real threads — and never take another lock; per-tenant
+``inflight``/``waiting``/``poisoned`` bookkeeping lives strictly under
+the control lock, exactly like the global budget it refines.  The
+admission-control shed pops a speculative lane under ctl -> rlock, the
+already-legal rescan nesting.
 
 Per-op flags (``claimed``/``sealed``/``elided``/``completed``) live under
 the op's own ``flock`` so the optimizer can mutate a pending op's payload
@@ -94,16 +136,40 @@ NEEDS_CHILDREN = {"rmdir", "readdir", "rename", "remove_tree"}
 DEFAULT_SHARDS = 16
 
 
+class _TenantState:
+    """Scheduler-side record of one registered tenant: the DWRR credit,
+    the per-tenant slice of the in-flight budget, and the tenant-scoped
+    poison flag.  ``stats`` is the engine's ``TenantStats`` sub-snapshot
+    (a leaf: counters bumped under rlock/ctl, never read under a lock
+    the snapshot path takes).  See the module docstring for which lock
+    guards which field."""
+
+    __slots__ = ("name", "weight", "stats", "deficit", "inflight",
+                 "waiting", "poisoned", "spill")
+
+    def __init__(self, name: str, weight: float, stats):
+        self.name = name
+        self.weight = max(1e-6, float(weight))
+        self.stats = stats
+        self.deficit = 1.0      # DWRR credit (rlock; see docstring)
+        self.inflight = 0       # admitted, not yet completed (ctl)
+        self.waiting = 0        # submitters parked on the budget (ctl)
+        self.poisoned = False   # tenant-scoped abort_on_error (ctl)
+        self.spill = None       # the tenant's own SpillManager, if armed
+
+
 class _Op:
     __slots__ = ("seq", "kind", "paths", "fn", "done", "error", "result",
                  "remaining_deps", "dependents", "cancelled", "submitted_at",
                  "started_at", "finished_at", "eager", "region",
                  "flock", "completed", "claimed", "sealed", "elided",
-                 "payload", "prev_same_path", "wired", "speculative")
+                 "payload", "prev_same_path", "wired", "speculative",
+                 "tenant")
 
     def __init__(self, seq: int, kind: str, paths: tuple[str, ...],
                  fn: Callable[[], Any], eager: bool = True,
-                 region: object = None, payload: object = None):
+                 region: object = None, payload: object = None,
+                 tenant: Optional[_TenantState] = None):
         self.seq = seq
         self.kind = kind
         self.paths = paths
@@ -136,6 +202,9 @@ class _Op:
         # speculative (advisory) op: rides the low-priority ready deques,
         # takes and grants no DAG edges, never lands in the ledger
         self.speculative = False
+        # owning tenant's _TenantState (None = engine-internal work):
+        # scopes DWRR credit, the budget slice, poison and the ledger tag
+        self.tenant = tenant
 
 
 class _Shard:
@@ -190,6 +259,89 @@ class OpScheduler:
         self._inflight = 0
         self._poisoned = False
         self._closed = False
+        # multi-tenant state (empty dict = legacy single-job engine; every
+        # tenancy branch below gates on it so zero-tenant schedules stay
+        # byte-identical to pre-PR 10)
+        self._tenants: dict[str, _TenantState] = {}
+        self._total_weight = 0.0
+        self._min_weight = 1.0
+
+    # ------------------------------------------------------------------
+    # tenancy
+    # ------------------------------------------------------------------
+
+    def register_tenant(self, name: str, weight: float,
+                        stats) -> _TenantState:
+        """Register one tenant and return its scheduler-side state.
+        ``stats`` is the engine's ``TenantStats`` for this tenant (the
+        scheduler bumps credits_spent / steals_served on it)."""
+        with self._ctl:
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            ts = _TenantState(name, weight, stats)
+            self._tenants[name] = ts
+            self._total_weight = sum(
+                t.weight for t in self._tenants.values())
+            self._min_weight = min(
+                t.weight for t in self._tenants.values())
+            return ts
+
+    def _tenant_share(self, ts: _TenantState) -> int:
+        """The tenant's weight-proportional slice of the in-flight budget
+        (its backpressure threshold — never an absolute cap: an alone
+        tenant may use the whole window)."""
+        return max(1, int(self.max_inflight * ts.weight
+                          / max(self._total_weight, 1e-9)))
+
+    def _must_defer(self, ts: Optional[_TenantState]) -> bool:
+        """Caller holds ctl.  True when ``ts`` is over its weight-share of
+        the budget while some *under-share* tenant is parked waiting for a
+        slot — the over-budget tenant alone backpressures."""
+        if ts is None or not self._tenants:
+            return False
+        if ts.inflight < self._tenant_share(ts):
+            return False
+        for t in self._tenants.values():
+            if (t is not ts and t.waiting > 0
+                    and t.inflight < self._tenant_share(t)):
+                return True
+        return False
+
+    def _replenish_credits(self) -> None:
+        """DWRR replenish (caller holds an rlock): every tenant gains
+        weight-proportional credit — the lowest weight earns exactly one
+        op per round, so one replenish always funds the next pop —
+        accumulation capped at four rounds of burst."""
+        mw = self._min_weight
+        for t in self._tenants.values():
+            gain = t.weight / mw
+            t.deficit = min(t.deficit + gain, 4.0 * max(1.0, gain))
+
+    def _pop_lane(self, dq: deque, *, tail: bool) -> Optional[_Op]:
+        """Pop one op from a ready lane (caller holds its rlock): plain
+        FIFO head / steal tail with no tenants registered, else the first
+        op — in the same scan direction — whose tenant can afford a DWRR
+        credit (untenanted and poisoned-tenant ops always dispatch: the
+        former are engine-internal, the latter drain as cancellations and
+        must not rot in the lane)."""
+        if not dq:
+            return None
+        if not self._tenants:
+            return dq.pop() if tail else dq.popleft()
+        for _round in (0, 1):
+            order = (range(len(dq) - 1, -1, -1) if tail
+                     else range(len(dq)))
+            for i in order:
+                ts = dq[i].tenant
+                if ts is None or ts.poisoned or ts.deficit >= 1.0:
+                    op = dq[i]
+                    del dq[i]
+                    if ts is not None and not ts.poisoned:
+                        ts.deficit -= 1.0
+                        ts.stats.credits_spent += 1
+                    return op
+            self._replenish_credits()
+        return dq.pop() if tail else dq.popleft()   # unreachable backstop
 
     # ------------------------------------------------------------------
     # sharding helpers
@@ -219,6 +371,7 @@ class OpScheduler:
     def submit(self, kind: str, paths: tuple[str, ...],
                fn: Callable[[], Any], *, eager: bool,
                region: object = None, payload: object = None,
+               tenant: Optional[_TenantState] = None,
                on_admit: Callable[[], None] | None = None) -> _Op:
         """Admit one op: budget gate, dependency wiring, ready enqueue.
         Paths must already be normalized.  ``on_admit`` runs after the
@@ -226,33 +379,63 @@ class OpScheduler:
         strictly before the op can possibly execute (the engine updates
         its write-through stat cache there, so a fast-failing op's
         error-path invalidation, which happens at completion, always wins
-        over the ACK-time mocked entry)."""
+        over the ACK-time mocked entry).  ``tenant`` scopes the op to a
+        registered tenant: its poison gate, its budget slice, its DWRR
+        credit."""
         while True:
             hooked = False
+            shed: Optional[_Op] = None
             with self._ctl:
-                if self._poisoned:
+                if self._poisoned or (tenant is not None
+                                      and tenant.poisoned):
                     raise EnginePoisonedError(
                         "cannyfs engine poisoned by an earlier deferred error")
                 if self._closed:
                     raise RuntimeError("engine is closed")
-                # budget: block the *caller* — the paper's in-flight cap
-                if self._inflight < self.max_inflight:
+                # budget: block the *caller* — the paper's in-flight cap.
+                # In tenant mode an over-share tenant additionally yields
+                # to under-share waiters (per-tenant backpressure).
+                if (self._inflight < self.max_inflight
+                        and not self._must_defer(tenant)):
                     seq = next(self._seq)
                     self._inflight += 1
+                    if tenant is not None:
+                        tenant.inflight += 1
+                        tenant.stats.ops += 1
                     self.stats.submitted += 1
                     self.stats.op_counts[kind] = \
                         self.stats.op_counts.get(kind, 0) + 1
                     self.stats.max_queue_depth = max(
                         self.stats.max_queue_depth, self._inflight)
                     break
-                if self._sim is not None:
-                    self._sim.block_begin(self._budget_cv)
-                    hooked = True
-                self._budget_cv.wait()
+                # saturated: shed the oldest queued speculative op before
+                # blocking anyone — advisory lanes degrade, real work
+                # proceeds (tenant mode only; legacy engines keep the
+                # exact pre-PR 10 blocking behaviour)
+                if self._tenants and self._inflight >= self.max_inflight:
+                    shed = self._take_sheddable_locked()
+                    if shed is not None:
+                        self._inflight -= 1
+                        if shed.tenant is not None:
+                            shed.tenant.inflight -= 1
+                        self.stats.admission_sheds += 1
+                        self.stats.cancelled += 1
+                if shed is None:
+                    if tenant is not None:
+                        tenant.waiting += 1
+                    if self._sim is not None:
+                        self._sim.block_begin(self._budget_cv)
+                        hooked = True
+                    self._budget_cv.wait()
+                    if tenant is not None:
+                        tenant.waiting -= 1
+            if shed is not None:
+                self._retire_shed(shed)
+                continue
             if hooked:
                 self._sim.block_end()
         op = _Op(seq, kind, paths, fn, eager=eager, region=region,
-                 payload=payload)
+                 payload=payload, tenant=tenant)
         if on_admit is not None:
             on_admit()
 
@@ -364,6 +547,30 @@ class OpScheduler:
         op.speculative = True
         self._push_ready(op)
         return op
+
+    def _take_sheddable_locked(self) -> Optional[_Op]:
+        """Caller holds ctl.  Remove and return the oldest queued
+        speculative op across every low-priority lane (ctl -> rlock is
+        the legal rescan nesting), or None when the lanes are dry."""
+        for sh in self._shards:
+            with sh.rlock:
+                if sh.rq_lo:
+                    return sh.rq_lo.popleft()
+        return None
+
+    def _retire_shed(self, op: _Op) -> None:
+        """Finish a shed speculative op outside ctl: it left the lane, no
+        worker will ever claim it, so the completion bookkeeping the
+        executor would have done happens here.  Speculative ops hold no
+        DAG edges and publish nothing to the per-path maps, so cancel +
+        payload callback + done is the whole protocol."""
+        op.cancelled = True
+        cb = getattr(op.payload, "on_cancelled", None)
+        if cb is not None:
+            cb()
+        op.done.set()
+        if self._sim is not None:
+            self._sim.wake(op.done)
 
     def _home_shard(self, op: _Op) -> _Shard:
         return self._shards[hash(op.paths[0]) % self._nshards]
@@ -553,13 +760,15 @@ class OpScheduler:
         for s in owned:
             sh = shards[s]
             with sh.rlock:
-                if sh.rq:
-                    return sh.rq.popleft(), False
+                op = self._pop_lane(sh.rq, tail=False)
+            if op is not None:
+                return op, False
         for s in owned:
             sh = shards[s]
             with sh.rlock:
-                if sh.rq_lo:
-                    return sh.rq_lo.popleft(), False
+                op = self._pop_lane(sh.rq_lo, tail=False)
+            if op is not None:
+                return op, False
         if not self.work_stealing:
             return None, False
         mine = set(owned)
@@ -570,10 +779,12 @@ class OpScheduler:
                 continue
             sh = shards[s]
             with sh.rlock:
-                op = sh.rq.pop() if sh.rq else None
+                op = self._pop_lane(sh.rq, tail=True)
             if op is not None:
                 with self._slock:
                     self.stats.steals += 1
+                    if op.tenant is not None:
+                        op.tenant.stats.steals_served += 1
                 return op, True
         for k in range(n):
             s = (worker + k) % n
@@ -581,10 +792,12 @@ class OpScheduler:
                 continue
             sh = shards[s]
             with sh.rlock:
-                op = sh.rq_lo.pop() if sh.rq_lo else None
+                op = self._pop_lane(sh.rq_lo, tail=True)
             if op is not None:
                 with self._slock:
                     self.stats.steals += 1
+                    if op.tenant is not None:
+                        op.tenant.stats.steals_served += 1
                 return op, True
         return None, False
 
@@ -668,9 +881,19 @@ class OpScheduler:
             if newly_ready:
                 self._notify_ready(len(newly_ready))
             self._inflight -= 1
-            if self._sim is not None:
-                self._sim.wake(self._budget_cv, 1)
-            self._budget_cv.notify()
+            if op.tenant is not None:
+                op.tenant.inflight -= 1
+            if self._tenants:
+                # broadcast in tenant mode: a single notify could keep
+                # waking the over-share tenant's deferred submitter while
+                # the under-share waiter it must yield to sleeps on
+                if self._sim is not None:
+                    self._sim.wake(self._budget_cv)
+                self._budget_cv.notify_all()
+            else:
+                if self._sim is not None:
+                    self._sim.wake(self._budget_cv, 1)
+                self._budget_cv.notify()
             if self._inflight == 0:
                 if self._sim is not None:
                     self._sim.wake(self._idle_cv)
@@ -706,21 +929,33 @@ class OpScheduler:
     def poisoned(self) -> bool:
         return self._poisoned
 
-    def poison(self) -> None:
+    def poison(self, tenant: Optional[_TenantState] = None) -> None:
+        """Poison the engine — or, given a tenant, only that tenant's
+        failure domain: its flag trips, its queued ops cancel, and every
+        other tenant's window stays open and convergent."""
         with self._ctl:
-            self._poisoned = True
+            if tenant is None:
+                self._poisoned = True
+            elif not tenant.poisoned:
+                tenant.poisoned = True
+                tenant.stats.poison_trips += 1
             # cancel everything not yet started; their dependents cascade
             queued: list[_Op] = []
             for sh in self._shards:
                 with sh.rlock:
-                    queued.extend(sh.rq)
-                    queued.extend(sh.rq_lo)
+                    for dq in (sh.rq, sh.rq_lo):
+                        for op in dq:
+                            if tenant is None or op.tenant is tenant:
+                                queued.append(op)
         for op in queued:
             op.cancelled = True
 
-    def reset_poison(self) -> None:
+    def reset_poison(self, tenant: Optional[_TenantState] = None) -> None:
         with self._ctl:
-            self._poisoned = False
+            if tenant is None:
+                self._poisoned = False
+            else:
+                tenant.poisoned = False
 
     def close(self) -> None:
         with self._ctl:

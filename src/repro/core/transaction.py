@@ -79,7 +79,7 @@ class Transaction:
             # new (or re-kinded) journal entry: persist it so a resumed
             # attempt's rollback scope covers this path too.  Seeded
             # entries (attach_txn) re-record nothing.
-            sp = self.fs.engine.spill
+            sp = self.fs._spill()
             if sp is not None:
                 sp.record_journal(path, is_dir)
 
@@ -101,7 +101,7 @@ class Transaction:
         with self._lock:
             for p in [p for p in self._created if is_under(p, src)]:
                 self._created[dst + p[len(src):]] = self._created.pop(p)
-        sp = self.fs.engine.spill
+        sp = self.fs._spill()
         if sp is not None:
             sp.record_journal_rename(src, dst)
 
@@ -116,7 +116,7 @@ class Transaction:
                 raise RuntimeError("nested transactions are not supported")
             self.fs._txn = self
         self._active = True
-        sp = self.fs.engine.spill
+        sp = self.fs._spill()
         if sp is not None:
             # open the spill epoch (or, on a resumed mount, seed this
             # region's journal with the interrupted attempt's proven one)
@@ -152,22 +152,16 @@ class Transaction:
         errs = self.errors()
         if errs:
             raise TransactionFailedError(errs)
-        sp = self.fs.engine.spill
+        sp = self.fs._spill()
         if sp is not None:
             # committed marker + final cut, then the spill log is retired
             sp.on_commit()
         # the optimization window is closed: drop the namespace overlay's
         # delta (its claims are now plain backend truth; the next window
-        # rebuilds its own)
-        ov = self.fs.engine.overlay
-        if ov is not None:
-            ov.clear()
-        # existence probes are window-scoped ("did the path pre-exist
-        # *this* region") — retire any the drain left unconsumed.  The
-        # read-ahead pages stay: commit mutated nothing behind the engine
-        sb = self.fs.engine.stat_batcher
-        if sb is not None:
-            sb.clear()
+        # rebuilds its own) and retire the window-scoped existence probes.
+        # The read-ahead pages stay: commit mutated nothing behind the
+        # engine.  Scope-aware: a Tenant clears only under its prefix.
+        self.fs._clear_window_caches(rollback=False)
         self.committed = True
 
     def rollback(self) -> None:
@@ -180,7 +174,7 @@ class Transaction:
         ``rollback_leftovers`` rather than silently leaked."""
         self.fs.drain()
         self.final_errors = self.errors()
-        sp = self.fs.engine.spill
+        sp = self.fs._spill()
         if sp is not None:
             # tombstone the epoch BEFORE removing anything: a kill mid-
             # rollback must leave a log that proves "this window is dead",
@@ -230,24 +224,21 @@ class Transaction:
             except OSError:
                 leftovers.append(p)
         self.rollback_leftovers = leftovers
+        # the removed outputs hand their quota charges back to the tenant
+        # (no-op on untenanted mounts)
+        self.fs._quota_release([p for p in created if p not in leftovers])
         # rollback mutated the backend behind the engine's back (direct
-        # unlinks/rmdirs): every overlay claim is now suspect — clear it,
-        # and every read-ahead page / batched existence probe with it
-        ov = self.fs.engine.overlay
-        if ov is not None:
-            ov.clear()
-        ra = self.fs.engine.readahead
-        if ra is not None:
-            ra.clear()
-        sb = self.fs.engine.stat_batcher
-        if sb is not None:
-            sb.clear()
+        # unlinks/rmdirs): every overlay claim under this view's scope is
+        # now suspect — clear it, and every read-ahead page / batched
+        # existence probe with it.  Scope-aware: a Tenant clears the
+        # overlay only under its prefix, keeping neighbours' windows open.
+        self.fs._clear_window_caches(rollback=True)
         # scoped clear: only this region's errors are handled — entries
         # from earlier work or a concurrently-opened region must survive
         self.fs.ledger.clear_region(self)
-        self.fs.engine.reset_poison()
-        self.fs.engine.stats.rollbacks += 1
-        self.fs.engine.stats.rollback_leftovers += len(leftovers)
+        # scope-aware: a Tenant clears only its own poison flag
+        self.fs._reset_poison()
+        self.fs._note_rollback(len(leftovers))
         self.rolled_back = True
 
 
@@ -311,7 +302,11 @@ def _backoff_sleep(fs: CannyFS, name: str, attempt: int,
     ``BENCH_*.json`` replay byte-identically per seed."""
     if seed is None:
         seed = getattr(getattr(fs.backend, "plan", None), "seed", 0)
-    rng = random.Random(hash((int(seed), zlib.crc32(name.encode("utf-8")),
+    # per-tenant salt (empty on the base mount, so untenanted draws are
+    # unchanged): one tenant's attempt count never perturbs a neighbour's
+    # jitter stream
+    salted = fs._backoff_salt() + name
+    rng = random.Random(hash((int(seed), zlib.crc32(salted.encode("utf-8")),
                               attempt)))
     delay = rng.random() * min(cap_s, base_s * (2 ** attempt))
     if delay <= 0:
@@ -400,7 +395,7 @@ def run_transaction(fs: CannyFS, body: Callable[[CannyFS], T], *,
                 raise  # deterministic body bug: rolled back, not retried
             last = e
             if attempt < retries:
-                fs.engine.stats.retries += 1
+                fs._note_retry()  # engine-global + per-tenant bookkeeping
                 if backoff_s:  # no pointless sleep after the final attempt
                     _backoff_sleep(fs, name, attempt, backoff_s,
                                    backoff_cap_s, backoff_seed)

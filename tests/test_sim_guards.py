@@ -17,7 +17,8 @@ import json
 import pytest
 
 from benchmarks import (backend_guard, dispatch_guard, overlay_guard,
-                        read_guard, resume_guard, sim_sweep, walk_guard)
+                        read_guard, resume_guard, sim_sweep, tenant_guard,
+                        walk_guard)
 from benchmarks.workloads import (PacedVirtualClock, TreeSpec, extract_tree,
                                   synth_tree)
 from repro.core import (CannyFS, InMemoryBackend, LatencyBackend,
@@ -30,9 +31,9 @@ def _payload(report) -> str:
 
 @pytest.mark.parametrize("guard", [dispatch_guard, walk_guard,
                                    overlay_guard, read_guard, backend_guard,
-                                   resume_guard],
+                                   resume_guard, tenant_guard],
                          ids=["dispatch", "walk", "overlay", "read",
-                              "backend", "resume"])
+                              "backend", "resume", "tenant"])
 def test_sim_guard_runs_are_byte_identical_and_green(guard):
     first = guard.build_report("sim")
     second = guard.build_report("sim")

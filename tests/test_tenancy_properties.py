@@ -1,0 +1,467 @@
+"""PR 10 property tests: tenant-scoped blast-radius isolation.
+
+The core equivalence: a tenant interleaved with N-1 neighbours on ONE
+shared engine must be indistinguishable — final backend state under its
+prefix, every read-class answer, its ledger signature — from the same op
+stream run SOLO on a private engine.  Checked clean, under knob sweeps
+(fusion/overlay/prefetch/readahead off), and under deterministic fault
+plans confined to one tenant's prefix.
+
+Plus the mechanism units: namespace confinement (PermissionError outside
+the prefix, ancestors allowed only for scaffolding kinds), synchronous
+TenantQuota EDQUOT/ENOSPC with rollback refunds, tenant-scoped poison
+under ``abort_on_error``, weighted fair dispatch bias, saturation
+admission without deadlock, prefix-scoped overlay clears, and the
+kill -> resume -> rollback convergence chain on a live shared engine.
+
+A seeded ``random.Random`` drives the streams (hypothesis is optional in
+this environment and not required here): same seed, same stream.
+"""
+import errno
+import random
+import threading
+
+import pytest
+
+from repro.core import (CannyFS, EnginePoisonedError, FaultInjectingBackend,
+                        FaultPlan, FaultRule, InMemoryBackend, LatencyBackend,
+                        LatencyModel, NamespaceOverlay, ProcessKilled,
+                        SimClock, TenantQuota, VirtualClock, run_transaction)
+
+from benchmarks.workloads import run_tenant_jobs, tenant_state_digest
+
+N_TENANTS = 3
+
+
+def _prefix(i):
+    return f"t{i}"
+
+
+def _gen_stream(seed: int, prefix: str, n_ops: int = 60):
+    """One tenant's deterministic op stream (single-writer model inside
+    its own prefix): mixed mutations and read-class observations."""
+    rng = random.Random(seed)
+    dirs = [f"{prefix}/d{i}" for i in range(3)]
+    files = [f"{d}/f{j}" for d in dirs for j in range(4)]
+    ops = [("makedirs", d, None) for d in dirs]
+    live = set()
+    for k in range(n_ops):
+        kind = rng.choice(("write", "write", "write", "read", "stat",
+                           "readdir", "unlink", "rename", "chmod"))
+        if kind == "write":
+            p = rng.choice(files)
+            ops.append(("write", p, bytes([rng.randrange(256)]) * rng.randrange(1, 64)))
+            live.add(p)
+        elif kind == "read" and live:
+            ops.append(("read", rng.choice(sorted(live)), None))
+        elif kind == "stat" and live:
+            ops.append(("stat", rng.choice(sorted(live)), None))
+        elif kind == "readdir":
+            ops.append(("readdir", rng.choice(dirs), None))
+        elif kind == "unlink" and live:
+            p = rng.choice(sorted(live))
+            ops.append(("unlink", p, None))
+            live.discard(p)
+        elif kind == "rename" and live:
+            src = rng.choice(sorted(live))
+            dst = rng.choice(files)
+            if dst not in live and dst != src:
+                ops.append(("rename", src, dst))
+                live.discard(src)
+                live.add(dst)
+        elif kind == "chmod" and live:
+            ops.append(("chmod", rng.choice(sorted(live)), 0o640))
+    return ops
+
+
+def _ledger_signature(fs, name):
+    return sorted((e.kind, e.paths, type(e.error).__name__)
+                  for e in fs.ledger.entries_for_tenant(name))
+
+
+def _stack(plan=None, kill_scope=None, **fs_kw):
+    inner = InMemoryBackend()
+    backend = LatencyBackend(
+        inner, LatencyModel(meta_ms=0.2, data_ms=0.2, jitter_sigma=0.0,
+                            seed=3), clock=VirtualClock())
+    if plan is not None:
+        backend = FaultInjectingBackend(backend, plan,
+                                        kill_scope=kill_scope)
+    fs = CannyFS(backend, max_inflight=2000, workers=8, echo_errors=False,
+                 **fs_kw)
+    return fs, inner
+
+
+def _apply_collect(view, ops):
+    observed = []
+    gen = _apply_obs(view, ops, observed)
+    for _ in gen:
+        pass
+    return observed
+
+
+def _apply_obs(view, ops, observed):
+    """_apply with an external observations sink (shared by the
+    interleaved and solo drivers so the comparison is literal)."""
+    for step, obs in _apply_with_obs(view, ops):
+        if obs is not None:
+            observed.append(obs)
+        yield
+
+
+def _apply_with_obs(view, ops):
+    for kind, a, b in ops:
+        obs = None
+        if kind == "makedirs":
+            view.makedirs(a)
+        elif kind == "write":
+            view.write_file(a, b)
+        elif kind == "read":
+            try:
+                obs = ("read", a, view.read_file(a))
+            except OSError as e:
+                obs = ("read", a, e.errno)
+        elif kind == "stat":
+            try:
+                st = view.stat(a)
+                obs = ("stat", a, st.size, st.is_dir)
+            except OSError as e:
+                obs = ("stat", a, e.errno)
+        elif kind == "readdir":
+            try:
+                obs = ("readdir", a, tuple(sorted(view.readdir(a))))
+            except OSError as e:
+                obs = ("readdir", a, e.errno)
+        elif kind == "unlink":
+            try:
+                view.unlink(a)
+            except OSError:
+                pass
+        elif kind == "rename":
+            try:
+                view.rename(a, b)
+            except OSError:
+                pass
+        elif kind == "chmod":
+            view.chmod(a, b)
+        yield None, obs
+
+
+KNOB_SWEEP = [
+    {},
+    {"fusion": False},
+    {"overlay": False},
+    {"prefetch": False, "readahead": False},
+]
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+@pytest.mark.parametrize("fs_kw", KNOB_SWEEP,
+                         ids=["default", "nofusion", "nooverlay", "nospec"])
+def test_interleaved_matches_solo_clean(seed, fs_kw):
+    """Round-robin interleaving N tenants on one engine leaves every
+    tenant's prefix state, read answers, and (empty) ledger identical to
+    its solo run — across optimizer knob settings."""
+    fs, inner = _stack(**fs_kw)
+    tenants = [fs.tenant(_prefix(i), _prefix(i)) for i in range(N_TENANTS)]
+    observed = [[] for _ in range(N_TENANTS)]
+    gens = [_apply_obs(tenants[i], _gen_stream(seed + i, _prefix(i)),
+                       observed[i])
+            for i in range(N_TENANTS)]
+    live = list(range(N_TENANTS))
+    while live:
+        for i in list(live):
+            try:
+                next(gens[i])
+            except StopIteration:
+                live.remove(i)
+    fs.close()
+    shared_sigs = [_ledger_signature(fs, _prefix(i))
+                   for i in range(N_TENANTS)]
+    shared_digests = [tenant_state_digest(inner, _prefix(i))
+                      for i in range(N_TENANTS)]
+    for i in range(N_TENANTS):
+        sfs, sinner = _stack(**fs_kw)
+        st = sfs.tenant(_prefix(i), _prefix(i))
+        solo_obs = _apply_collect(st, _gen_stream(seed + i, _prefix(i)))
+        sfs.close()
+        assert shared_sigs[i] == _ledger_signature(sfs, _prefix(i)) == []
+        assert shared_digests[i] == tenant_state_digest(sinner, _prefix(i))
+        assert observed[i] == solo_obs
+
+
+def test_interleaved_matches_solo_under_confined_faults():
+    """A deterministic fault plan confined to t0's prefix: t0's ledger
+    signature matches its own solo run under the SAME plan; neighbours
+    match clean solos with empty ledgers."""
+    def plan():
+        # path-targeted, probability 1.0, no count windows: the matched
+        # set is a pure function of the stream, immune to interleaving
+        return FaultPlan([FaultRule(error="EIO", ops=("write",),
+                                    path_glob="t0/d1/*",
+                                    probability=1.0)], seed=5)
+
+    fs, inner = _stack(plan=plan())
+    tenants = [fs.tenant(_prefix(i), _prefix(i)) for i in range(N_TENANTS)]
+    observed = [[] for _ in range(N_TENANTS)]
+    gens = [_apply_obs(tenants[i], _gen_stream(20 + i, _prefix(i)),
+                       observed[i])
+            for i in range(N_TENANTS)]
+    live = list(range(N_TENANTS))
+    while live:
+        for i in list(live):
+            try:
+                next(gens[i])
+            except StopIteration:
+                live.remove(i)
+    fs.close()
+    t0_sig = _ledger_signature(fs, "t0")
+    assert t0_sig, "the confined plan must actually fire"
+    t0_digest = tenant_state_digest(inner, "t0")
+    # t0 vs solo under the same storm
+    sfs, sinner = _stack(plan=plan())
+    st = sfs.tenant("t0", "t0")
+    _apply_collect(st, _gen_stream(20, "t0"))
+    sfs.close()
+    assert t0_sig == _ledger_signature(sfs, "t0")
+    assert t0_digest == tenant_state_digest(sinner, "t0")
+    # neighbours vs clean solos
+    for i in range(1, N_TENANTS):
+        assert _ledger_signature(fs, _prefix(i)) == []
+        nfs, ninner = _stack()
+        nt = nfs.tenant(_prefix(i), _prefix(i))
+        solo_obs = _apply_collect(nt, _gen_stream(20 + i, _prefix(i)))
+        nfs.close()
+        assert (tenant_state_digest(inner, _prefix(i))
+                == tenant_state_digest(ninner, _prefix(i)))
+        assert observed[i] == solo_obs
+
+
+def test_confinement_outside_prefix_is_eacces():
+    fs, _ = _stack()
+    t = fs.tenant("a", "ta")
+    t.makedirs("ta/x")
+    t.write_file("ta/x/f", b"ok")
+    for call in (lambda: t.write_file("tb/f", b"no"),
+                 lambda: t.mkdir("tb"),
+                 lambda: t.unlink("tb/f"),
+                 lambda: t.rename("ta/x/f", "tb/f"),
+                 lambda: t.rename("tb/f", "ta/x/f"),
+                 lambda: t.read_file("tb/f"),
+                 lambda: t.rmtree("tb")):
+        with pytest.raises(PermissionError):
+            call()
+    # ancestors: stat/readdir observation is allowed (scaffolding view),
+    # mutation is not
+    assert t.stat("").is_dir
+    assert "ta" in t.readdir("")
+    fs.close()
+
+
+def test_quota_bytes_inodes_and_rollback_refund():
+    fs, _ = _stack()
+    q = TenantQuota(budget_bytes=1024, max_inodes=8)
+    t = fs.tenant("q", "tq", quota=q)
+    t.makedirs("tq/d")
+    t.write_file("tq/d/a", b"x" * 512)
+    t.write_file("tq/d/b", b"y" * 512)   # exactly at budget
+    with pytest.raises(OSError) as ei:
+        t.write_file("tq/d/c", b"z")
+    assert ei.value.errno == errno.EDQUOT
+    # idempotent high-water: rewriting a SMALLER payload charges nothing
+    t.write_file("tq/d/a", b"x" * 100)
+    # release on unlink opens headroom
+    t.unlink("tq/d/b")
+    t.write_file("tq/d/c", b"z" * 256)
+    t.drain()
+    u = q.usage()
+    assert u["bytes_used"] <= 1024 and u["edquot_count"] == 1
+    # inode budget (dir + files): fill to the cap, then ENOSPC
+    for i in range(8 - q.inodes_used()):
+        t.write_file(f"tq/d/i{i}", b".")
+    with pytest.raises(OSError) as ei:
+        t.write_file("tq/d/overflow", b".")
+    assert ei.value.errno == errno.ENOSPC
+    # rollback refunds the window's creations
+    used_before = q.usage()["bytes_used"]
+    inodes_before = q.inodes_used()
+    try:
+        def body(v):
+            v.write_file("tq/d/txn_f", b"w" * 64)
+            raise RuntimeError("abort the window")
+        run_transaction(t, body, name="refund", retries=0)
+    except Exception:
+        pass
+    t.drain()
+    assert q.usage()["bytes_used"] == used_before
+    assert q.inodes_used() == inodes_before
+    fs.close()
+
+
+def test_tenant_scoped_poison_spares_neighbours():
+    """abort_on_error + a fault confined to t0: t0's lane poisons and
+    fails fast; t1 never notices; t0's rollback lifts only its own gate."""
+    plan = FaultPlan([FaultRule(error="EIO", ops=("write",),
+                                path_glob="t0/poison*", probability=1.0)],
+                     seed=1)
+    fs, inner = _stack(plan=plan, abort_on_error=True)
+    t0 = fs.tenant("t0", "t0")
+    t1 = fs.tenant("t1", "t1")
+    t0.mkdir("t0")
+    t1.mkdir("t1")
+    t0.write_file("t0/poisoned", b"boom")
+    fs.engine.barrier("t0/poisoned", tenant=t0._tenant_state)
+    assert t0.poisoned
+    with pytest.raises(EnginePoisonedError):
+        t0.write_file("t0/after", b"rejected")
+    # the neighbour's lane stays open throughout
+    t1.write_file("t1/fine", b"ok")
+    t1.drain()
+    assert inner.snapshot()["files"]["t1/fine"] == b"ok"
+    assert not t1.poisoned
+    # recovery is tenant-scoped too
+    t0._reset_poison()
+    assert not t0.poisoned
+    t0.write_file("t0/recovered", b"ok")
+    fs.drain()
+    assert inner.snapshot()["files"]["t0/recovered"] == b"ok"
+    assert _ledger_signature(fs, "t1") == []
+    fs.close()
+
+
+def test_dwrr_weight_biases_makespan():
+    """Equal jobs, weights 4:1 on a sim engine: the heavy tenant must
+    not finish after the light one (deficit credit replenishes 4x
+    faster), and both tenants spend credits through the DWRR lanes."""
+    clock = SimClock()
+    inner = InMemoryBackend()
+    backend = LatencyBackend(
+        inner, LatencyModel(meta_ms=1.0, data_ms=1.0, jitter_sigma=0.0,
+                            server_slots=4, seed=2), clock=clock)
+    fs = CannyFS(backend, max_inflight=64, workers=4, echo_errors=False)
+    heavy = fs.tenant("heavy", "heavy", weight=4.0)
+    light = fs.tenant("light", "light", weight=1.0)
+
+    def job(t, prefix):
+        t.mkdir(prefix)
+        yield
+        for i in range(60):
+            t.write_file(f"{prefix}/f{i:03d}", b"x" * 256)
+            yield
+
+    outcomes = run_tenant_jobs([("heavy", job(heavy, "heavy")),
+                                ("light", job(light, "light"))])
+    fs.close()
+    assert not any(outcomes.values())
+    st = fs.stats
+    assert st.tenants["heavy"].credits_spent > 0
+    assert st.tenants["light"].credits_spent > 0
+    assert (st.tenants["heavy"].last_complete_s
+            <= st.tenants["light"].last_complete_s)
+
+
+def test_saturation_admission_no_deadlock_two_threads():
+    """Two tenants flooding a tiny in-flight budget from real threads:
+    per-tenant backpressure must never mutually deadlock, every op must
+    land, and both tenants' books must balance."""
+    inner = InMemoryBackend()
+    backend = LatencyBackend(
+        inner, LatencyModel(meta_ms=0.05, data_ms=0.05, jitter_sigma=0.0,
+                            seed=4), clock=VirtualClock())
+    fs = CannyFS(backend, max_inflight=8, workers=4, echo_errors=False)
+    tenants = [fs.tenant(_prefix(i), _prefix(i)) for i in range(2)]
+    n_files = 120
+    errs = []
+
+    def flood(i):
+        try:
+            t = tenants[i]
+            t.mkdir(_prefix(i))
+            for k in range(n_files):
+                t.write_file(f"{_prefix(i)}/f{k:03d}", b"z" * 64)
+        except Exception as e:            # noqa: BLE001
+            errs.append((i, e))
+
+    threads = [threading.Thread(target=flood, args=(i,)) for i in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=60)
+        assert not th.is_alive(), "tenant backpressure deadlocked"
+    fs.close()
+    assert errs == []
+    for i in range(2):
+        assert len([p for p in inner.snapshot()["files"]
+                    if p.startswith(_prefix(i) + "/")]) == n_files
+        assert _ledger_signature(fs, _prefix(i)) == []
+
+
+def test_overlay_clear_under_is_prefix_scoped():
+    ov = NamespaceOverlay()
+    for p in ("a", "a/x", "b", "b/y"):
+        ov.on_op("mkdir", (p,))
+        ov.promote(p)
+    ov.on_op("create", ("a/x/f",))
+    ov.on_op("create", ("b/y/g",))
+    ov.clear_under("a")
+    # b's claims survive; a's are gone (fall back to the backend)
+    assert ov.lookup("b/y/g") is not None
+    assert ov.lookup("a/x/f") is None
+    ov.clear_under("")   # empty prefix == full clear
+    assert ov.lookup("b/y/g") is None
+
+
+def test_kill_resume_rollback_converges_on_live_engine():
+    """The PR 10 chain: a scoped kill preempts t0 mid-window, the tenant
+    resumes from its own spill on the LIVE shared engine, a later
+    rollback must invalidate the spill's durable claims (regression for
+    the rollback-reads-global-spill bug), and the retried window
+    converges to the solo reference while t1 stays byte-identical."""
+    files = [f"t0/d/f{i:02d}" for i in range(12)]
+
+    def body(v):
+        v.makedirs("t0/d")
+        for k, p in enumerate(files):
+            v.write_file(p, bytes([65 + k]) * 32)
+            v.chmod(p, 0o644)
+
+    # solo reference
+    sfs, sinner = _stack()
+    st = sfs.tenant("t0", "t0")
+    run_transaction(st, body, name="solo", retries=0)
+    sfs.close()
+    solo_digest = tenant_state_digest(sinner, "t0")
+
+    # storm: kill after 8 matched calls, then one EIO to force a
+    # post-resume rollback
+    plan = FaultPlan([
+        FaultRule(outcome="kill", path_glob="t0/*", probability=1.0,
+                  after_count=8, max_failures=1),
+        FaultRule(error="EIO", ops=("write",), path_glob="t0/d/f05*",
+                  probability=1.0, after_count=1, max_failures=1),
+    ], seed=9)
+    fs, inner = _stack(plan=plan, kill_scope="t0/*")
+    t0 = fs.tenant("t0", "t0")
+    t1 = fs.tenant("t1", "t1")
+    t0.enable_spill(".spill-t0")
+    t1.mkdir("t1")
+    t1.write_file("t1/neighbour", b"untouched")
+    backend = fs.backend
+    kills = 0
+    while True:
+        try:
+            run_transaction(t0, body, name="t0", retries=4)
+            break
+        except ProcessKilled:
+            kills += 1
+            assert kills <= 3, "kill->resume loop failed to converge"
+            backend.revive()
+            rep = t0.resume(".spill-t0")
+            assert rep["resumable"]
+    fs.drain()
+    fs.close()
+    assert kills >= 1, "the scoped kill must actually fire"
+    assert fs.stats.tenants["t0"].resumes == kills
+    assert tenant_state_digest(inner, "t0") == solo_digest
+    assert inner.snapshot()["files"]["t1/neighbour"] == b"untouched"
+    assert _ledger_signature(fs, "t1") == []
